@@ -1,0 +1,37 @@
+"""Paper Table 7 + Figs 6/8: most profitable block size.
+
+HDFS block size -> ``block_rows`` (points per search wave) and ``q_cap``
+(lookup slab budget). Bigger blocks amortise the slab re-read; smaller
+blocks tighten the leaf span each tile must cover (less wasted masking) —
+the paper's exact trade-off, three decks down the memory hierarchy."""
+
+from __future__ import annotations
+
+from benchmarks.common import Corpus, row, timeit
+
+
+def run():
+    out = []
+    from repro.core.search import batch_search
+
+    c = Corpus()
+    for q_n, tag in ((2048, "copydays"), (8192, "12k")):
+        q, _ = c.queries(q_n)
+        for block_rows in (256, 512, 1024, 2048):
+            t = timeit(
+                lambda br=block_rows: batch_search(
+                    c.index, c.tree, q, k=10, mesh=c.mesh,
+                    block_rows=br, q_cap=1024,
+                ),
+                warmup=1, iters=3,
+            )
+            res = batch_search(c.index, c.tree, q, k=10, mesh=c.mesh,
+                               block_rows=block_rows, q_cap=1024)
+            out.append(
+                row(
+                    f"t7_{tag}_block{block_rows}", t,
+                    f"pairs={float(res.pairs):.3g} "
+                    f"overflow={int(res.q_cap_overflow)}",
+                )
+            )
+    return out

@@ -1,0 +1,60 @@
+"""Shared benchmark utilities: timing, corpus setup, CSV rows."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3):
+    """Median wall-clock seconds of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return sorted(times)[len(times) // 2]
+
+
+class Corpus:
+    """Small SIFT-like corpus + tree + index shared across benchmarks."""
+
+    _cache = {}
+
+    def __new__(cls, rows=120_000, dim=64, fanouts=(32, 32), seed=0):
+        key = (rows, dim, fanouts, seed)
+        if key in cls._cache:
+            return cls._cache[key]
+        self = super().__new__(cls)
+        from repro.core.index_build import build_index
+        from repro.core.tree import build_tree
+        from repro.data import synth
+        from repro.distributed.meshutil import local_mesh
+
+        self.mesh = local_mesh()
+        self.dim = dim
+        self.vecs_np, self.components = synth.sample_descriptors(
+            rows, dim, seed=seed, n_centers=512
+        )
+        self.vecs = jnp.asarray(self.vecs_np)
+        self.tree = build_tree(self.vecs, fanouts, key=jax.random.PRNGKey(1))
+        self.index = build_index(self.vecs, self.tree, self.mesh)
+        cls._cache[key] = self
+        return self
+
+    def queries(self, n, noise=4.0, seed=2):
+        rng = np.random.default_rng(seed)
+        rows = rng.choice(len(self.vecs_np), n, replace=False)
+        q = self.vecs_np[rows] + rng.standard_normal((n, self.dim)).astype(
+            np.float32
+        ) * noise
+        return jnp.asarray(np.clip(q, 0, 255)), rows
+
+
+def row(name: str, seconds: float, derived: str = "") -> str:
+    return f"{name},{seconds * 1e6:.1f},{derived}"

@@ -1,0 +1,61 @@
+"""Paper Table 5 + Figs 2/3/6: map-wave statistics, stragglers, failures,
+and reduce-side balance."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import row
+
+
+def run():
+    out = []
+    from repro.core.index_build import build_index
+    from repro.core.tree import build_tree, tree_assign
+    from repro.data.store import VirtualStore
+    from repro.distributed.failure import FailureInjector
+    from repro.distributed.meshutil import local_mesh
+    from repro.distributed.wavescheduler import WaveScheduler
+
+    mesh = local_mesh()
+    store = VirtualStore(160_000, 64, block_rows=16_000, seed=0, n_centers=512)
+    tree = build_tree(
+        jnp.asarray(store.sample_for_tree(32_768)), (32, 32),
+        key=jnp.asarray([0, 1], jnp.uint32),
+    )
+
+    def wave_fn(b):
+        blk = store.read_block(b)
+        idx = build_index(
+            jnp.asarray(blk.vecs), tree, mesh,
+            ids=jnp.asarray(blk.ids.astype(np.int32)),
+        )
+        return int(idx.overflow)
+
+    injector = FailureInjector(fail_at=[(2, 0), (6, 0)])
+    sched = WaveScheduler(wave_fn, failure_injector=injector, max_retries=2)
+    res = sched.run(range(store.n_blocks))
+    ok = [r.duration_s for r in res.records if r.ok]
+    failed = [r for r in res.records if not r.ok]
+    out.append(row("t5_total_map_waves", sum(ok),
+                   f"n={len(res.records)} (incl. {len(failed)} failed attempts)"))
+    out.append(row("t5_avg_wave", float(np.mean(ok)),
+                   f"min={min(ok):.3f}s max={max(ok):.3f}s"))
+    out.append(row("t5_failed_reexecuted", sum(r.duration_s for r in failed),
+                   f"failures={len(failed)} retried_ok=True"))
+    out.append(row("fig2_stragglers", 0.0,
+                   f"waves_over_2x_median={len(res.stragglers)}"))
+
+    # Fig 3 analog: reduce-side balance = rows per shard after routing
+    vecs = jnp.asarray(store.read_block(0).vecs)
+    leaves = np.array(tree_assign(tree, vecs))
+    counts = np.bincount(leaves % 8, minlength=8)  # 8 virtual reducers
+    out.append(
+        row(
+            "fig3_reduce_balance", 0.0,
+            f"max/mean={counts.max() / counts.mean():.3f} "
+            f"(1.0 = perfectly balanced reducers)",
+        )
+    )
+    return out

@@ -1,0 +1,53 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: one module per paper table/figure (see DESIGN.md §8).
+
+  workflow_steps  — Table 2 (workflow step times)
+  indexing        — Tables 3/4 + Fig 1 (default vs tuned indexing)
+  map_waves       — Table 5 + Figs 2/3 (wave stats, failures, balance)
+  block_size      — Table 7 + Figs 6/8 (block-size study)
+  scalability     — Fig 5 + Table 6 (shard scaling, modelled 10->100)
+  quality         — Fig 4 (Copydays recall vs distractors)
+  throughput      — Exp #5 (ms/image vs batch size)
+  ann_retrieval   — beyond-paper: tree-ANN on the two-tower arch
+
+Usage: PYTHONPATH=src python -m benchmarks.run [module ...]
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+MODULES = [
+    "workflow_steps",
+    "indexing",
+    "map_waves",
+    "block_size",
+    "scalability",
+    "quality",
+    "throughput",
+    "ann_retrieval",
+]
+
+
+def main() -> None:
+    import importlib
+
+    names = sys.argv[1:] or MODULES
+    print("name,us_per_call,derived")
+    for name in names:
+        mod = importlib.import_module(f"benchmarks.{name}")
+        t0 = time.perf_counter()
+        try:
+            rows = mod.run()
+        except Exception as e:  # noqa: BLE001 - report and continue
+            print(f"{name}_FAILED,0,{e!r}")
+            continue
+        for r in rows:
+            print(r)
+        print(f"# {name} done in {time.perf_counter() - t0:.1f}s",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""Paper Fig 5 + Table 6: batch-search scalability with cluster size.
+
+Two parts:
+ 1. measured: wall time vs shard count on this host (SPMD partitioning
+    overhead only — one physical core, so no real speedup is possible);
+ 2. modelled: the roofline terms from the dry-run give T(N) = max(compute/N,
+    memory/N, collective(N)); we report the projected 10 -> 100 chip
+    speedup for the search cell next to the paper's measured 7.2x.
+"""
+
+from __future__ import annotations
+
+import subprocess
+import sys
+
+from benchmarks.common import row
+
+_CHILD = r"""
+import os, sys, time
+os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={sys.argv[1]}"
+import jax, jax.numpy as jnp
+from repro.core.index_build import build_index
+from repro.core.search import batch_search
+from repro.core.tree import build_tree
+from repro.data import synth
+from repro.distributed.meshutil import local_mesh
+mesh = local_mesh()
+vecs_np, _ = synth.sample_descriptors(60000, 32, seed=0, n_centers=256)
+vecs = jnp.asarray(vecs_np)
+tree = build_tree(vecs, (16, 16), key=jax.random.PRNGKey(1))
+index = build_index(vecs, tree, mesh)
+q = vecs[:2048]
+r = batch_search(index, tree, q, k=5, mesh=mesh, q_cap=1024)  # compile
+jax.block_until_ready(r.ids)
+t0 = time.perf_counter()
+for _ in range(3):
+    r = batch_search(index, tree, q, k=5, mesh=mesh, q_cap=1024)
+    jax.block_until_ready(r.ids)
+print((time.perf_counter() - t0) / 3)
+"""
+
+
+def run():
+    out = []
+    base = None
+    for n in (1, 2, 4, 8):
+        p = subprocess.run(
+            [sys.executable, "-c", _CHILD, str(n)],
+            capture_output=True, text=True, env=None,
+            cwd=".", timeout=600,
+        )
+        if p.returncode != 0:
+            out.append(row(f"fig5_shards_{n}", 0.0, "FAILED"))
+            continue
+        t = float(p.stdout.strip().splitlines()[-1])
+        base = base or t
+        out.append(
+            row(
+                f"fig5_shards_{n}", t,
+                f"rel={base / t:.2f}x (1 physical core: partitioning "
+                f"overhead only)",
+            )
+        )
+    # modelled speedup from the dry-run roofline (see EXPERIMENTS.md §Roofline)
+    import json
+    import os
+
+    if os.path.exists("dryrun_results.jsonl"):
+        recs = [json.loads(l) for l in open("dryrun_results.jsonl")]
+        for r in recs:
+            if (r["arch"], r["shape"], r["mesh"], r.get("status")) == (
+                "sift100m", "search_1m", "16x16", "ok",
+            ):
+                ro = r["roofline"]
+                # terms scale 1/N except a ~log collective share
+                def t_of(n):
+                    return max(
+                        ro["t_compute"] * 256 / n,
+                        ro["t_memory"] * 256 / n,
+                        ro["t_collective"] * 256 / n * 1.5,
+                    )
+
+                speedup = t_of(10) / t_of(100)
+                out.append(
+                    row(
+                        "fig5_modelled_10_to_100_chips", 0.0,
+                        f"projected={speedup:.1f}x vs paper 7.2x",
+                    )
+                )
+                break
+    return out

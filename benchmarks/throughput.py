@@ -1,0 +1,32 @@
+"""Paper Exp #5: batch-search throughput (ms per image) vs batch size.
+
+The paper: 12k-image batches sustain ~210 ms/image over 100M images, >2x
+better than small Copydays batches (~460 ms/image) — big batches amortise
+the broadcast lookup table. Same protocol here, scaled."""
+
+from __future__ import annotations
+
+from benchmarks.common import Corpus, row, timeit
+
+
+def run():
+    out = []
+    from repro.core.search import batch_search
+
+    c = Corpus()
+    desc_per_image = 24
+    for n_images, tag in ((64, "copydays_batch"), (512, "12k_batch")):
+        q, _ = c.queries(n_images * desc_per_image)
+        t = timeit(
+            lambda q=q: batch_search(c.index, c.tree, q, k=10, mesh=c.mesh,
+                                     q_cap=1024),
+            warmup=1, iters=3,
+        )
+        out.append(
+            row(
+                f"exp5_{tag}_{n_images}img", t,
+                f"ms_per_image={t / n_images * 1e3:.2f} "
+                f"(paper: 460 small / 210 large)",
+            )
+        )
+    return out

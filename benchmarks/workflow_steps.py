@@ -1,0 +1,65 @@
+"""Paper Table 2: time per workflow step (deploy/transfer/index/lookup/
+search/retrieve), scaled to the container."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Corpus, row, timeit
+
+
+def run():
+    out = []
+    from repro.core.index_build import build_index
+    from repro.core.lookup import build_lookup
+    from repro.core.search import batch_search
+    from repro.core.tree import build_tree
+    from repro.data import synth
+    from repro.distributed.meshutil import local_mesh
+
+    mesh = local_mesh()
+    rows, dim = 120_000, 64
+    t0 = time.perf_counter()
+    vecs_np, _ = synth.sample_descriptors(rows, dim, seed=0, n_centers=512)
+    out.append(row("t2_generate_corpus", time.perf_counter() - t0,
+                   f"rows={rows}"))
+
+    t0 = time.perf_counter()
+    vecs = jax.device_put(jnp.asarray(vecs_np))
+    jax.block_until_ready(vecs)
+    out.append(row("t2_transfer_to_devices", time.perf_counter() - t0,
+                   "HDFS-upload analog"))
+
+    t0 = time.perf_counter()
+    tree = build_tree(vecs, (32, 32), key=jax.random.PRNGKey(1))
+    jax.block_until_ready(tree.levels[-1])
+    out.append(row("t2_tree_creation", time.perf_counter() - t0,
+                   f"leaves={tree.n_leaves}"))
+
+    t0 = time.perf_counter()
+    index = build_index(vecs, tree, mesh)
+    jax.block_until_ready(index.vecs)
+    out.append(row("t2_index_creation", time.perf_counter() - t0,
+                   f"overflow={int(index.overflow)}"))
+
+    c = Corpus()
+    q, _ = c.queries(4096)
+    t0 = time.perf_counter()
+    lk = jax.jit(build_lookup)(c.tree, q)
+    jax.block_until_ready(lk.vecs)
+    out.append(row("t2_lookup_table_creation", time.perf_counter() - t0,
+                   f"queries={q.shape[0]}"))
+
+    t0 = time.perf_counter()
+    res = batch_search(c.index, c.tree, q, k=10, mesh=c.mesh)
+    jax.block_until_ready(res.ids)
+    out.append(row("t2_searching", time.perf_counter() - t0,
+                   f"pairs={float(res.pairs):.3g}"))
+
+    t0 = time.perf_counter()
+    _ = jax.device_get((res.ids, res.dists))
+    out.append(row("t2_retrieve_results", time.perf_counter() - t0, ""))
+    return out

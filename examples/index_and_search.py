@@ -1,0 +1,51 @@
+"""End-to-end driver: streaming index job + batched search serving.
+
+This is the paper's full production pipeline (Table 2): stream a descriptor
+store through the wave-scheduled index job (with an injected failure to
+show retry), then serve query batches and report ms/image throughput — the
+paper's 210 ms/image headline protocol.
+
+Run:  PYTHONPATH=src python examples/index_and_search.py
+"""
+
+import sys
+
+from repro.launch import index as index_job
+from repro.launch import serve
+
+
+def main():
+    print("=" * 70)
+    print("PHASE 1 — streaming index job (with injected failures + retry)")
+    print("=" * 70)
+    rc = index_job.main(
+        [
+            "--rows", "120000",
+            "--dim", "48",
+            "--block-rows", "30000",
+            "--fanout", "24", "24",
+            "--inject-failures",
+        ]
+    )
+    assert rc == 0
+
+    print()
+    print("=" * 70)
+    print("PHASE 2 — batched search serving (throughput protocol, Exp #5)")
+    print("=" * 70)
+    rc = serve.main(
+        [
+            "--rows", "120000",
+            "--dim", "48",
+            "--images", "2000",
+            "--fanout", "24", "24",
+            "--batches", "2",
+            "--batch-images", "128",
+        ]
+    )
+    assert rc == 0
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

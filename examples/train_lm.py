@@ -1,0 +1,49 @@
+"""Train an LM from the arch zoo (reduced config) with checkpoint/resume.
+
+Demonstrates the training substrate: AdamW, warmup-cosine, microbatch
+accumulation, bf16 gradient compression with error feedback, and
+mid-run checkpoint + resume producing a continuous loss curve.
+
+Run:  PYTHONPATH=src python examples/train_lm.py
+"""
+
+import shutil
+
+from repro.launch import train
+
+
+def main():
+    ckpt = "/tmp/repro_example_ckpt"
+    shutil.rmtree(ckpt, ignore_errors=True)
+    print("=== phase 1: steps 0..30 (bf16-compressed grads, 2 microbatches)")
+    train.main(
+        [
+            "--arch", "internlm2-1.8b",
+            "--steps", "30",
+            "--batch", "8",
+            "--seq", "64",
+            "--microbatches", "2",
+            "--compress", "bf16",
+            "--ckpt-dir", ckpt,
+            "--checkpoint-every", "10",
+        ]
+    )
+    print("=== phase 2: simulated restart — resume from step 30, run to 60")
+    train.main(
+        [
+            "--arch", "internlm2-1.8b",
+            "--steps", "60",
+            "--batch", "8",
+            "--seq", "64",
+            "--microbatches", "2",
+            "--compress", "bf16",
+            "--ckpt-dir", ckpt,
+            "--checkpoint-every", "10",
+            "--resume",
+        ]
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

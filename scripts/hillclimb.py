@@ -1,0 +1,90 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf-loop driver: per-source breakdown of a dry-run cell's roofline.
+
+  PYTHONPATH=src python scripts/hillclimb.py --arch phi3.5-moe-42b-a6.6b \
+      --shape train_4k [--multi-pod] [--key wire|hbm|flops] [--variant NAME]
+
+Variants are registered in repro.configs.variants and apply a named
+beyond-baseline change to the cell (e.g. routed_moe, flash_attn).
+"""
+
+import argparse
+import sys
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--key", default=None, choices=[None, "hbm", "wire", "flops"])
+    ap.add_argument("--variant", default=None)
+    ap.add_argument("--top", type=int, default=14)
+    ap.add_argument("--out", default=None, help="append JSONL record")
+    args = ap.parse_args(argv)
+
+    import json
+    import time
+
+    import jax
+
+    from repro.configs import REGISTRY
+    from repro.launch import hlo_cost
+    from repro.launch import roofline as rl
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    if args.variant:
+        from repro.configs import variants
+
+        cell = variants.apply(args.variant, args.arch, args.shape)
+    else:
+        cell = REGISTRY[args.arch].cell(args.shape)
+    t0 = time.time()
+    lowered = cell.lower(mesh)
+    compiled = lowered.compile()
+    print(f"compiled in {time.time() - t0:.1f}s")
+    cost = hlo_cost.analyze_text(compiled.as_text())
+    t_c = cost.flops / rl.PEAK_FLOPS_BF16
+    t_m = cost.hbm_bytes / rl.HBM_BW
+    t_x = cost.wire_bytes / rl.ICI_LINK_BW
+    dom = max((("compute", t_c), ("memory", t_m), ("collective", t_x)),
+              key=lambda kv: kv[1])
+    print(
+        f"roofline: compute={t_c:.4f}s memory={t_m:.4f}s collective={t_x:.4f}s"
+        f"  dominant={dom[0]}"
+    )
+    mem = rl.memory_stats(compiled)
+    print("memory_analysis:", json.dumps(mem))
+    key = args.key or {"compute": "flops", "memory": "hbm", "collective": "wire"}[dom[0]]
+    print(f"top sources by {key}:")
+    for name, f, h, w in cost.top_sources(args.top, key=key):
+        print(f"  {name[:110]:<110s} flops={f:.3e} hbm={h:.3e} wire={w:.3e}")
+    if args.out:
+        rec = dict(
+            arch=args.arch, shape=args.shape,
+            mesh="2x16x16" if args.multi_pod else "16x16",
+            variant=args.variant or "baseline",
+            status="ok",
+            kind=cell.kind, model_flops=cell.model_flops,
+            n_devices=len(jax.devices()),
+            memory=mem,
+            roofline=dict(
+                flops=cost.flops, hbm_bytes=cost.hbm_bytes,
+                wire_bytes=cost.wire_bytes, t_compute=t_c, t_memory=t_m,
+                t_collective=t_x, dominant=dom[0],
+                collectives=dict(cost.wire_by_op, total=cost.wire_bytes),
+            ),
+            model_flops_per_device=cell.model_flops / len(jax.devices()),
+        )
+        if cost.flops:
+            rec["useful_flops_ratio"] = rec["model_flops_per_device"] / cost.flops
+        with open(args.out, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,72 @@
+"""Render EXPERIMENTS.md tables from dryrun_results.jsonl."""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def fmt_e(x):
+    return f"{x:.2e}" if x else "-"
+
+
+def main(path="dryrun_results.jsonl", mesh_filter=None):
+    recs = [json.loads(l) for l in open(path)]
+    # keep the latest record per (arch, shape, mesh)
+    latest = {}
+    for r in recs:
+        latest[(r["arch"], r["shape"], r["mesh"])] = r
+    rows = sorted(latest.values(), key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    if mesh_filter:
+        rows = [r for r in rows if r["mesh"] == mesh_filter]
+
+    print(
+        "| arch | shape | mesh | status | FLOPs/dev | HBM B/dev | wire B/dev |"
+        " t_comp | t_mem | t_coll | dominant | useful/HLO | arg+tmp mem |"
+    )
+    print("|" + "---|" * 13)
+    for r in rows:
+        if r["status"] != "ok":
+            reason = r.get("skip_reason", r.get("error", ""))[:60]
+            print(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['status']}"
+                f" | - | - | - | - | - | - | - | - | {reason} |"
+            )
+            continue
+        ro = r["roofline"]
+        mem = r.get("memory", {})
+        memtot = None
+        if "argument_bytes" in mem:
+            memtot = mem["argument_bytes"] + mem.get("temp_bytes", 0)
+        ratio = r.get("useful_flops_ratio")
+        print(
+            "| {arch} | {shape} | {mesh} | ok | {fl} | {hb} | {wb} | "
+            "{tc:.4f} | {tm:.4f} | {tx:.4f} | {dom} | {ur} | {mt} |".format(
+                arch=r["arch"],
+                shape=r["shape"],
+                mesh=r["mesh"],
+                fl=fmt_e(ro["flops"]),
+                hb=fmt_e(ro["hbm_bytes"]),
+                wb=fmt_e(ro["wire_bytes"]),
+                tc=ro["t_compute"],
+                tm=ro["t_memory"],
+                tx=ro["t_collective"],
+                dom=ro["dominant"],
+                ur=f"{ratio:.3f}" if ratio else "-",
+                mt=fmt_bytes(memtot),
+            )
+        )
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

@@ -1,0 +1,20 @@
+"""repro: scalable high-dimensional indexing & search (Shestakov & Moise 2015),
+re-architected for TPU pods in JAX.
+
+The paper's MapReduce workflow (distributed vocabulary-tree index creation +
+distributed batch k-NN search) is rebuilt as an SPMD dataflow:
+
+  * HDFS blocks        -> sharded global arrays (``data`` mesh axis)
+  * map waves          -> microbatched tiles per device shard
+  * shuffle by cluster -> capacity-padded counting sort + ``all_to_all``
+  * reduce             -> cluster-sorted index shards / log-tree k-NN merge
+
+Public API re-exports live here; see DESIGN.md for the system inventory.
+"""
+
+from repro.core.tree import VocabTree, build_tree, tree_assign  # noqa: F401
+from repro.core.index_build import build_index, DistributedIndex  # noqa: F401
+from repro.core.search import batch_search, SearchResult  # noqa: F401
+from repro.core.lookup import build_lookup, LookupTable  # noqa: F401
+
+__version__ = "1.0.0"

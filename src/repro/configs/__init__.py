@@ -1,0 +1,36 @@
+"""Architecture registry: ``--arch <id>`` resolution for launchers/tests.
+
+One module per assigned architecture (+ the paper's own ``sift100m``); each
+exposes ``ARCH: ArchDef``. Import order defines the canonical cell order of
+the roofline table.
+"""
+
+from repro.configs.base import ArchDef, Cell, get_arch, register  # noqa: F401
+
+from repro.configs import (  # noqa: F401  (import side effect: registration)
+    llama32_3b,
+    gemma3_4b,
+    internlm2_18b,
+    moonshot_v1_16b,
+    phi35_moe,
+    gin_tu,
+    dlrm_rm2,
+    din,
+    dien,
+    two_tower,
+    sift100m,
+)
+from repro.configs.base import REGISTRY  # noqa: F401  (after registration)
+
+ASSIGNED = [
+    "llama3.2-3b",
+    "gemma3-4b",
+    "internlm2-1.8b",
+    "moonshot-v1-16b-a3b",
+    "phi3.5-moe-42b-a6.6b",
+    "gin-tu",
+    "dlrm-rm2",
+    "din",
+    "dien",
+    "two-tower-retrieval",
+]

@@ -1,0 +1,99 @@
+"""Cell/ArchDef machinery shared by every architecture config.
+
+A *cell* = (architecture x input shape): everything the dry-run needs to
+``jit(fn, in_shardings=...).lower(*abstract_args).compile()`` on a given
+mesh, plus the MODEL_FLOPS bookkeeping the roofline analysis divides by.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.partitioning import DEFAULT_RULES, partition_spec
+
+REGISTRY: Dict[str, "ArchDef"] = {}
+
+
+def register(arch: "ArchDef") -> "ArchDef":
+    REGISTRY[arch.name] = arch
+    return arch
+
+
+def get_arch(name: str) -> "ArchDef":
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+def sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def sharding_for(mesh: Mesh, spec_or_axes, shape=None) -> NamedSharding:
+    """NamedSharding from either a PartitionSpec or logical axes (+shape)."""
+    if isinstance(spec_or_axes, P):
+        return NamedSharding(mesh, spec_or_axes)
+    return NamedSharding(
+        mesh, partition_spec(shape, spec_or_axes, mesh, DEFAULT_RULES)
+    )
+
+
+def logical_shardings(abstract_tree, axes_tree, mesh: Mesh):
+    """Map matching pytrees of ShapeDtypeStructs + logical-axes tuples."""
+    return jax.tree.map(
+        lambda a, ax: sharding_for(mesh, tuple(ax), a.shape),
+        abstract_tree,
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x
+        ),
+    )
+
+
+@dataclasses.dataclass
+class Cell:
+    """One (arch x shape) dry-run unit."""
+
+    arch: str
+    shape: str
+    kind: str  # train | prefill | decode | serve
+    make_fn: Callable[[Mesh], Callable]  # returns the function to jit
+    make_args: Callable[[Mesh], tuple]  # returns (args tuple of SDS-pytrees,
+    #                                              in_shardings tuple)
+    model_flops: float  # useful FLOPs per step (6ND train / 2ND inference)
+    donate: tuple = ()
+    skip: Optional[str] = None  # reason if this cell is a documented skip
+    static_argnums: tuple = ()
+
+    def lower(self, mesh: Mesh):
+        fn = self.make_fn(mesh)
+        args, shardings = self.make_args(mesh)
+        jitted = jax.jit(
+            fn, in_shardings=shardings, donate_argnums=self.donate
+        )
+        return jitted.lower(*args)
+
+
+@dataclasses.dataclass
+class ArchDef:
+    name: str
+    family: str  # lm | gnn | recsys | index
+    config: object
+    cells: Dict[str, Callable[[], Cell]]  # shape name -> cell factory
+    smoke: Callable[[], dict]  # tiny CPU end-to-end step; returns metrics
+    notes: str = ""
+
+    def cell(self, shape: str) -> Cell:
+        if shape not in self.cells:
+            raise KeyError(
+                f"arch {self.name} has no shape {shape!r}; has {sorted(self.cells)}"
+            )
+        return self.cells[shape]()
+
+    def all_cells(self):
+        return [self.cells[s]() for s in self.cells]

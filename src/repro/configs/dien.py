@@ -1,0 +1,63 @@
+"""dien [recsys] embed_dim=18 seq_len=100 gru_dim=108 mlp=200-80
+interaction=augru [arXiv:1809.03672; unverified]. DIN + GRU interest
+extraction + AUGRU interest evolution (two lax.scan passes)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ArchDef, register, sds
+from repro.configs.din import make_din_smoke
+from repro.configs.recsys_common import mlp_flops, standard_recsys_cells
+from repro.models import recsys
+
+CONFIG = recsys.DINConfig(
+    name="dien",
+    embed_dim=18,
+    seq_len=100,
+    vocab=10_000_000,
+    attn_mlp=(80, 40),
+    mlp=(200, 80),
+    gru_dim=108,
+)
+
+
+def batch_abs(b: int):
+    return {
+        "hist": sds((b, CONFIG.seq_len), jnp.int32),
+        "target": sds((b,), jnp.int32),
+        "label": sds((b,), jnp.float32),
+    }
+
+
+def serve_batch_abs(b: int):
+    a = batch_abs(b)
+    del a["label"]
+    return a
+
+
+def dien_flops_per_sample(cfg: recsys.DINConfig) -> float:
+    D, T, H = cfg.embed_dim, cfg.seq_len, cfg.gru_dim
+    gru = 2.0 * T * (3 * (D * H + H * H))
+    augru = 2.0 * T * (3 * (H * H + H * H))
+    att = T * mlp_flops((H + D, *cfg.attn_mlp, 1))
+    fin = mlp_flops((H + D, *cfg.mlp, 1))
+    return gru + augru + att + fin
+
+
+def _forward_serve(params, cfg, b):
+    return recsys.din_forward(params, cfg, b)
+
+
+ARCH = register(
+    ArchDef(
+        name="dien",
+        family="recsys",
+        config=CONFIG,
+        cells=standard_recsys_cells(
+            "dien", CONFIG, recsys.din_loss, _forward_serve, batch_abs,
+            dien_flops_per_sample(CONFIG), serve_batch_abs_fn=serve_batch_abs,
+        ),
+        smoke=make_din_smoke(16),
+    )
+)

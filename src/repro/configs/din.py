@@ -1,0 +1,90 @@
+"""din [recsys] embed_dim=18 seq_len=100 attn_mlp=80-40 mlp=200-80
+interaction=target-attn [arXiv:1706.06978; paper]. Item table 10M x 18,
+row-sharded over the model axis."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchDef, register, sds
+from repro.configs.recsys_common import mlp_flops, standard_recsys_cells
+from repro.models import recsys
+from repro.models.module import init_params
+from repro.train import AdamWConfig, make_train_step
+from repro.train.step import init_train_state
+
+CONFIG = recsys.DINConfig(
+    name="din",
+    embed_dim=18,
+    seq_len=100,
+    vocab=10_000_000,
+    attn_mlp=(80, 40),
+    mlp=(200, 80),
+)
+
+
+def batch_abs(b: int):
+    return {
+        "hist": sds((b, CONFIG.seq_len), jnp.int32),
+        "target": sds((b,), jnp.int32),
+        "label": sds((b,), jnp.float32),
+    }
+
+
+def serve_batch_abs(b: int):
+    a = batch_abs(b)
+    del a["label"]
+    return a
+
+
+def din_flops_per_sample(cfg: recsys.DINConfig) -> float:
+    D, T = cfg.embed_dim, cfg.seq_len
+    att = T * mlp_flops((4 * D, *cfg.attn_mlp, 1))
+    pool = 2.0 * T * D
+    fin = mlp_flops((3 * D, *cfg.mlp, 1))
+    return att + pool + fin
+
+
+def _forward_serve(params, cfg, b):
+    return recsys.din_forward(params, cfg, b)
+
+
+def make_din_smoke(gru_dim: int = 0):
+    def smoke() -> dict:
+        from repro.data.batches import din_batch
+
+        cfg = recsys.DINConfig(
+            name="din-smoke", vocab=2000, seq_len=20, gru_dim=gru_dim,
+            attn_mlp=(16, 8), mlp=(24, 12),
+        )
+        params = init_params(cfg.param_specs(), jax.random.PRNGKey(0))
+        opt = init_train_state(params)
+        step = jax.jit(
+            make_train_step(lambda p, b: recsys.din_loss(p, cfg, b), AdamWConfig())
+        )
+        b = jax.tree.map(jnp.asarray, din_batch(64, 20, 2000, seed=1))
+        params, opt, m = step(params, opt, b)
+        assert np.isfinite(float(m["loss"]))
+        s = jax.jit(lambda p, bb: recsys.din_forward(p, cfg, bb))(
+            params, {k: v for k, v in b.items() if k != "label"}
+        )
+        assert s.shape == (64,) and not bool(jnp.isnan(s).any())
+        return {"loss": float(m["loss"]), "params": cfg.param_count()}
+
+    return smoke
+
+
+ARCH = register(
+    ArchDef(
+        name="din",
+        family="recsys",
+        config=CONFIG,
+        cells=standard_recsys_cells(
+            "din", CONFIG, recsys.din_loss, _forward_serve, batch_abs,
+            din_flops_per_sample(CONFIG), serve_batch_abs_fn=serve_batch_abs,
+        ),
+        smoke=make_din_smoke(0),
+    )
+)

@@ -1,0 +1,88 @@
+"""dlrm-rm2 [recsys] n_dense=13 n_sparse=26 embed_dim=64
+bot_mlp=13-512-256-64 top_mlp=512-512-256-1 interaction=dot
+[arXiv:1906.00091; paper]. Tables: 26 x 1M rows x 64, row-sharded over the
+model axis (the routed-lookup substrate, DESIGN.md §5)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchDef, register, sds
+from repro.configs.recsys_common import mlp_flops, standard_recsys_cells
+from repro.models import recsys
+from repro.models.module import init_params
+from repro.train import AdamWConfig, make_train_step
+from repro.train.step import init_train_state
+
+CONFIG = recsys.DLRMConfig(
+    name="dlrm-rm2",
+    n_dense=13,
+    n_sparse=26,
+    embed_dim=64,
+    vocab_per_field=1_000_000,
+    bot_mlp=(512, 256, 64),
+    top_mlp=(512, 512, 256, 1),
+)
+
+
+def batch_abs(b: int):
+    return {
+        "dense": sds((b, CONFIG.n_dense), jnp.float32),
+        "sparse": sds((b, CONFIG.n_sparse), jnp.int32),
+        "label": sds((b,), jnp.float32),
+    }
+
+
+def serve_batch_abs(b: int):
+    a = batch_abs(b)
+    del a["label"]
+    return a
+
+
+_n_pairs = (CONFIG.n_sparse + 1) * CONFIG.n_sparse // 2
+FLOPS_PER_SAMPLE = (
+    mlp_flops((CONFIG.n_dense, *CONFIG.bot_mlp))
+    + 2.0 * (CONFIG.n_sparse + 1) ** 2 * CONFIG.embed_dim  # dot interaction
+    + mlp_flops((CONFIG.bot_mlp[-1] + _n_pairs, *CONFIG.top_mlp))
+)
+
+
+def _forward_serve(params, cfg, b):
+    return recsys.dlrm_forward(params, cfg, b)
+
+
+def dlrm_smoke() -> dict:
+    from repro.data.batches import dlrm_batch
+
+    cfg = recsys.DLRMConfig(name="dlrm-smoke", vocab_per_field=1000,
+                            embed_dim=16, bot_mlp=(32, 16),
+                            top_mlp=(32, 16, 1))
+    params = init_params(cfg.param_specs(), jax.random.PRNGKey(0))
+    opt = init_train_state(params)
+    step = jax.jit(
+        make_train_step(lambda p, b: recsys.dlrm_loss(p, cfg, b), AdamWConfig())
+    )
+    b = jax.tree.map(jnp.asarray, dlrm_batch(64, 13, 26, 1000, seed=1))
+    params, opt, m = step(params, opt, b)
+    assert np.isfinite(float(m["loss"]))
+    scores = jax.jit(lambda p, bb: recsys.dlrm_forward(p, cfg, bb))(
+        params, {k: v for k, v in b.items() if k != "label"}
+    )
+    assert scores.shape == (64,) and not bool(jnp.isnan(scores).any())
+    return {"loss": float(m["loss"]), "params": cfg.param_count()}
+
+
+ARCH = register(
+    ArchDef(
+        name="dlrm-rm2",
+        family="recsys",
+        config=CONFIG,
+        cells=standard_recsys_cells(
+            "dlrm-rm2", CONFIG, recsys.dlrm_loss, _forward_serve, batch_abs,
+            FLOPS_PER_SAMPLE, serve_batch_abs_fn=serve_batch_abs,
+        ),
+        smoke=dlrm_smoke,
+    )
+)

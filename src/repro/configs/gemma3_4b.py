@@ -1,0 +1,53 @@
+"""gemma3-4b [dense] 34L d_model=2560 8H (GQA kv=4) d_ff=10240
+vocab=262144, 5:1 local:global sliding window, 128k context
+[hf:google/gemma-3-4b-pt; unverified].
+
+The hybrid 5 local (window 1024) : 1 global pattern makes this the one
+assigned LM arch that runs long_500k (sub-quadratic family per shape spec).
+"""
+
+from repro.configs.base import ArchDef, register
+from repro.configs.lm_common import lm_cells, lm_smoke
+from repro.models.transformer import TransformerConfig
+
+CONFIG = TransformerConfig(
+    name="gemma3-4b",
+    n_layers=34,
+    d_model=2560,
+    n_heads=8,
+    n_kv_heads=4,
+    head_dim=256,
+    d_ff=10240,
+    vocab_size=262144,
+    window=1024,
+    global_every=6,  # 5 local : 1 global
+    rope_theta=1_000_000.0,
+    scale_embed=True,
+    qk_norm=True,
+)
+
+SMOKE_CONFIG = TransformerConfig(
+    name="gemma3-4b-smoke",
+    n_layers=6,  # one full 5:1 local:global period
+    d_model=32,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=8,
+    d_ff=64,
+    vocab_size=256,
+    window=4,
+    global_every=6,
+    scale_embed=True,
+    qk_norm=True,
+    dtype="float32",
+)
+
+ARCH = register(
+    ArchDef(
+        name="gemma3-4b",
+        family="lm",
+        config=CONFIG,
+        cells=lm_cells("gemma3-4b", CONFIG, long_ok=True),
+        smoke=lambda: lm_smoke(SMOKE_CONFIG),
+    )
+)

@@ -1,0 +1,40 @@
+"""internlm2-1.8b [dense] 24L d_model=2048 16H (GQA kv=8) d_ff=8192
+vocab=92544 [arXiv:2403.17297; hf]. long_500k: documented skip."""
+
+from repro.configs.base import ArchDef, register
+from repro.configs.lm_common import lm_cells, lm_smoke
+from repro.models.transformer import TransformerConfig
+
+CONFIG = TransformerConfig(
+    name="internlm2-1.8b",
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=92544,
+    rope_theta=1_000_000.0,
+)
+
+SMOKE_CONFIG = TransformerConfig(
+    name="internlm2-1.8b-smoke",
+    n_layers=2,
+    d_model=32,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=8,
+    d_ff=64,
+    vocab_size=256,
+    dtype="float32",
+)
+
+ARCH = register(
+    ArchDef(
+        name="internlm2-1.8b",
+        family="lm",
+        config=CONFIG,
+        cells=lm_cells("internlm2-1.8b", CONFIG, long_ok=False),
+        smoke=lambda: lm_smoke(SMOKE_CONFIG),
+    )
+)

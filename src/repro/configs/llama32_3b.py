@@ -1,0 +1,45 @@
+"""llama3.2-3b [dense] 28L d_model=3072 24H (GQA kv=8) d_ff=8192
+vocab=128256 [hf:meta-llama/Llama-3.2-3B; unverified].
+
+Sharding note: 24 query heads do not divide model=16 — the head axis
+replicates and the fused qkv projection axis (24*128=3072) shards instead
+(divisibility fallback, DESIGN.md §6). long_500k is a documented skip
+(pure full attention)."""
+
+from repro.configs.base import ArchDef, register
+from repro.configs.lm_common import lm_cells, lm_smoke
+from repro.models.transformer import TransformerConfig
+
+CONFIG = TransformerConfig(
+    name="llama3.2-3b",
+    n_layers=28,
+    d_model=3072,
+    n_heads=24,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=128256,
+    rope_theta=500_000.0,
+)
+
+SMOKE_CONFIG = TransformerConfig(
+    name="llama3.2-3b-smoke",
+    n_layers=2,
+    d_model=48,
+    n_heads=6,  # keep heads % kv != heads (GQA) and heads not divisible by 16
+    n_kv_heads=2,
+    head_dim=8,
+    d_ff=96,
+    vocab_size=256,
+    dtype="float32",
+)
+
+ARCH = register(
+    ArchDef(
+        name="llama3.2-3b",
+        family="lm",
+        config=CONFIG,
+        cells=lm_cells("llama3.2-3b", CONFIG, long_ok=False),
+        smoke=lambda: lm_smoke(SMOKE_CONFIG),
+    )
+)

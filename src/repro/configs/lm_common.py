@@ -1,0 +1,210 @@
+"""Shared cell/smoke machinery for the LM-family architectures.
+
+LM shapes (assigned): train_4k (4096 x 256, train_step), prefill_32k
+(32768 x 32, prefill), decode_32k (one token, 32768-cache, batch 128),
+long_500k (one token, 524288-cache, batch 1 — hybrid/sub-quadratic archs
+only; pure full-attention archs record a documented skip).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import Cell, sds, sharding_for
+from repro.distributed.partitioning import DEFAULT_RULES
+from repro.distributed.shardutil import abstract_opt_state, tree_shardings
+from repro.models import transformer as tfm
+from repro.models.module import abstract_params, init_params, shard_ctx
+from repro.train import AdamWConfig, make_train_step
+from repro.train.step import init_train_state
+
+TRAIN_4K = dict(seq=4096, batch=256)
+PREFILL_32K = dict(seq=32768, batch=32)
+DECODE_32K = dict(seq=32768, batch=128)
+LONG_500K = dict(seq=524288, batch=1)
+
+
+def _attn_eff_context(cfg: tfm.TransformerConfig, seq: int, *, decode: bool):
+    """Per-layer average attended context length (window-aware)."""
+    wins = []
+    for i in range(cfg.n_layers):
+        is_global = cfg.window <= 0 or (
+            cfg.global_every > 0 and (i + 1) % cfg.global_every == 0
+        )
+        w = seq if is_global else min(cfg.window, seq)
+        if not decode and w == seq:
+            w = seq / 2  # causal averaging over query positions
+        wins.append(w)
+    return wins
+
+
+def lm_model_flops(cfg: tfm.TransformerConfig, batch: int, seq: int, mode: str):
+    """Useful-FLOPs bookkeeping: 6ND (train) / 2ND (inference) + lm-head +
+    window-aware attention term. N excludes the embedding table (its only
+    compute is the tied lm-head matmul, counted separately)."""
+    V, D = cfg.vocab_size, cfg.d_model
+    n_active = cfg.active_param_count() - V * D
+    if mode == "decode":
+        toks = batch
+        ctx = _attn_eff_context(cfg, seq, decode=True)
+        attn = sum(4.0 * toks * w * cfg.q_dim for w in ctx)
+        return 2.0 * toks * (n_active + D * V) + attn
+    toks = batch * seq
+    ctx = _attn_eff_context(cfg, seq, decode=False)
+    attn = sum(4.0 * toks * w * cfg.q_dim for w in ctx)
+    fwd = 2.0 * toks * (n_active + D * V) + attn
+    return 3.0 * fwd if mode == "train" else fwd
+
+
+def _params_abstract_and_shardings(cfg, mesh):
+    from repro.distributed.partitioning import shard_specs
+
+    specs = cfg.param_specs()
+    return abstract_params(specs), shard_specs(specs, mesh)
+
+
+def _batch_sds(batch, seq):
+    return {
+        "tokens": sds((batch, seq), jnp.int32),
+        "labels": sds((batch, seq), jnp.int32),
+    }
+
+
+def _batch_shardings(batch, seq, mesh):
+    sh = sharding_for(mesh, ("batch", None), (batch, seq))
+    return {"tokens": sh, "labels": sh}
+
+
+def make_train_cell(name: str, cfg: tfm.TransformerConfig, *, seq: int,
+                    batch: int, shape_name: str = "train_4k") -> Cell:
+    def make_fn(mesh):
+        step = make_train_step(
+            lambda p, b: tfm.loss_fn(p, cfg, b), AdamWConfig(weight_decay=0.1)
+        )
+
+        def fn(params, opt_state, batch_):
+            with shard_ctx(mesh):
+                return step(params, opt_state, batch_)
+
+        return fn
+
+    def make_args(mesh):
+        p_abs, p_sh = _params_abstract_and_shardings(cfg, mesh)
+        o_abs, o_sh = abstract_opt_state(p_abs, p_sh, mesh)
+        b_abs = _batch_sds(batch, seq)
+        b_sh = _batch_shardings(batch, seq, mesh)
+        return (p_abs, o_abs, b_abs), (p_sh, o_sh, b_sh)
+
+    return Cell(
+        arch=name,
+        shape=shape_name,
+        kind="train",
+        make_fn=make_fn,
+        make_args=make_args,
+        model_flops=lm_model_flops(cfg, batch, seq, "train"),
+        donate=(0, 1),
+    )
+
+
+def make_prefill_cell(name: str, cfg: tfm.TransformerConfig, *, seq: int,
+                      batch: int, shape_name: str = "prefill_32k") -> Cell:
+    def make_fn(mesh):
+        def fn(params, tokens):
+            with shard_ctx(mesh):
+                return tfm.prefill(params, cfg, tokens, seq)
+
+        return fn
+
+    def make_args(mesh):
+        p_abs, p_sh = _params_abstract_and_shardings(cfg, mesh)
+        t_abs = sds((batch, seq), jnp.int32)
+        t_sh = sharding_for(mesh, ("batch", None), (batch, seq))
+        return (p_abs, t_abs), (p_sh, t_sh)
+
+    return Cell(
+        arch=name,
+        shape=shape_name,
+        kind="prefill",
+        make_fn=make_fn,
+        make_args=make_args,
+        model_flops=lm_model_flops(cfg, batch, seq, "prefill"),
+    )
+
+
+def make_decode_cell(name: str, cfg: tfm.TransformerConfig, *, seq: int,
+                     batch: int, shape_name: str, skip: str | None = None) -> Cell:
+    def make_fn(mesh):
+        def fn(params, tokens, cache, pos):
+            with shard_ctx(mesh):
+                return tfm.decode_step(params, cfg, tokens, cache, pos)
+
+        return fn
+
+    def make_args(mesh):
+        p_abs, p_sh = _params_abstract_and_shardings(cfg, mesh)
+        t_abs = sds((batch, 1), jnp.int32)
+        t_sh = sharding_for(mesh, ("batch", None), (batch, 1))
+        c_abs = tfm.cache_specs(cfg, batch, seq)
+        c_sh = jax.tree.map(
+            lambda a: sharding_for(mesh, tfm.CACHE_AXES, a.shape), c_abs
+        )
+        pos_abs = sds((), jnp.int32)
+        pos_sh = sharding_for(mesh, (), ())
+        return (p_abs, t_abs, c_abs, pos_abs), (p_sh, t_sh, c_sh, pos_sh)
+
+    return Cell(
+        arch=name,
+        shape=shape_name,
+        kind="decode",
+        make_fn=make_fn,
+        make_args=make_args,
+        model_flops=lm_model_flops(cfg, batch, seq, "decode"),
+        donate=(2,),
+        skip=skip,
+    )
+
+
+def lm_cells(name: str, cfg: tfm.TransformerConfig, *, long_ok: bool):
+    skip = (
+        None
+        if long_ok
+        else "pure full-attention arch: 512k-context decode skipped per shape "
+        "spec (sub-quadratic/hybrid archs only); see DESIGN.md §5"
+    )
+    return {
+        "train_4k": lambda: make_train_cell(name, cfg, **TRAIN_4K),
+        "prefill_32k": lambda: make_prefill_cell(name, cfg, **PREFILL_32K),
+        "decode_32k": lambda: make_decode_cell(
+            name, cfg, shape_name="decode_32k", **DECODE_32K
+        ),
+        "long_500k": lambda: make_decode_cell(
+            name, cfg, shape_name="long_500k", skip=skip, **LONG_500K
+        ),
+    }
+
+
+def lm_smoke(cfg: tfm.TransformerConfig, *, batch=2, seq=16) -> dict:
+    """Reduced-config end-to-end: one train step + prefill + decode on CPU."""
+    import numpy as np
+
+    from repro.data.batches import lm_batch
+
+    params = init_params(cfg.param_specs(), jax.random.PRNGKey(0))
+    opt = init_train_state(params)
+    step = make_train_step(lambda p, b: tfm.loss_fn(p, cfg, b), AdamWConfig())
+    b = jax.tree.map(jnp.asarray, lm_batch(batch, seq, cfg.vocab_size, seed=1))
+    params, opt, metrics = jax.jit(step)(params, opt, b)
+    assert np.isfinite(float(metrics["loss"])), "train loss is not finite"
+    logits, cache = jax.jit(lambda p, t: tfm.prefill(p, cfg, t, seq + 4))(
+        params, b["tokens"]
+    )
+    assert logits.shape == (batch, seq, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any()), "prefill logits NaN"
+    nxt = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    dl, _ = jax.jit(
+        lambda p, t, c: tfm.decode_step(p, cfg, t, c, jnp.int32(seq))
+    )(params, nxt, cache)
+    assert dl.shape == (batch, 1, cfg.vocab_size)
+    assert not bool(jnp.isnan(dl).any()), "decode logits NaN"
+    return {"loss": float(metrics["loss"]), "params": cfg.param_count()}

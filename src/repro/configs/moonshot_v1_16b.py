@@ -1,0 +1,47 @@
+"""moonshot-v1-16b-a3b [moe] 48L d_model=2048 16H (GQA kv=16) d_ff=1408
+(per expert), vocab=163840, MoE 64 experts top-6
+[hf:moonshotai/Moonlight-16B-A3B; hf].
+
+64 experts / model=16 -> 4 experts per chip (expert parallelism). The MoE
+dispatch is the paper's lookup-table routing applied to experts
+(repro.core.dispatch). long_500k: documented skip (full attention)."""
+
+from repro.configs.base import ArchDef, register
+from repro.configs.lm_common import lm_cells, lm_smoke
+from repro.models.transformer import MoEConfig, TransformerConfig
+
+CONFIG = TransformerConfig(
+    name="moonshot-v1-16b-a3b",
+    n_layers=48,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=1408,
+    vocab_size=163840,
+    moe=MoEConfig(n_experts=64, top_k=6, d_ff=1408, capacity_factor=1.25),
+    rope_theta=500_000.0,
+)
+
+SMOKE_CONFIG = TransformerConfig(
+    name="moonshot-smoke",
+    n_layers=2,
+    d_model=32,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=8,
+    d_ff=48,
+    vocab_size=256,
+    moe=MoEConfig(n_experts=8, top_k=2, d_ff=48, capacity_factor=2.0),
+    dtype="float32",
+)
+
+ARCH = register(
+    ArchDef(
+        name="moonshot-v1-16b-a3b",
+        family="lm",
+        config=CONFIG,
+        cells=lm_cells("moonshot-v1-16b-a3b", CONFIG, long_ok=False),
+        smoke=lambda: lm_smoke(SMOKE_CONFIG),
+    )
+)

@@ -1,0 +1,46 @@
+"""phi3.5-moe-42b-a6.6b [moe] 32L d_model=4096 32H (GQA kv=8) d_ff=6400
+(per expert), vocab=32064, MoE 16 experts top-2
+[hf:microsoft/Phi-3.5-MoE-instruct; hf].
+
+16 experts / model=16 -> exactly one expert per chip. long_500k:
+documented skip (full attention)."""
+
+from repro.configs.base import ArchDef, register
+from repro.configs.lm_common import lm_cells, lm_smoke
+from repro.models.transformer import MoEConfig, TransformerConfig
+
+CONFIG = TransformerConfig(
+    name="phi3.5-moe-42b-a6.6b",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=6400,
+    vocab_size=32064,
+    moe=MoEConfig(n_experts=16, top_k=2, d_ff=6400, capacity_factor=1.25),
+    rope_theta=10_000.0,
+)
+
+SMOKE_CONFIG = TransformerConfig(
+    name="phi35-moe-smoke",
+    n_layers=2,
+    d_model=32,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=8,
+    d_ff=64,
+    vocab_size=256,
+    moe=MoEConfig(n_experts=4, top_k=2, d_ff=64, capacity_factor=2.0),
+    dtype="float32",
+)
+
+ARCH = register(
+    ArchDef(
+        name="phi3.5-moe-42b-a6.6b",
+        family="lm",
+        config=CONFIG,
+        cells=lm_cells("phi3.5-moe-42b-a6.6b", CONFIG, long_ok=False),
+        smoke=lambda: lm_smoke(SMOKE_CONFIG),
+    )
+)

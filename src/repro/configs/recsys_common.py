@@ -1,0 +1,137 @@
+"""Shared cell machinery for the recsys architectures.
+
+Shapes (assigned): train_batch (B=65536, train), serve_p99 (B=512, online
+inference), serve_bulk (B=262144, offline scoring), retrieval_cand (one
+query scored against 1M candidates).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import Cell, sds, sharding_for
+from repro.distributed.partitioning import shard_specs
+from repro.distributed.shardutil import abstract_opt_state
+from repro.models.module import abstract_params, shard_ctx
+from repro.train import AdamWConfig, make_train_step
+
+TRAIN_B = 65536
+P99_B = 512
+BULK_B = 262144
+CAND_N = 1_000_000
+
+
+def mlp_flops(dims) -> float:
+    return 2.0 * sum(a * b for a, b in zip(dims[:-1], dims[1:]))
+
+
+def batch_tree_shardings(batch_abs, mesh):
+    """Shard every leaf's leading dim over the batch axes."""
+    return jax.tree.map(
+        lambda a: sharding_for(mesh, ("batch",) + (None,) * (len(a.shape) - 1),
+                               a.shape),
+        batch_abs,
+    )
+
+
+def make_recsys_train_cell(
+    arch: str,
+    cfg,
+    loss_fn: Callable,
+    batch_abs_fn: Callable[[int], dict],
+    flops_per_sample: float,
+    *,
+    batch: int = TRAIN_B,
+    shape_name: str = "train_batch",
+) -> Cell:
+    def make_fn(mesh):
+        step = make_train_step(lambda p, b: loss_fn(p, cfg, b), AdamWConfig())
+
+        def fn(params, opt_state, b):
+            with shard_ctx(mesh):
+                return step(params, opt_state, b)
+
+        return fn
+
+    def make_args(mesh):
+        specs = cfg.param_specs()
+        p_abs = abstract_params(specs)
+        p_sh = shard_specs(specs, mesh)
+        o_abs, o_sh = abstract_opt_state(p_abs, p_sh, mesh)
+        b_abs = batch_abs_fn(batch)
+        b_sh = batch_tree_shardings(b_abs, mesh)
+        return (p_abs, o_abs, b_abs), (p_sh, o_sh, b_sh)
+
+    return Cell(
+        arch=arch,
+        shape=shape_name,
+        kind="train",
+        make_fn=make_fn,
+        make_args=make_args,
+        model_flops=3.0 * flops_per_sample * batch,
+        donate=(0, 1),
+    )
+
+
+def make_recsys_serve_cell(
+    arch: str,
+    cfg,
+    forward: Callable,
+    batch_abs_fn: Callable[[int], dict],
+    flops_per_sample: float,
+    *,
+    batch: int,
+    shape_name: str,
+) -> Cell:
+    def make_fn(mesh):
+        def fn(params, b):
+            with shard_ctx(mesh):
+                return forward(params, cfg, b)
+
+        return fn
+
+    def make_args(mesh):
+        specs = cfg.param_specs()
+        p_abs = abstract_params(specs)
+        p_sh = shard_specs(specs, mesh)
+        b_abs = batch_abs_fn(batch)
+        b_sh = batch_tree_shardings(b_abs, mesh)
+        return (p_abs, b_abs), (p_sh, b_sh)
+
+    return Cell(
+        arch=arch,
+        shape=shape_name,
+        kind="serve",
+        make_fn=make_fn,
+        make_args=make_args,
+        model_flops=flops_per_sample * batch,
+    )
+
+
+def standard_recsys_cells(arch, cfg, loss_fn, forward, batch_abs_fn,
+                          flops_per_sample, *, serve_batch_abs_fn=None,
+                          retrieval_batch_abs_fn=None, retrieval_forward=None):
+    """train_batch / serve_p99 / serve_bulk / retrieval_cand cell dict."""
+    s_abs = serve_batch_abs_fn or batch_abs_fn
+    r_abs = retrieval_batch_abs_fn or s_abs
+    r_fwd = retrieval_forward or forward
+    return {
+        "train_batch": lambda: make_recsys_train_cell(
+            arch, cfg, loss_fn, batch_abs_fn, flops_per_sample
+        ),
+        "serve_p99": lambda: make_recsys_serve_cell(
+            arch, cfg, forward, s_abs, flops_per_sample,
+            batch=P99_B, shape_name="serve_p99",
+        ),
+        "serve_bulk": lambda: make_recsys_serve_cell(
+            arch, cfg, forward, s_abs, flops_per_sample,
+            batch=BULK_B, shape_name="serve_bulk",
+        ),
+        "retrieval_cand": lambda: make_recsys_serve_cell(
+            arch, cfg, r_fwd, r_abs, flops_per_sample,
+            batch=CAND_N, shape_name="retrieval_cand",
+        ),
+    }

@@ -1,0 +1,253 @@
+"""sift100m — the paper's own architecture: vocabulary-tree index build +
+batch search over SIFT descriptors (d=128), TPU-scaled.
+
+The paper streams 4TB (30B descriptors) from HDFS; here each *step*
+processes one resident window of 2^28 descriptors (64 GB bf16 global,
+~128 MB/chip on the 512-chip mesh) — the 30B corpus is ~112 such waves
+driven by launch/index.py + the WaveScheduler. Tree: fanout 256 x 256 =
+65536 leaves (MXU-aligned wide fanout, DESIGN.md §2), ~17 MB replicated —
+the paper's 1.8 GB broadcast index tree, three orders smaller relative to
+device memory.
+
+Shapes:
+  index_wave   — one index-creation wave (map + shuffle + reduce), 2^28 rows
+  search_1m    — 2^20-descriptor query batch (the "12k image" batch analog)
+  search_32k   — 2^15-descriptor batch (the Copydays batch analog)
+  tree_build   — sampling + hierarchy construction on a 2^22-row sample
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchDef, Cell, register, sds, sharding_for
+from repro.core import index_build as ib
+from repro.core import search as srch
+from repro.core.lookup import LookupTable
+from repro.core.tree import VocabTree, build_tree
+from repro.distributed.meshutil import batch_axes, data_axis_size
+
+DIM = 128
+FANOUTS = (256, 256)
+N_LEAVES = 65536
+INDEX_ROWS = 2**28
+WAVE_ROWS = 1024
+CAPACITY_FACTOR = 2.0
+K = 20
+
+
+def tree_abstract():
+    return VocabTree(
+        levels=(
+            sds((FANOUTS[0], DIM), jnp.float32),
+            sds((FANOUTS[0], FANOUTS[1], DIM), jnp.float32),
+        )
+    )
+
+
+def tree_shardings(mesh):
+    rep = sharding_for(mesh, P())
+    return VocabTree(levels=(rep, rep))
+
+
+def all_axes(mesh):
+    return tuple(mesh.axis_names)
+
+
+def n_shards_for(mesh, axes=None):
+    import math
+
+    axes = axes or batch_axes(mesh)
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def index_abstract(mesh, rows: int, axes=None):
+    n_shards = n_shards_for(mesh, axes)
+    rows_per_shard = rows // n_shards
+    capacity = ib.routing_capacity(rows_per_shard, n_shards, CAPACITY_FACTOR)
+    r = n_shards * capacity  # received rows per shard
+    lps = N_LEAVES // n_shards
+    return ib.DistributedIndex(
+        vecs=sds((n_shards * r, DIM), jnp.bfloat16),
+        ids=sds((n_shards * r,), jnp.int32),
+        leaves=sds((n_shards * r,), jnp.int32),
+        offsets=sds((n_shards, lps + 1), jnp.int32),
+        n_valid=sds((n_shards,), jnp.int32),
+        overflow=sds((), jnp.int32),
+        n_leaves=N_LEAVES,
+    )
+
+
+def index_shardings(mesh, axes=None):
+    axes = axes or batch_axes(mesh)
+    rows = sharding_for(mesh, P(axes, None))
+    flat = sharding_for(mesh, P(axes))
+    rep = sharding_for(mesh, P())
+    return ib.DistributedIndex(
+        vecs=rows, ids=flat, leaves=flat, offsets=flat, n_valid=flat,
+        overflow=rep, n_leaves=N_LEAVES,
+    )
+
+
+def lookup_abstract(q_total: int):
+    return LookupTable(
+        vecs=sds((q_total, DIM), jnp.float32),
+        qids=sds((q_total,), jnp.int32),
+        leaves=sds((q_total,), jnp.int32),
+        offsets=sds((N_LEAVES + 1,), jnp.int32),
+    )
+
+
+def lookup_shardings(mesh):
+    rep = sharding_for(mesh, P())
+    return LookupTable(vecs=rep, qids=rep, leaves=rep, offsets=rep)
+
+
+def make_index_cell() -> Cell:
+    def make_fn(mesh):
+        n_shards = data_axis_size(mesh)
+        return ib.build_index_fn(
+            mesh,
+            n_leaves=N_LEAVES,
+            rows_per_shard=INDEX_ROWS // n_shards,
+            wave_rows=WAVE_ROWS,
+            capacity_factor=CAPACITY_FACTOR,
+        )
+
+    def make_args(mesh):
+        axes = batch_axes(mesh)
+        vecs = sds((INDEX_ROWS, DIM), jnp.bfloat16)
+        ids = sds((INDEX_ROWS,), jnp.int32)
+        return (
+            (vecs, ids, tree_abstract()),
+            (
+                sharding_for(mesh, P(axes, None)),
+                sharding_for(mesh, P(axes)),
+                tree_shardings(mesh),
+            ),
+        )
+
+    # useful work: every row 2d-GEMM'd against f0 + f1 centroids
+    flops = INDEX_ROWS * 2.0 * DIM * (FANOUTS[0] + FANOUTS[1])
+    return Cell(
+        arch="sift100m",
+        shape="index_wave",
+        kind="train",
+        make_fn=make_fn,
+        make_args=make_args,
+        model_flops=flops,
+    )
+
+
+def make_search_cell(shape_name: str, q_total: int, q_cap: int,
+                     block_rows: int = 4096) -> Cell:
+    def make_fn(mesh):
+        n_shards = data_axis_size(mesh)
+        idx_abs = index_abstract(mesh, INDEX_ROWS)
+        shard_rows = idx_abs.vecs.shape[0] // n_shards
+        return srch.batch_search_fn(
+            mesh,
+            n_leaves=N_LEAVES,
+            shard_rows=shard_rows,
+            q_total=q_total,
+            block_rows=block_rows,
+            q_cap=q_cap,
+            k=K,
+        )
+
+    def make_args(mesh):
+        return (
+            (index_abstract(mesh, INDEX_ROWS), lookup_abstract(q_total)),
+            (index_shardings(mesh), lookup_shardings(mesh)),
+        )
+
+    # useful work: expected same-leaf collision pairs x 2d (uniform estimate)
+    pairs = INDEX_ROWS * (q_total / N_LEAVES)
+    flops = pairs * 2.0 * DIM + q_total * 2.0 * DIM * sum(FANOUTS)
+    return Cell(
+        arch="sift100m",
+        shape=shape_name,
+        kind="serve",
+        make_fn=make_fn,
+        make_args=make_args,
+        model_flops=flops,
+    )
+
+
+def make_tree_cell() -> Cell:
+    sample_rows = 2**22
+
+    def make_fn(mesh):
+        def fn(vecs, key):
+            return build_tree(vecs, FANOUTS, key=key, refine_iters=0)
+
+        return fn
+
+    def make_args(mesh):
+        return (
+            (sds((sample_rows, DIM), jnp.float32), sds((2,), jnp.uint32)),
+            (sharding_for(mesh, P(batch_axes(mesh), None)),
+             sharding_for(mesh, P())),
+        )
+
+    flops = sample_rows * 2.0 * DIM * (FANOUTS[0] + FANOUTS[1])
+    return Cell(
+        arch="sift100m",
+        shape="tree_build",
+        kind="train",
+        make_fn=make_fn,
+        make_args=make_args,
+        model_flops=flops,
+    )
+
+
+def sift_smoke() -> dict:
+    """Reduced end-to-end: build tree + index + search, check exactness."""
+    from repro.core.index_build import build_index
+    from repro.core.search import batch_search
+    from repro.core.tree import tree_assign
+    from repro.data import synth
+    from repro.distributed.meshutil import local_mesh
+
+    mesh = local_mesh()
+    vecs_np, _ = synth.sample_descriptors(2048, 32, seed=0, n_centers=40)
+    vecs = jnp.asarray(vecs_np)
+    tree = build_tree(vecs, (8, 8), key=jax.random.PRNGKey(1))
+    index = build_index(vecs, tree, mesh, wire_dtype=jnp.float32)
+    assert int(index.overflow) == 0
+    queries = vecs[:64] + 0.5
+    res = batch_search(index, tree, queries, k=5, mesh=mesh, q_cap=64)
+    assert int(res.q_cap_overflow) == 0
+    top1 = np.array(res.ids[:, 0])
+    # oracle: brute-force within-leaf
+    leaves = np.array(tree_assign(tree, vecs))
+    qleaves = np.array(tree_assign(tree, queries))
+    V = np.array(vecs, np.float32)
+    correct = 0
+    for i in range(64):
+        cand = np.flatnonzero(leaves == qleaves[i])
+        d2 = ((V[cand] - np.array(queries[i])) ** 2).sum(1)
+        if cand[np.argmin(d2)] == top1[i]:
+            correct += 1
+    assert correct >= 62, f"in-leaf nearest mismatch: {correct}/64"
+    return {"top1_exact": correct / 64.0, "leaves": tree.n_leaves}
+
+
+ARCH = register(
+    ArchDef(
+        name="sift100m",
+        family="index",
+        config=dict(dim=DIM, fanouts=FANOUTS, n_leaves=N_LEAVES,
+                    index_rows_per_wave=INDEX_ROWS, k=K),
+        cells={
+            "index_wave": make_index_cell,
+            "search_1m": lambda: make_search_cell("search_1m", 2**20, 4096),
+            "search_32k": lambda: make_search_cell("search_32k", 2**15, 1024),
+            "tree_build": make_tree_cell,
+        },
+        smoke=sift_smoke,
+    )
+)

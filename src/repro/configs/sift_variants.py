@@ -1,0 +1,104 @@
+"""Hillclimb variants for the paper's own architecture (sift100m)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs import sift100m as s
+from repro.configs.base import Cell
+from repro.core import search as srch
+from repro.distributed.meshutil import data_axis_size
+
+
+def make_routed_search_cell(shape_name: str, q_total: int, *, q_tile: int,
+                            p_cap: int, flat_mesh: bool = False) -> Cell:
+    def make_fn(mesh):
+        axes = s.all_axes(mesh) if flat_mesh else None
+        n_shards = s.n_shards_for(mesh, axes)
+        idx_abs = s.index_abstract(mesh, s.INDEX_ROWS, axes)
+        shard_rows = idx_abs.vecs.shape[0] // n_shards
+        return srch.routed_search_fn(
+            mesh,
+            n_leaves=s.N_LEAVES,
+            shard_rows=shard_rows,
+            q_total=q_total,
+            q_tile=q_tile,
+            p_cap=p_cap,
+            k=s.K,
+            axes=axes,
+        )
+
+    def make_args(mesh):
+        axes = s.all_axes(mesh) if flat_mesh else None
+        return (
+            (s.index_abstract(mesh, s.INDEX_ROWS, axes),
+             s.lookup_abstract(q_total)),
+            (s.index_shardings(mesh, axes), s.lookup_shardings(mesh)),
+        )
+
+    pairs = s.INDEX_ROWS * (q_total / s.N_LEAVES)
+    flops = pairs * 2.0 * s.DIM + q_total * 2.0 * s.DIM * sum(s.FANOUTS)
+    return Cell(
+        arch="sift100m",
+        shape=shape_name,
+        kind="serve",
+        make_fn=make_fn,
+        make_args=make_args,
+        model_flops=flops,
+    )
+
+
+def make_flat_index_cell() -> Cell:
+    """index_wave over ALL mesh axes (the paper's cluster is flat; leaving
+    the model axis idle replicates the whole job 16x per pod)."""
+    import dataclasses
+
+    from jax.sharding import PartitionSpec as P
+
+    import jax.numpy as jnp
+
+    from repro.configs.base import sds, sharding_for
+    from repro.core import index_build as ib
+
+    def make_fn(mesh):
+        axes = s.all_axes(mesh)
+        n_shards = s.n_shards_for(mesh, axes)
+        return ib.build_index_fn(
+            mesh,
+            n_leaves=s.N_LEAVES,
+            rows_per_shard=s.INDEX_ROWS // n_shards,
+            wave_rows=s.WAVE_ROWS,
+            capacity_factor=s.CAPACITY_FACTOR,
+            axes=axes,
+        )
+
+    def make_args(mesh):
+        axes = s.all_axes(mesh)
+        vecs = sds((s.INDEX_ROWS, s.DIM), jnp.bfloat16)
+        ids = sds((s.INDEX_ROWS,), jnp.int32)
+        return (
+            (vecs, ids, s.tree_abstract()),
+            (
+                sharding_for(mesh, P(axes, None)),
+                sharding_for(mesh, P(axes)),
+                s.tree_shardings(mesh),
+            ),
+        )
+
+    base = s.make_index_cell()
+    return dataclasses.replace(base, make_fn=make_fn, make_args=make_args)
+
+
+def apply(name: str, arch: str, shape: str) -> Cell:
+    if arch != "sift100m":
+        raise KeyError(f"unknown variant {name} for {arch}")
+    if name == "query_routed":
+        q_total = {"search_1m": 2**20, "search_32k": 2**15}[shape]
+        return make_routed_search_cell(shape, q_total, q_tile=512, p_cap=8192)
+    if name == "query_routed_flat":
+        q_total = {"search_1m": 2**20, "search_32k": 2**15}[shape]
+        return make_routed_search_cell(shape, q_total, q_tile=512, p_cap=8192,
+                                       flat_mesh=True)
+    if name == "flat_mesh":
+        return make_flat_index_cell()
+    raise KeyError(f"unknown variant {name}")

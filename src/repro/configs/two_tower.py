@@ -1,0 +1,134 @@
+"""two-tower-retrieval [recsys] embed_dim=256 tower_mlp=1024-512-256
+interaction=dot, sampled-softmax retrieval [RecSys'19 (YouTube); unverified].
+
+This is the arch where the paper's technique applies *directly*:
+``retrieval_cand`` scores one user against 1M candidates — exactly the
+batch k-NN problem. Both paths exist: dense exact scoring (this cell) and
+the vocabulary-tree ANN route (benchmarks/ann_retrieval.py compares them).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchDef, register, sds
+from repro.configs.recsys_common import (
+    CAND_N,
+    make_recsys_serve_cell,
+    make_recsys_train_cell,
+    mlp_flops,
+)
+from repro.models import recsys
+from repro.models.module import init_params
+from repro.train import AdamWConfig, make_train_step
+from repro.train.step import init_train_state
+
+CONFIG = recsys.TwoTowerConfig(
+    name="two-tower-retrieval",
+    embed_dim=256,
+    field_dim=64,
+    n_user_fields=4,
+    n_item_fields=4,
+    vocab_per_field=1_000_000,
+    tower_mlp=(1024, 512, 256),
+)
+
+_TOWER_FLOPS = mlp_flops(
+    (CONFIG.n_user_fields * CONFIG.field_dim, *CONFIG.tower_mlp)
+)
+
+
+def train_batch_abs(b: int):
+    return {
+        "user_ids": sds((b, CONFIG.n_user_fields), jnp.int32),
+        "item_ids": sds((b, CONFIG.n_item_fields), jnp.int32),
+    }
+
+
+def pair_batch_abs(b: int):
+    return train_batch_abs(b)
+
+
+def retrieval_batch_abs(n_cand: int):
+    return {
+        "user_ids": sds((1, CONFIG.n_user_fields), jnp.int32),
+        "cand_ids": sds((n_cand, CONFIG.n_item_fields), jnp.int32),
+    }
+
+
+def pair_score(params, cfg, b):
+    """Online serving: score (user, item) pairs row-wise."""
+    u = recsys.tower(params, cfg, "user", b["user_ids"])
+    it = recsys.tower(params, cfg, "item", b["item_ids"])
+    return jnp.sum(u * it, axis=-1).astype(jnp.float32)
+
+
+def _cells():
+    # train flops include the BxB in-batch softmax logits matmul
+    def train_flops(b):
+        return 3.0 * (2 * _TOWER_FLOPS + 2.0 * b * CONFIG.embed_dim)
+
+    cells = {
+        "train_batch": lambda: make_recsys_train_cell(
+            "two-tower-retrieval", CONFIG, recsys.twotower_loss,
+            train_batch_abs, train_flops(65536),
+        ),
+        "serve_p99": lambda: make_recsys_serve_cell(
+            "two-tower-retrieval", CONFIG, pair_score, pair_batch_abs,
+            2 * _TOWER_FLOPS + 2 * CONFIG.embed_dim, batch=512,
+            shape_name="serve_p99",
+        ),
+        "serve_bulk": lambda: make_recsys_serve_cell(
+            "two-tower-retrieval", CONFIG, pair_score, pair_batch_abs,
+            2 * _TOWER_FLOPS + 2 * CONFIG.embed_dim, batch=262144,
+            shape_name="serve_bulk",
+        ),
+        "retrieval_cand": lambda: make_recsys_serve_cell(
+            "two-tower-retrieval", CONFIG, recsys.twotower_score,
+            retrieval_batch_abs,
+            _TOWER_FLOPS + 2 * CONFIG.embed_dim,  # item tower + dot per cand
+            batch=CAND_N, shape_name="retrieval_cand",
+        ),
+    }
+    return cells
+
+
+def twotower_smoke() -> dict:
+    from repro.data.batches import twotower_batch
+
+    cfg = recsys.TwoTowerConfig(
+        name="tt-smoke", vocab_per_field=1000, field_dim=16,
+        tower_mlp=(64, 32), embed_dim=32,
+    )
+    params = init_params(cfg.param_specs(), jax.random.PRNGKey(0))
+    opt = init_train_state(params)
+    step = jax.jit(
+        make_train_step(lambda p, b: recsys.twotower_loss(p, cfg, b), AdamWConfig())
+    )
+    b = jax.tree.map(jnp.asarray, twotower_batch(64, 4, 4, 1000, seed=1))
+    params, opt, m = step(params, opt, b)
+    assert np.isfinite(float(m["loss"]))
+    sc = jax.jit(lambda p, bb: recsys.twotower_score(p, cfg, bb))(
+        params,
+        {
+            "user_ids": b["user_ids"][:1],
+            "cand_ids": jnp.asarray(
+                np.random.default_rng(2).integers(0, 1000, (256, 4), dtype=np.int32)
+            ),
+        },
+    )
+    assert sc.shape == (256,) and not bool(jnp.isnan(sc).any())
+    return {"loss": float(m["loss"]), "params": cfg.param_count()}
+
+
+ARCH = register(
+    ArchDef(
+        name="two-tower-retrieval",
+        family="recsys",
+        config=CONFIG,
+        cells=_cells(),
+        smoke=twotower_smoke,
+    )
+)

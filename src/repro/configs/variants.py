@@ -1,0 +1,120 @@
+"""Named beyond-baseline variants for the §Perf hillclimb.
+
+``apply(name, arch, shape)`` returns a Cell identical to the baseline
+except for one change, so before/after rooflines isolate that change.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs import lm_common
+from repro.configs.base import Cell
+
+
+def _lm_config(arch: str):
+    import importlib
+
+    mod = {
+        "llama3.2-3b": "repro.configs.llama32_3b",
+        "gemma3-4b": "repro.configs.gemma3_4b",
+        "internlm2-1.8b": "repro.configs.internlm2_18b",
+        "moonshot-v1-16b-a3b": "repro.configs.moonshot_v1_16b",
+        "phi3.5-moe-42b-a6.6b": "repro.configs.phi35_moe",
+    }[arch]
+    return importlib.import_module(mod).CONFIG
+
+
+def _lm_cell_with(cfg, arch: str, shape: str) -> Cell:
+    shapes = {
+        "train_4k": lambda: lm_common.make_train_cell(arch, cfg, **lm_common.TRAIN_4K),
+        "prefill_32k": lambda: lm_common.make_prefill_cell(
+            arch, cfg, **lm_common.PREFILL_32K
+        ),
+        "decode_32k": lambda: lm_common.make_decode_cell(
+            arch, cfg, shape_name="decode_32k", **lm_common.DECODE_32K
+        ),
+        "long_500k": lambda: lm_common.make_decode_cell(
+            arch, cfg, shape_name="long_500k", **lm_common.LONG_500K
+        ),
+    }
+    return shapes[shape]()
+
+
+def routed_moe(arch: str, shape: str) -> Cell:
+    """Hillclimb #1: MoE dispatch via shard_map all_to_all routing."""
+    cfg = dataclasses.replace(_lm_config(arch), moe_impl="routed")
+    return _lm_cell_with(cfg, arch, shape)
+
+
+def head_pad(arch: str, shape: str) -> Cell:
+    """Hillclimb #3 (llama3.2): pad 24 query heads -> 32 so the head axis
+    divides model=16 and attention shards without replicate-then-partition
+    resharding. +33% attention-einsum compute and ~3% params; a production
+    deployment zero-initialises and freezes the 8 pad heads (wo rows = 0),
+    which is bit-identical to the 24-head model."""
+    cfg = _lm_config(arch)
+    target = ((cfg.n_heads + 15) // 16) * 16
+    cfg = dataclasses.replace(cfg, n_heads=target)
+    return _lm_cell_with(cfg, arch, shape)
+
+
+def head_pad_chunked(arch: str, shape: str) -> Cell:
+    """Hillclimb #3 iteration 2: head padding + chunked (flash-dataflow)
+    attention — bounds the materialised score tile to (Sq, chunk)."""
+    cfg = _lm_config(arch)
+    target = ((cfg.n_heads + 15) // 16) * 16
+    cfg = dataclasses.replace(cfg, n_heads=target, attn_impl="chunked",
+                              attn_chunk=1024)
+    return _lm_cell_with(cfg, arch, shape)
+
+
+def remat_full(arch: str, shape: str) -> Cell:
+    """Memory knob: full remat (nothing saved) for train cells."""
+    cfg = dataclasses.replace(_lm_config(arch), remat="full")
+    return _lm_cell_with(cfg, arch, shape)
+
+
+def microbatch8(arch: str, shape: str) -> Cell:
+    """Memory knob: 8-way gradient accumulation."""
+    cfg = _lm_config(arch)
+    base = lm_common.make_train_cell(arch, cfg, **lm_common.TRAIN_4K)
+
+    import jax
+
+    from repro.models import transformer as tfm
+    from repro.models.module import shard_ctx
+    from repro.train import AdamWConfig, make_train_step
+
+    def make_fn(mesh):
+        step = make_train_step(
+            lambda p, b: tfm.loss_fn(p, cfg, b),
+            AdamWConfig(weight_decay=0.1),
+            microbatches=8,
+        )
+
+        def fn(params, opt_state, batch_):
+            with shard_ctx(mesh):
+                return step(params, opt_state, batch_)
+
+        return fn
+
+    return dataclasses.replace(base, make_fn=make_fn)
+
+
+VARIANTS = {
+    "routed_moe": routed_moe,
+    "head_pad": head_pad,
+    "head_pad_chunked": head_pad_chunked,
+    "remat_full": remat_full,
+    "microbatch8": microbatch8,
+}
+
+
+def apply(name: str, arch: str, shape: str) -> Cell:
+    if name not in VARIANTS:
+        # search/index variants register lazily (sift100m module)
+        from repro.configs import sift_variants
+
+        return sift_variants.apply(name, arch, shape)
+    return VARIANTS[name](arch, shape)

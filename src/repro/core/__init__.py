@@ -1,0 +1,7 @@
+# The paper's primary contribution: distributed vocabulary-tree indexing and
+# batch k-NN search, as an SPMD dataflow (assign -> route/all_to_all -> sort;
+# lookup-join -> distance GEMM -> top-k merge). See DESIGN.md §2-4.
+from repro.core.tree import VocabTree, build_tree, tree_assign  # noqa: F401
+from repro.core.lookup import LookupTable, build_lookup  # noqa: F401
+from repro.core.index_build import DistributedIndex, build_index  # noqa: F401
+from repro.core.search import SearchResult, batch_search  # noqa: F401

@@ -1,0 +1,69 @@
+"""Capacity-padded dispatch/combine: one substrate, three clients.
+
+The paper's lookup table "reorders query descriptors by their closest
+representative" so per-cluster work becomes dense. That is the same
+primitive as MoE token dispatch (group tokens by expert) and recsys
+embedding-bag grouping (group ids by table shard). This module implements it
+once, sort-based (no O(n*E*c) one-hot einsum), and the MoE layers, the index
+pipeline, and the embedding sharding all call it.
+
+``assign`` maps each of n rows to a bucket in [0, n_buckets); each bucket
+accepts up to ``capacity`` rows; the rest are dropped-and-counted (MoE calls
+this token dropping; the paper calls it a failed task).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.route import counting_layout
+
+
+class Dispatch(NamedTuple):
+    gather_idx: jax.Array  # (n_buckets, capacity) row index into x (0 if empty)
+    slot_valid: jax.Array  # (n_buckets, capacity) bool
+    slot_of_row: jax.Array  # (n,) flat slot per row, -1 if dropped
+    fits: jax.Array  # (n,) bool
+    overflow: jax.Array  # () int32 dropped rows
+
+
+def make_dispatch(assign: jax.Array, n_buckets: int, capacity: int) -> Dispatch:
+    n = assign.shape[0]
+    layout = counting_layout(assign.astype(jnp.int32), n_buckets, capacity)
+    flat = n_buckets * capacity
+    slot = jnp.where(layout.fits, layout.slot_of_row, flat)
+    gather_flat = jnp.zeros((flat + 1,), jnp.int32).at[slot].set(
+        jnp.arange(n, dtype=jnp.int32), mode="drop"
+    )[:flat]
+    valid_flat = jnp.zeros((flat + 1,), jnp.bool_).at[slot].set(
+        True, mode="drop"
+    )[:flat]
+    return Dispatch(
+        gather_idx=gather_flat.reshape(n_buckets, capacity),
+        slot_valid=valid_flat.reshape(n_buckets, capacity),
+        slot_of_row=layout.slot_of_row,
+        fits=layout.fits,
+        overflow=layout.overflow,
+    )
+
+
+def dispatch_rows(d: Dispatch, x: jax.Array) -> jax.Array:
+    """(n, ...) -> (n_buckets, capacity, ...), empty slots zeroed."""
+    out = x[d.gather_idx]
+    mask_shape = d.slot_valid.shape + (1,) * (x.ndim - 1)
+    return out * d.slot_valid.reshape(mask_shape).astype(out.dtype)
+
+
+def combine_rows(d: Dispatch, y: jax.Array, fill=0) -> jax.Array:
+    """(n_buckets, capacity, ...) -> (n, ...); dropped rows get ``fill``."""
+    nb, cap = d.gather_idx.shape
+    flat = y.reshape((nb * cap,) + y.shape[2:])
+    n = d.slot_of_row.shape[0]
+    safe_slot = jnp.clip(d.slot_of_row, 0, nb * cap - 1)
+    out = flat[safe_slot]
+    mask_shape = (n,) + (1,) * (y.ndim - 2)
+    keep = d.fits.reshape(mask_shape)
+    return jnp.where(keep, out, jnp.asarray(fill, dtype=out.dtype))

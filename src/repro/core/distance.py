@@ -1,0 +1,50 @@
+"""L2-distance algebra used everywhere (index build, search, k-means refine).
+
+All entry points use the expansion  ||x - c||^2 = ||x||^2 - 2 x.c + ||c||^2
+so the inner loop is a GEMM (MXU work on TPU). The ``x`` norm term is dropped
+where only an argmin/top-k over ``c`` is needed.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sq_norms(x: jax.Array) -> jax.Array:
+    """Row squared norms, accumulated in fp32."""
+    xf = x.astype(jnp.float32)
+    return jnp.sum(xf * xf, axis=-1)
+
+
+def sq_dists(x: jax.Array, c: jax.Array, c_norms: jax.Array | None = None) -> jax.Array:
+    """Full (n, m) squared distances between rows of x (n,d) and c (m,d)."""
+    if c_norms is None:
+        c_norms = sq_norms(c)
+    dots = jnp.einsum(
+        "nd,md->nm", x, c, preferred_element_type=jnp.float32
+    )
+    return sq_norms(x)[:, None] - 2.0 * dots + c_norms[None, :]
+
+
+def nearest(x: jax.Array, c: jax.Array, c_norms: jax.Array | None = None):
+    """(argmin, min_sqdist) of each row of x over centroid rows c.
+
+    The ||x||^2 term is omitted from the argmin and added back to the
+    returned distance, saving one reduction.
+    """
+    if c_norms is None:
+        c_norms = sq_norms(c)
+    dots = jnp.einsum("nd,md->nm", x, c, preferred_element_type=jnp.float32)
+    partial = c_norms[None, :] - 2.0 * dots  # (n, m)
+    idx = jnp.argmin(partial, axis=1)
+    best = jnp.min(partial, axis=1) + sq_norms(x)
+    return idx.astype(jnp.int32), best
+
+
+def topk_neighbors(x: jax.Array, c: jax.Array, k: int,
+                   c_norms: jax.Array | None = None):
+    """(indices, sq_dists) of the k nearest rows of c for each row of x."""
+    d2 = sq_dists(x, c, c_norms)
+    neg, idx = jax.lax.top_k(-d2, k)
+    return idx.astype(jnp.int32), -neg

@@ -1,0 +1,65 @@
+"""Query lookup table (paper §2.4, step 1).
+
+All query descriptors of a batch are assigned to their leaf cluster by
+traversing the index tree, then reordered by leaf id; a CSR offset array per
+leaf lets any index block find "which query descriptors have to be used in
+distance calculations when a cluster identifier is given". The table is the
+broadcast auxiliary data of the search phase — replicated across devices
+(the paper ships it to every map task via HDFS).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tree import VocabTree, tree_assign
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class LookupTable:
+    vecs: jax.Array  # (Q, d) query descriptors, sorted by leaf id
+    qids: jax.Array  # (Q,) original query row ids (permutation)
+    leaves: jax.Array  # (Q,) leaf id per sorted query
+    offsets: jax.Array  # (n_leaves + 1,) CSR start offsets into vecs
+
+    def tree_flatten(self):
+        return (self.vecs, self.qids, self.leaves, self.offsets), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def n_queries(self) -> int:
+        return self.vecs.shape[0]
+
+    @property
+    def n_leaves(self) -> int:
+        return self.offsets.shape[0] - 1
+
+    @property
+    def nbytes(self) -> int:
+        return sum(
+            a.size * a.dtype.itemsize
+            for a in (self.vecs, self.qids, self.leaves, self.offsets)
+        )
+
+
+def build_lookup(tree: VocabTree, queries: jax.Array) -> LookupTable:
+    """Assign queries to leaves and build the CSR table (jit-able)."""
+    leaves = tree_assign(tree, queries)
+    order = jnp.argsort(leaves, stable=True)
+    sorted_leaves = leaves[order].astype(jnp.int32)
+    offsets = jnp.searchsorted(
+        sorted_leaves, jnp.arange(tree.n_leaves + 1, dtype=jnp.int32)
+    ).astype(jnp.int32)
+    return LookupTable(
+        vecs=queries[order],
+        qids=order.astype(jnp.int32),
+        leaves=sorted_leaves,
+        offsets=offsets,
+    )

@@ -1,0 +1,138 @@
+"""Cluster routing: the paper's shuffle phase, TPU-native.
+
+Hadoop's copy-merge-sort shuffle (map outputs keyed by cluster id, delivered
+to the reducer owning that key) becomes, per device shard:
+
+  1. destination = owner shard of the row's leaf  (contiguous leaf ranges)
+  2. capacity-padded counting sort into per-destination send buffers
+  3. ``lax.all_to_all`` over the data axis (the wire)
+  4. local sort of received rows by leaf  (the reduce-side merge-sort)
+
+Capacity padding replaces Hadoop's elastic spill-to-disk: a shard can send at
+most ``capacity`` rows to any destination; rows beyond that are dropped and
+*counted* (the analog of the paper's failed/re-executed task statistics,
+Table 5). Pipelines size the capacity factor so the expected drop count is
+zero, and tests assert it.
+
+Wire compression: payload vectors can be cast to a narrower ``wire_dtype``
+for the exchange — the analog of the paper's map-output compression, which
+cut shuffle bytes by 30%; bf16 cuts ours by 50%.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# Sentinel leaf id that sorts after every real leaf (rows marked invalid).
+# Plain Python int: module-level jax arrays would initialise the backend at
+# import time and break the dry-run's forced device count.
+SENTINEL = 2**31 - 1
+
+
+class CountingLayout(NamedTuple):
+    """Scatter layout of local rows into (n_dest, capacity) send slots."""
+
+    slot_of_row: jax.Array  # (n,) flat slot id dest*capacity+pos, or -1
+    fits: jax.Array  # (n,) bool — row made it into its destination bucket
+    overflow: jax.Array  # () int32 — rows dropped (capacity exceeded)
+
+
+def counting_layout(dest: jax.Array, n_dest: int, capacity: int) -> CountingLayout:
+    """Stable counting sort of rows by destination with per-dest capacity."""
+    n = dest.shape[0]
+    order = jnp.argsort(dest, stable=True)
+    sorted_dest = dest[order]
+    # start offset of each destination's segment in the sorted order
+    starts = jnp.searchsorted(sorted_dest, jnp.arange(n_dest, dtype=dest.dtype))
+    # position of each row within its destination segment
+    pos_sorted = jnp.arange(n, dtype=jnp.int32) - starts[sorted_dest].astype(jnp.int32)
+    pos = jnp.zeros((n,), jnp.int32).at[order].set(pos_sorted)
+    in_range = (dest >= 0) & (dest < n_dest)
+    fits = (pos < capacity) & in_range
+    slot = jnp.where(fits, dest.astype(jnp.int32) * capacity + pos, -1)
+    # only in-range rows count as dropped (negative dest = padding rows)
+    overflow = jnp.sum(~fits & in_range).astype(jnp.int32)
+    return CountingLayout(slot_of_row=slot, fits=fits, overflow=overflow)
+
+
+def scatter_to_slots(
+    layout: CountingLayout, x: jax.Array, n_dest: int, capacity: int, fill=0
+) -> jax.Array:
+    """Place rows into their (n_dest*capacity, ...) send slots."""
+    out_shape = (n_dest * capacity,) + x.shape[1:]
+    buf = jnp.full(out_shape, fill, dtype=x.dtype)
+    # rows that don't fit get an out-of-bounds slot and are dropped
+    slot = jnp.where(layout.fits, layout.slot_of_row, n_dest * capacity)
+    return buf.at[slot].set(x, mode="drop")
+
+
+class Routed(NamedTuple):
+    """Per-shard received rows after the exchange (padded, mask via leaf)."""
+
+    vecs: jax.Array  # (n_dest*capacity, d)
+    ids: jax.Array  # (n_dest*capacity,) global row ids; -1 invalid
+    leaves: jax.Array  # (n_dest*capacity,) leaf ids; SENTINEL invalid
+    overflow: jax.Array  # () rows dropped on the send side (psum'd)
+
+
+def route_by_leaf(
+    vecs: jax.Array,
+    ids: jax.Array,
+    leaves: jax.Array,
+    *,
+    axis_name,
+    n_shards: int,
+    leaves_per_shard: int,
+    capacity: int,
+    wire_dtype=jnp.bfloat16,
+) -> Routed:
+    """Shuffle rows to the shard owning their leaf (call inside shard_map)."""
+    dest = (leaves // leaves_per_shard).astype(jnp.int32)
+    layout = counting_layout(dest, n_shards, capacity)
+
+    send_vecs = scatter_to_slots(layout, vecs.astype(wire_dtype), n_shards, capacity)
+    send_ids = scatter_to_slots(layout, ids.astype(jnp.int32), n_shards, capacity, fill=-1)
+    send_leaves = scatter_to_slots(
+        layout, leaves.astype(jnp.int32), n_shards, capacity, fill=SENTINEL
+    )
+    # mark empty slots invalid (fill of vecs/ids alone is ambiguous)
+    slot_used = scatter_to_slots(
+        layout, jnp.ones(leaves.shape, jnp.int8), n_shards, capacity
+    )
+    send_leaves = jnp.where(slot_used > 0, send_leaves, SENTINEL)
+    send_ids = jnp.where(slot_used > 0, send_ids, -1)
+
+    recv_vecs = jax.lax.all_to_all(send_vecs, axis_name, 0, 0, tiled=True)
+    recv_ids = jax.lax.all_to_all(send_ids, axis_name, 0, 0, tiled=True)
+    recv_leaves = jax.lax.all_to_all(send_leaves, axis_name, 0, 0, tiled=True)
+    overflow = jax.lax.psum(layout.overflow, axis_name)
+    return Routed(
+        vecs=recv_vecs.astype(vecs.dtype),
+        ids=recv_ids,
+        leaves=recv_leaves,
+        overflow=overflow,
+    )
+
+
+def cluster_sort(routed: Routed, *, leaf_base: jax.Array, leaves_per_shard: int):
+    """Reduce-side merge: sort received rows by leaf, build CSR offsets.
+
+    ``leaf_base`` is this shard's first owned leaf. Returns
+    (vecs, ids, leaves, offsets, n_valid) where offsets has length
+    ``leaves_per_shard + 1`` over *local* leaf ids.
+    """
+    order = jnp.argsort(routed.leaves, stable=True)
+    vecs = routed.vecs[order]
+    ids = routed.ids[order]
+    leaves = routed.leaves[order]
+    n_valid = jnp.sum(leaves != SENTINEL).astype(jnp.int32)
+    local_leaf = jnp.where(
+        leaves == SENTINEL, jnp.int32(leaves_per_shard), leaves - leaf_base
+    ).astype(jnp.int32)
+    offsets = jnp.searchsorted(
+        local_leaf, jnp.arange(leaves_per_shard + 1, dtype=jnp.int32)
+    ).astype(jnp.int32)
+    return vecs, ids, leaves, offsets, n_valid

@@ -1,0 +1,5 @@
+# Data substrate: synthetic generators standing in for the paper's 30B-SIFT
+# collection (synth.py), Copydays-style distorted-query evaluation sets
+# (copydays.py), the sharded descriptor store / sequence-file analog
+# (store.py), graph generators + neighbor sampler (graph.py), and LM/recsys
+# batch synthesis (batches.py).

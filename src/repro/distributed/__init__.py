@@ -1,0 +1,13 @@
+from repro.distributed.partitioning import (  # noqa: F401
+    AxisRules,
+    DEFAULT_RULES,
+    logical_sharding,
+    shard_specs,
+)
+from repro.distributed.meshutil import (  # noqa: F401
+    batch_axes,
+    batch_spec,
+    data_axis_size,
+    local_mesh,
+    mesh_axis_size,
+)

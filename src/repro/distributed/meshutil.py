@@ -1,0 +1,55 @@
+"""Mesh helpers shared by the library and the launchers.
+
+The production meshes (see ``repro.launch.mesh``) use axis names:
+
+  * ``pod``   -- pod axis (multi-pod only); batch/data parallel across pods
+  * ``data``  -- intra-pod data axis; descriptor rows / batch shards
+  * ``model`` -- model axis; weights / embedding tables / experts / vocab
+
+Library code never hardcodes sizes: everything is derived from the mesh that
+is current (or passed explicitly), so the same program runs on the 1-device
+CPU mesh used in tests and the 512-chip multi-pod mesh used in the dry-run.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def local_mesh(axes: Sequence[str] = ("data", "model")) -> Mesh:
+    """A degenerate mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    shape = [1] * len(axes)
+    shape[0] = n
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def mesh_axis_size(mesh: Mesh, name: str) -> int:
+    if name not in mesh.axis_names:
+        return 1
+    return mesh.shape[name]
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Mesh axes over which batch-like (row) dimensions shard."""
+    if "pod" in mesh.axis_names:
+        return ("pod", "data")
+    return ("data",)
+
+
+def batch_spec(mesh: Mesh, *trailing) -> P:
+    """PartitionSpec sharding dim 0 over the batch axes."""
+    return P(batch_axes(mesh), *trailing)
+
+
+def data_axis_size(mesh: Mesh) -> int:
+    """Total number of row shards (pod*data)."""
+    return math.prod(mesh_axis_size(mesh, a) for a in batch_axes(mesh))
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

@@ -1,0 +1,139 @@
+"""Logical-axis partitioning with divisibility fallback.
+
+Every parameter / activation names its dims with *logical* axes
+(``("layers", "embed", "ffn")``); a rule table maps logical axes to mesh
+axes. A mesh axis is applied only if the dim is divisible by the product of
+the mapped mesh-axis sizes — otherwise that dim silently falls back to
+replicated. This is what lets e.g. llama3.2's 24 query heads (not divisible
+by model=16) keep the rest of the layer sharded: the head axis replicates,
+the fused head*dim projection axis shards.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Mapping, Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    """Mapping logical axis name -> mesh axis (or tuple of mesh axes)."""
+
+    rules: Mapping[str, MeshAxes]
+
+    def mesh_axes(self, logical: Optional[str]) -> MeshAxes:
+        if logical is None:
+            return None
+        return self.rules.get(logical, None)
+
+    def extend(self, **updates: MeshAxes) -> "AxisRules":
+        merged = dict(self.rules)
+        merged.update(updates)
+        return AxisRules(merged)
+
+
+#: Default rules shared by all architectures. ``rows`` is the HDFS-block /
+#: batch analog; ``model_dim``-family axes go to the model axis.
+DEFAULT_RULES = AxisRules(
+    {
+        # batch-like / row-like axes -> data parallel (incl. pod axis)
+        "batch": ("pod", "data"),
+        "rows": ("pod", "data"),
+        "edges": ("pod", "data"),
+        # KV-cache sequence: context parallelism over whatever axes the
+        # batch dim left free (decode_32k -> model; long_500k -> all three)
+        "kv_seq": ("pod", "data", "model"),
+        # model-parallel axes
+        "vocab": "model",
+        "ffn": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "qkv": "model",
+        "experts": "model",
+        "table_rows": "model",
+        "clusters": "model",
+        "candidates": "model",
+        "nodes": "model",
+        # never sharded
+        "layers": None,
+        "embed": None,
+        "head_dim": None,
+        "seq": None,
+        "feat": None,
+    }
+)
+
+
+def _axis_sizes(mesh) -> Mapping[str, int]:
+    # works for both Mesh and AbstractMesh (tests use the latter)
+    return dict(mesh.shape)
+
+
+def partition_spec(
+    shape: Sequence[int],
+    logical_axes: Sequence[Optional[str]],
+    mesh: Mesh,
+    rules: AxisRules = DEFAULT_RULES,
+) -> P:
+    """Build a PartitionSpec for ``shape`` with divisibility fallback.
+
+    A mesh axis may be used at most once across dims (first dim wins);
+    non-divisible dims replicate.
+    """
+    if len(shape) != len(logical_axes):
+        raise ValueError(
+            f"shape {tuple(shape)} and logical axes {tuple(logical_axes)} "
+            "must have equal rank"
+        )
+    sizes = _axis_sizes(mesh)
+    used: set[str] = set()
+    out: list[MeshAxes] = []
+    for dim, logical in zip(shape, logical_axes):
+        axes = rules.mesh_axes(logical)
+        if axes is None:
+            out.append(None)
+            continue
+        if isinstance(axes, str):
+            axes = (axes,)
+        # only mesh axes that exist on this mesh and are still free
+        axes = tuple(a for a in axes if a in sizes and a not in used)
+        total = math.prod(sizes[a] for a in axes) if axes else 1
+        if axes and dim % total == 0 and total > 1:
+            out.append(axes if len(axes) > 1 else axes[0])
+            used.update(axes)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def logical_sharding(
+    shape: Sequence[int],
+    logical_axes: Sequence[Optional[str]],
+    mesh: Mesh,
+    rules: AxisRules = DEFAULT_RULES,
+) -> NamedSharding:
+    return NamedSharding(mesh, partition_spec(shape, logical_axes, mesh, rules))
+
+
+def shard_specs(tree_of_specs, mesh: Mesh, rules: AxisRules = DEFAULT_RULES):
+    """Map a pytree of ``ParamSpec`` (see repro.models.module) to shardings."""
+    from repro.models.module import ParamSpec  # local import, avoid cycle
+
+    def one(spec):
+        if isinstance(spec, ParamSpec):
+            return logical_sharding(spec.shape, spec.axes, mesh, rules)
+        raise TypeError(f"expected ParamSpec, got {type(spec)}")
+
+    return jax.tree.map(one, tree_of_specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def constrain(x: jax.Array, logical_axes, mesh: Mesh, rules: AxisRules = DEFAULT_RULES):
+    """with_sharding_constraint by logical axes (no-op outside jit tracing)."""
+    spec = partition_spec(x.shape, logical_axes, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,40 @@
+"""Helpers bridging param spec trees and train-state shardings."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def abstract_opt_state(params_abstract, params_shardings, mesh: Mesh):
+    """(abstract, shardings) for the AdamW state matching a params tree.
+
+    Moments inherit the parameter layout (fp32); the step counter is
+    replicated. Mirrors repro.train.optimizer.init_opt_state.
+    """
+    m_abs = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, jnp.float32), params_abstract
+    )
+    abstract = {
+        "m": m_abs,
+        "v": jax.tree.map(lambda a: a, m_abs),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    shardings = {
+        "m": params_shardings,
+        "v": jax.tree.map(lambda s: s, params_shardings),
+        "step": NamedSharding(mesh, P()),
+    }
+    return abstract, shardings
+
+
+def tree_shardings(abstract_tree, mesh: Mesh, axes_fn):
+    """Shardings for an arbitrary abstract tree via axes_fn(path)->axes."""
+    from repro.distributed.partitioning import DEFAULT_RULES, partition_spec
+
+    def one(path, a):
+        axes = axes_fn(path)
+        return NamedSharding(mesh, partition_spec(a.shape, axes, mesh, DEFAULT_RULES))
+
+    return jax.tree_util.tree_map_with_path(one, abstract_tree)

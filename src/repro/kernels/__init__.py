@@ -1,0 +1,5 @@
+# Pallas TPU kernels for the compute hot-spots of the paper's workflow:
+#   l2nn   — fused L2 distance + argmin   (index build: descriptor -> leaf)
+#   l2topk — fused L2 distance + top-k    (search: tile x query-slab k-NN)
+# Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+# wrapper with impl selection), ref.py (pure-jnp oracle).

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for fused (flash) attention.
+
+Semantics: grouped-query causal attention with optional sliding window —
+exactly ``repro.models.transformer.attend`` with q_pos/kv_pos = arange.
+
+  q: (B, Sq, Hq, hd); k, v: (B, Skv, Hkv, hd); Hq % Hkv == 0
+  causal mask uses absolute positions with q offset = Skv - Sq
+  window > 0 limits attention to the last ``window`` positions.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, window: int = -1):
+    B, Sq, Hq, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, hd)
+    logits = jnp.einsum(
+        "bqkgh,bskh->bkgqs", qg, k, preferred_element_type=jnp.float32
+    ) * (1.0 / math.sqrt(hd))
+    q_pos = jnp.arange(Sq) + (Skv - Sq)
+    kv_pos = jnp.arange(Skv)
+    dist = q_pos[:, None] - kv_pos[None, :]
+    mask = dist >= 0
+    if window > 0:
+        mask &= dist < window
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+    return out.reshape(B, Sq, Hq, hd)

@@ -1,0 +1,1 @@
+from repro.kernels.l2nn.ops import l2_nearest  # noqa: F401

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for fused L2 nearest-centroid assignment.
+
+Given x (N, d) and centroids (C, d), return
+  idx  (N,) int32   — argmin_c ||x - c||^2 (first index on ties)
+  dist (N,) float32 — the true squared distance at the argmin
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.distance import nearest
+
+
+def l2_nearest_ref(x, centroids):
+    idx, dist = nearest(x, centroids)
+    return idx.astype(jnp.int32), dist.astype(jnp.float32)

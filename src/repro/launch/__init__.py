@@ -1,0 +1,3 @@
+# Launchers: mesh.py (production meshes), dryrun.py (multi-pod lower+compile
+# + roofline capture; sets XLA_FLAGS before any jax import), train.py,
+# serve.py (batched search serving), index.py (streaming index jobs).

@@ -1,0 +1,128 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove every (architecture x input shape x mesh) cell
+lowers, SPMD-partitions, and compiles — and capture its roofline terms.
+
+The two lines above MUST precede any jax import (jax locks the device count
+at first init); everything else is imported lazily below them.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-3b \
+      --shape train_4k [--multi-pod] [--out results.jsonl]
+  PYTHONPATH=src python -m repro.launch.dryrun --list
+One cell per process is recommended (compiles are memory-hungry); the
+benchmark driver scripts/run_dryruns.sh does exactly that.
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool, verbose: bool = True) -> dict:
+    import jax
+
+    from repro.configs import REGISTRY
+    from repro.launch import roofline as rl
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cell = REGISTRY[arch].cell(shape)
+    rec = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": cell.kind,
+        "model_flops": cell.model_flops,
+        "n_devices": len(jax.devices()),
+    }
+    if cell.skip:
+        rec["status"] = "skip"
+        rec["skip_reason"] = cell.skip
+        return rec
+    t0 = time.time()
+    lowered = cell.lower(mesh)
+    rec["lower_s"] = round(time.time() - t0, 2)
+    t0 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 2)
+    rec["status"] = "ok"
+    mem = rl.memory_stats(compiled)
+    roof = rl.analyze(compiled)
+    rec["memory"] = mem
+    rec["roofline"] = roof.as_dict()
+    rec["model_flops_per_device"] = cell.model_flops / len(jax.devices())
+    if roof.flops > 0:
+        rec["useful_flops_ratio"] = rec["model_flops_per_device"] / roof.flops
+    if verbose:
+        print(f"== {arch} / {shape} on {rec['mesh']} ==")
+        print("memory_analysis:", json.dumps(mem))
+        print(
+            "cost_analysis: flops/device={:.3e} bytes/device={:.3e}".format(
+                roof.flops, roof.hbm_bytes
+            )
+        )
+        print(
+            "roofline: compute={:.4f}s memory={:.4f}s collective={:.4f}s"
+            " dominant={}".format(
+                roof.t_compute, roof.t_memory, roof.t_collective, roof.dominant
+            )
+        )
+        print("collectives:", json.dumps(roof.collectives))
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true", help="every cell, in-process")
+    ap.add_argument("--out", help="append JSONL records here")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args(argv)
+
+    from repro.configs import REGISTRY
+
+    if args.list:
+        for name, arch in REGISTRY.items():
+            print(name, "->", ", ".join(arch.cells))
+        return 0
+
+    jobs = []
+    if args.all:
+        for name, arch in REGISTRY.items():
+            for shape in arch.cells:
+                jobs.append((name, shape))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required (or --all / --list)")
+        jobs.append((args.arch, args.shape))
+
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+    rc = 0
+    for arch, shape in jobs:
+        for mp in meshes:
+            try:
+                rec = run_cell(arch, shape, multi_pod=mp)
+            except Exception as e:  # noqa: BLE001 - report and continue
+                rec = {
+                    "arch": arch,
+                    "shape": shape,
+                    "mesh": "2x16x16" if mp else "16x16",
+                    "status": "error",
+                    "error": repr(e)[:2000],
+                }
+                print(f"== {arch} / {shape} FAILED: {e!r}", file=sys.stderr)
+                rc = 1
+            if args.out:
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(rec) + "\n")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,371 @@
+"""While-aware cost model over optimized (post-SPMD) HLO text.
+
+XLA's built-in ``compiled.cost_analysis()`` counts a ``while`` body ONCE —
+for scan-over-layers models that undercounts flops/bytes by ~n_layers x.
+This parser walks the printed HLO module, resolves operand shapes from each
+computation's def lines, and multiplies loop bodies by the trip count XLA
+itself records in ``backend_config={"known_trip_count":{"n":...}}``.
+
+Cost model (per device — the module is the per-partition SPMD program):
+  * flops       — dot ops: 2 * prod(out) * prod(lhs contracting dims)
+                  (+ reduces at 1 flop/element; elementwise fusions are
+                  ignored: matmul-dominated workloads, VPU not the wall)
+  * hbm bytes   — per top-level op: operands + outputs (a fusion is one
+                  kernel: reads its params, writes its outputs); free ops
+                  (bitcast/tuple/get-tuple-element/parameter/constant)
+                  excluded; while accounted via body x trip
+  * wire bytes  — collective ops with ring-algorithm estimates:
+                  all-gather out-in, all-reduce 2*in, reduce-scatter in-out,
+                  all-to-all in, collective-permute out
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_TYPE_RE = re.compile(r"\b([a-z]\d*[a-z0-9]*)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(ROOT\s+)?(%[\w.\-]+)\s*=\s*(.*)$")
+_OPND_RE = re.compile(r"%[\w.\-]+")
+_TRIP_RE = re.compile(r'known_trip_count\D+(\d+)')
+_CALLS_RE = re.compile(r"calls=(%[\w.\-]+)")
+_COND_BODY_RE = re.compile(r"condition=(%[\w.\-]+).*?body=(%[\w.\-]+)")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_META_RE = re.compile(r'op_name="([^"]+)"')
+
+
+def _source_key(rest: str, fallback: str) -> str:
+    m = _META_RE.search(rest)
+    if not m:
+        return fallback
+    name = m.group(1)
+    return re.sub(r"^jit\([^)]*\)/", "", name)
+
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shapes_in(text: str):
+    """[(dtype, [dims...]), ...] for every array type token in text."""
+    out = []
+    for dt, dims in _TYPE_RE.findall(text):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _bytes_of(shapes) -> int:
+    return sum(
+        _DTYPE_BYTES[dt] * (math.prod(dims) if dims else 1) for dt, dims in shapes
+    )
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    wire_bytes: float = 0.0
+    wire_by_op: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {c: 0.0 for c in _COLLECTIVES}
+    )
+    unknown_trip_whiles: int = 0
+    # per source-op attribution (metadata op_name), for the perf loop
+    by_source: Dict[str, list] = dataclasses.field(default_factory=dict)
+
+    def _merge_source(self, o: "Cost", scale: float = 1.0):
+        for k, (f, h, w) in o.by_source.items():
+            cur = self.by_source.get(k, [0.0, 0.0, 0.0])
+            self.by_source[k] = [
+                cur[0] + f * scale, cur[1] + h * scale, cur[2] + w * scale
+            ]
+
+    def add_source(self, key: str, f: float, h: float, w: float):
+        cur = self.by_source.get(key, [0.0, 0.0, 0.0])
+        self.by_source[key] = [cur[0] + f, cur[1] + h, cur[2] + w]
+
+    def __iadd__(self, o: "Cost"):
+        self.flops += o.flops
+        self.hbm_bytes += o.hbm_bytes
+        self.wire_bytes += o.wire_bytes
+        for k, v in o.wire_by_op.items():
+            self.wire_by_op[k] = self.wire_by_op.get(k, 0.0) + v
+        self.unknown_trip_whiles += o.unknown_trip_whiles
+        self._merge_source(o)
+        return self
+
+    def scaled(self, f: float) -> "Cost":
+        c = Cost(
+            flops=self.flops * f,
+            hbm_bytes=self.hbm_bytes * f,
+            wire_bytes=self.wire_bytes * f,
+            wire_by_op={k: v * f for k, v in self.wire_by_op.items()},
+            unknown_trip_whiles=self.unknown_trip_whiles,
+        )
+        c._merge_source(self, f)
+        return c
+
+    def top_sources(self, n=15, key="hbm"):
+        idx = {"flops": 0, "hbm": 1, "wire": 2}[key]
+        rows = sorted(
+            self.by_source.items(), key=lambda kv: -kv[1][idx]
+        )[:n]
+        return [(k, v[0], v[1], v[2]) for k, v in rows]
+
+
+def _split_computations(text: str) -> Dict[str, list]:
+    """name -> list of body lines. Entry computation keyed '__entry__' too."""
+    comps: Dict[str, list] = {}
+    cur: Optional[str] = None
+    entry = None
+    for line in text.splitlines():
+        if cur is None:
+            m = re.match(r"^(ENTRY\s+)?(%[\w.\-]+)\s*\(.*->.*\{", line)
+            if m:
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    entry = cur
+        else:
+            if line.startswith("}"):
+                cur = None
+            else:
+                comps[cur].append(line)
+    if entry:
+        comps["__entry__"] = comps[entry]
+    return comps
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.comps = _split_computations(hlo_text)
+        self._memo: Dict[str, Cost] = {}
+        self._param_reads: Dict[str, float] = {}
+
+    def total(self) -> Cost:
+        if "__entry__" not in self.comps:
+            return Cost()
+        return self._comp_cost("__entry__")
+
+    # ------------------------------------------------------------------
+    def _effective_param_reads(self, name: str) -> float:
+        """Bytes a fusion actually reads from its operands: a parameter used
+        ONLY by dynamic-slice/gather reads just the slices, not the array
+        (the scan-over-layers case: stacked params sliced per trip)."""
+        if name in self._param_reads:
+            return self._param_reads[name]
+        lines = self.comps.get(name, [])
+        symbols: Dict[str, list] = {}
+        params: Dict[str, float] = {}
+        uses: Dict[str, list] = {}
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            var, rest = m.group(2), m.group(3)
+            shapes = _shapes_in(rest.split(" ", 1)[0])
+            symbols[var] = shapes
+            om = re.search(r"([a-z][a-z0-9\-]*)\(", rest)
+            op = om.group(1) if om else ""
+            if op == "parameter":
+                params[var] = float(_bytes_of(shapes))
+            else:
+                args = rest[om.end() - 1:] if om else ""
+                for ref in _OPND_RE.findall(args.split("),", 1)[0]):
+                    uses.setdefault(ref, []).append((op, var))
+        total = 0.0
+        for pvar, pbytes in params.items():
+            pu = uses.get(pvar, [])
+            if pu and all(op in ("dynamic-slice", "gather") for op, _ in pu):
+                total += sum(_bytes_of(symbols.get(v, [])) for _, v in pu)
+            else:
+                total += pbytes
+        self._param_reads[name] = total
+        return total
+
+    # ------------------------------------------------------------------
+    def _comp_cost(self, name: str) -> Cost:
+        if name in self._memo:
+            return self._memo[name]
+        self._memo[name] = Cost()  # cycle guard
+        lines = self.comps.get(name, [])
+        # pass 1: symbol table of def -> output shapes
+        symbols: Dict[str, list] = {}
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            var, rest = m.group(2), m.group(3)
+            # output type(s) = everything before the op name token
+            op_split = re.match(r"^((?:\([^)]*\)|\S+)\s)", rest)
+            head = op_split.group(1) if op_split else rest.split(" ", 1)[0]
+            symbols[var] = _shapes_in(head)
+        total = Cost()
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            rest = m.group(3)
+            # op name = first bare token after the type annotation
+            om = re.search(r"([a-z][a-z0-9\-]*)\(", rest)
+            if not om:
+                continue
+            op = om.group(1)
+            if op in _FREE_OPS or op.endswith("-done"):
+                continue
+            var = m.group(2)
+            out_shapes = symbols.get(var, [])
+            out_bytes = _bytes_of(out_shapes)
+            # operand refs (inside the top-level parens only, best effort)
+            args_text = rest[om.end() - 1:]
+            opnd_refs = _OPND_RE.findall(args_text.split("),", 1)[0])
+            opnd_shapes = [s for r in opnd_refs for s in symbols.get(r, [])]
+            in_bytes = _bytes_of(opnd_shapes)
+
+            base = op[:-6] if op.endswith("-start") else op
+            if base == "while":
+                cb = _COND_BODY_RE.search(rest)
+                trip_m = _TRIP_RE.search(rest)
+                trip = int(trip_m.group(1)) if trip_m else 1
+                inner = Cost()
+                if cb:
+                    inner += self._comp_cost(cb.group(2))
+                    inner += self._comp_cost(cb.group(1))
+                if not trip_m:
+                    inner.unknown_trip_whiles += 1
+                total += inner.scaled(trip)
+                continue
+            if base in ("call", "fusion"):
+                cm = _CALLS_RE.search(rest)
+                if cm and base == "call":
+                    total += self._comp_cost(cm.group(1))
+                    total += Cost(hbm_bytes=in_bytes + out_bytes)
+                elif cm:  # fusion: flops/wire from interior; reads are the
+                    # interior's *effective* parameter reads (slice-aware)
+                    interior = self._comp_cost(cm.group(1))
+                    reads = self._effective_param_reads(cm.group(1))
+                    c = Cost(flops=interior.flops,
+                             wire_bytes=interior.wire_bytes,
+                             wire_by_op=dict(interior.wire_by_op),
+                             hbm_bytes=reads + out_bytes)
+                    for k2, (f2, _h2, w2) in interior.by_source.items():
+                        if f2 or w2:
+                            c.add_source(k2, f2, 0.0, w2)
+                    c.add_source(_source_key(rest, "fusion"),
+                                 0.0, reads + out_bytes, 0.0)
+                    total += c
+                else:
+                    total += Cost(hbm_bytes=in_bytes + out_bytes)
+                continue
+            if base == "conditional":
+                for cn in re.findall(r"(?:branch_computations=\{([^}]*)\}|"
+                                     r"true_computation=(%[\w.\-]+)|"
+                                     r"false_computation=(%[\w.\-]+))", rest):
+                    for grp in cn:
+                        for ref in _OPND_RE.findall(grp or ""):
+                            total += self._comp_cost(ref)
+                total += Cost(hbm_bytes=in_bytes + out_bytes)
+                continue
+            if base in _COLLECTIVES:
+                if base == "all-gather":
+                    wire = max(0, out_bytes - in_bytes) or out_bytes
+                elif base == "all-reduce":
+                    wire = 2 * in_bytes if in_bytes else 2 * out_bytes
+                elif base == "reduce-scatter":
+                    wire = max(0, in_bytes - out_bytes) or in_bytes
+                elif base == "all-to-all":
+                    wire = in_bytes or out_bytes
+                else:
+                    wire = out_bytes or in_bytes
+                c = Cost(hbm_bytes=in_bytes + out_bytes, wire_bytes=float(wire))
+                c.wire_by_op[base] += float(wire)
+                c.add_source(_source_key(rest, base),
+                             0.0, in_bytes + out_bytes, float(wire))
+                total += c
+                continue
+            if base == "dot":
+                lhs_contract = _LHS_CONTRACT_RE.search(rest)
+                flops = 0.0
+                if lhs_contract and opnd_refs:
+                    lhs_shapes = symbols.get(opnd_refs[0], [])
+                    if lhs_shapes:
+                        dims = lhs_shapes[0][1]
+                        cdims = [
+                            int(d)
+                            for d in lhs_contract.group(1).split(",")
+                            if d
+                        ]
+                        contract = math.prod(
+                            dims[d] for d in cdims if d < len(dims)
+                        )
+                        out_elems = sum(
+                            math.prod(s[1]) if s[1] else 1 for s in out_shapes
+                        )
+                        flops = 2.0 * out_elems * contract
+                c = Cost(flops=flops, hbm_bytes=in_bytes + out_bytes)
+                c.add_source(_source_key(rest, "dot"),
+                             flops, in_bytes + out_bytes, 0.0)
+                total += c
+                continue
+            if base in ("reduce", "reduce-window"):
+                in_elems = sum(
+                    math.prod(s[1]) if s[1] else 1 for s in opnd_shapes
+                )
+                c = Cost(flops=float(in_elems),
+                         hbm_bytes=in_bytes + out_bytes)
+                c.add_source(_source_key(rest, base),
+                             float(in_elems), in_bytes + out_bytes, 0.0)
+                total += c
+                continue
+            if base in ("dynamic-slice", "gather"):
+                # reads just the slice, writes the slice
+                c = Cost(hbm_bytes=2.0 * out_bytes)
+                c.add_source(_source_key(rest, base), 0.0, 2.0 * out_bytes, 0.0)
+                total += c
+                continue
+            if base == "dynamic-update-slice":
+                # reads + writes the update region (operand 1)
+                upd = (
+                    _bytes_of(symbols.get(opnd_refs[1], []))
+                    if len(opnd_refs) > 1
+                    else out_bytes
+                )
+                c = Cost(hbm_bytes=2.0 * upd)
+                c.add_source(_source_key(rest, base), 0.0, 2.0 * upd, 0.0)
+                total += c
+                continue
+            if base == "scatter":
+                upd = (
+                    _bytes_of(symbols.get(opnd_refs[-1], []))
+                    if opnd_refs
+                    else out_bytes
+                )
+                c = Cost(hbm_bytes=3.0 * upd)
+                c.add_source(_source_key(rest, base), 0.0, 3.0 * upd, 0.0)
+                total += c
+                continue
+            # everything else: IO bytes only (copy, sort, scatter, gather,
+            # dynamic-slice, dynamic-update-slice, rng, convert, custom-call)
+            c = Cost(hbm_bytes=in_bytes + out_bytes)
+            c.add_source(_source_key(rest, base), 0.0, in_bytes + out_bytes, 0.0)
+            total += c
+        self._memo[name] = total
+        return total
+
+
+def analyze_text(hlo_text: str) -> Cost:
+    return HloCostModel(hlo_text).total()

@@ -1,0 +1,152 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+Three terms (seconds, per chip) against TPU v5e constants:
+
+  compute    = HLO_FLOPs / peak_FLOPs            (cost_analysis, per-device)
+  memory     = HLO_bytes / HBM_bw                (cost_analysis, per-device)
+  collective = wire_bytes / ICI_link_bw          (parsed from optimized HLO)
+
+``collective_bytes`` parses the post-SPMD optimized HLO text: every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+op contributes its estimated per-chip wire traffic (ring-algorithm
+estimates; the (S-1)/S factor is folded to 1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+#: TPU v5e per-chip hardware model (per task spec)
+PEAK_FLOPS_BF16 = 197e12
+HBM_BW = 819e9
+ICI_LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z]+\d*)\[([0-9,]*)\]")
+
+
+def _tensor_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-op-type estimated wire bytes (per chip) from optimized HLO."""
+    out: Dict[str, float] = {c: 0.0 for c in _COLLECTIVES}
+    out["ops"] = 0
+    for line in hlo_text.splitlines():
+        op = next(
+            (c for c in _COLLECTIVES if f" {c}(" in line or f" {c}-start(" in line),
+            None,
+        )
+        if op is None:
+            continue
+        # "-done" ops repeat the shape of their "-start"; count starts only
+        if f"{op}-done" in line:
+            continue
+        idx = line.find(f" {op}")
+        out_types = _SHAPE_RE.findall(line[:idx])
+        in_types = _SHAPE_RE.findall(line[idx:])
+        out_bytes = sum(_tensor_bytes(d, s) for d, s in out_types)
+        in_bytes = sum(_tensor_bytes(d, s) for d, s in in_types)
+        if op == "all-gather":
+            wire = max(0, out_bytes - in_bytes) or out_bytes
+        elif op == "all-reduce":
+            wire = 2 * in_bytes if in_bytes else 2 * out_bytes
+        elif op == "reduce-scatter":
+            wire = max(0, in_bytes - out_bytes) or in_bytes
+        elif op == "all-to-all":
+            wire = in_bytes or out_bytes
+        else:  # collective-permute
+            wire = out_bytes or in_bytes
+        out[op] += float(wire)
+        out["ops"] += 1
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float  # per-device HLO flops
+    hbm_bytes: float  # per-device HLO bytes accessed
+    wire_bytes: float  # per-device collective bytes
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    dominant: str
+    collectives: Dict[str, float]
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def analyze(compiled) -> Roofline:
+    """Three-term roofline from the compiled per-device module.
+
+    Uses the while-aware HLO text cost model (repro.launch.hlo_cost): XLA's
+    own cost_analysis counts loop bodies once, undercounting scanned models
+    by ~n_layers x; XLA's numbers are kept as cross-check fields.
+    """
+    from repro.launch import hlo_cost
+
+    text = compiled.as_text()
+    c = hlo_cost.analyze_text(text)
+    xla_cost = compiled.cost_analysis() or {}
+    t_c = c.flops / PEAK_FLOPS_BF16
+    t_m = c.hbm_bytes / HBM_BW
+    t_x = c.wire_bytes / ICI_LINK_BW
+    dom = max(
+        (("compute", t_c), ("memory", t_m), ("collective", t_x)),
+        key=lambda kv: kv[1],
+    )[0]
+    coll = dict(c.wire_by_op)
+    coll["total"] = c.wire_bytes
+    coll["unknown_trip_whiles"] = c.unknown_trip_whiles
+    coll["xla_flops_while_once"] = float(xla_cost.get("flops", 0.0) or 0.0)
+    coll["xla_bytes_while_once"] = float(
+        xla_cost.get("bytes accessed", 0.0) or 0.0
+    )
+    return Roofline(
+        flops=c.flops,
+        hbm_bytes=c.hbm_bytes,
+        wire_bytes=c.wire_bytes,
+        t_compute=t_c,
+        t_memory=t_m,
+        t_collective=t_x,
+        dominant=dom,
+        collectives=coll,
+    )
+
+
+def memory_stats(compiled) -> dict:
+    try:
+        m = compiled.memory_analysis()
+        return {
+            "argument_bytes": int(m.argument_size_in_bytes),
+            "output_bytes": int(m.output_size_in_bytes),
+            "temp_bytes": int(m.temp_size_in_bytes),
+            "alias_bytes": int(m.alias_size_in_bytes),
+            "code_bytes": int(m.generated_code_size_in_bytes),
+        }
+    except Exception as e:  # pragma: no cover - backend-specific
+        return {"error": repr(e)}

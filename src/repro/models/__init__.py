@@ -1,0 +1,5 @@
+# Architecture zoo: pure-JAX models with pytree params built from ParamSpec
+# trees (repro.models.module). One family module per kernel regime:
+#   transformer.py — dense/GQA/MoE/sliding-window LMs (scan-over-layers)
+#   gnn.py         — GIN message passing via segment_sum over edge lists
+#   recsys.py      — DLRM / DIN / DIEN / two-tower (EmbeddingBag substrate)

@@ -1,0 +1,116 @@
+"""GIN (Graph Isomorphism Network, arXiv:1810.00826) via segment ops.
+
+JAX has no CSR SpMM; message passing is built (as the taxonomy prescribes)
+from an edge list: gather source features -> ``jax.ops.segment_sum`` into
+destinations. Edges shard over the data axes (the paper's HDFS-block analog
+for graphs); node features are kept on the model axis for storage and
+gathered for compute — the roofline for ogb_products is intentionally
+collective-dominated and is a hillclimb candidate (EXPERIMENTS.md §Perf).
+
+Padding convention: padded edges carry weight 0 (they still scatter, into
+node 0, but contribute nothing); padded nodes carry label -1 (masked out of
+the loss).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.module import ParamSpec, shard
+
+
+@dataclasses.dataclass(frozen=True)
+class GINConfig:
+    name: str
+    n_layers: int = 5
+    d_in: int = 1433
+    d_hidden: int = 64
+    n_classes: int = 7
+    train_eps: bool = True  # learnable eps (GIN-eps)
+    dtype: str = "float32"
+
+    @property
+    def compute_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def param_specs(self):
+        L, h = self.n_layers, self.d_hidden
+        return {
+            "in_w1": ParamSpec((self.d_in, h), ("feat", "ffn")),
+            "in_b1": ParamSpec((h,), (None,), init="zeros"),
+            "in_w2": ParamSpec((h, h), (None, "ffn")),
+            "in_b2": ParamSpec((h,), (None,), init="zeros"),
+            # layers 1..L-1 stacked (uniform dims)
+            "w1": ParamSpec((L - 1, h, h), ("layers", None, "ffn")),
+            "b1": ParamSpec((L - 1, h), ("layers", None), init="zeros"),
+            "w2": ParamSpec((L - 1, h, h), ("layers", None, "ffn")),
+            "b2": ParamSpec((L - 1, h), ("layers", None), init="zeros"),
+            "eps": ParamSpec((L,), (None,), init="zeros"),
+            "out_w": ParamSpec((h, self.n_classes), (None, None)),
+            "out_b": ParamSpec((self.n_classes,), (None,), init="zeros"),
+        }
+
+    def param_count(self) -> int:
+        from repro.models.module import param_count
+
+        return param_count(self.param_specs())
+
+
+def _aggregate(h, src, dst, edge_w, n_nodes):
+    """Sum aggregation over the edge list (the GNN message-passing op)."""
+    msg = h[src] * edge_w[:, None].astype(h.dtype)
+    msg = shard(msg, "edges", None)
+    return jax.ops.segment_sum(msg, dst, num_segments=n_nodes)
+
+
+def forward(params, cfg: GINConfig, batch):
+    """batch: feats (N, d_in), edges (2, E) int32, edge_w (E,) — logits (N, C)."""
+    feats = batch["feats"].astype(cfg.compute_dtype)
+    src, dst = batch["edges"][0], batch["edges"][1]
+    edge_w = batch.get("edge_w", jnp.ones(src.shape, cfg.compute_dtype))
+    n = feats.shape[0]
+
+    eps = params["eps"].astype(cfg.compute_dtype)
+    h = feats
+    # layer 0 (input dims differ)
+    agg = _aggregate(h, src, dst, edge_w, n)
+    z = (1.0 + eps[0]) * h + agg
+    h = jax.nn.relu(z @ params["in_w1"].astype(z.dtype) + params["in_b1"].astype(z.dtype))
+    h = jax.nn.relu(h @ params["in_w2"].astype(h.dtype) + params["in_b2"].astype(h.dtype))
+    h = shard(h, "nodes", None)
+
+    def body(h, layer):
+        agg = _aggregate(h, src, dst, edge_w, n)
+        z = (1.0 + layer["eps"]) * h + agg
+        y = jax.nn.relu(z @ layer["w1"] + layer["b1"])
+        y = jax.nn.relu(y @ layer["w2"] + layer["b2"])
+        return shard(y, "nodes", None), None
+
+    xs = {
+        "w1": params["w1"].astype(h.dtype),
+        "b1": params["b1"].astype(h.dtype),
+        "w2": params["w2"].astype(h.dtype),
+        "b2": params["b2"].astype(h.dtype),
+        "eps": eps[1:],
+    }
+    h, _ = jax.lax.scan(body, h, xs)
+    return h @ params["out_w"].astype(h.dtype) + params["out_b"].astype(h.dtype)
+
+
+def loss_fn(params, cfg: GINConfig, batch):
+    """Node-classification CE over labels >= 0 (padding/masked = -1)."""
+    logits = forward(params, cfg, batch).astype(jnp.float32)
+    labels = batch["labels"]
+    valid = labels >= 0
+    safe = jnp.clip(labels, 0)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, safe[:, None], axis=-1)[:, 0]
+    per_node = (logz - ll) * valid
+    loss = jnp.sum(per_node) / jnp.maximum(1, jnp.sum(valid))
+    acc = jnp.sum((jnp.argmax(logits, -1) == labels) * valid) / jnp.maximum(
+        1, jnp.sum(valid)
+    )
+    return loss, {"loss": loss, "acc": acc}

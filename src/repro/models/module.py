@@ -1,0 +1,111 @@
+"""Minimal parameter-spec module system (no flax on the cluster image).
+
+A model is (a) a pytree of ``ParamSpec`` leaves describing every weight's
+shape/dtype/init/logical axes, and (b) pure apply functions over the
+materialised params pytree. One spec tree serves three consumers:
+
+  * ``init_params``     — real arrays for training/tests
+  * ``abstract_params`` — ShapeDtypeStructs for the multi-pod dry-run
+  * ``shard_specs``     — NamedShardings via the logical-axis rules
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    axes: tuple  # logical axis names, same rank as shape (None = replicated)
+    dtype: jnp.dtype = jnp.float32
+    init: str = "normal"  # normal | zeros | ones | uniform
+    scale: Optional[float] = None  # default: 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"rank mismatch: {self.shape} vs {self.axes}")
+
+
+def _is_spec(x):
+    return isinstance(x, ParamSpec)
+
+
+def init_one(spec: ParamSpec, key: jax.Array) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+    scale = spec.scale if spec.scale is not None else 1.0 / math.sqrt(max(1, fan_in))
+    if spec.init == "normal":
+        return (scale * jax.random.normal(key, spec.shape)).astype(spec.dtype)
+    if spec.init == "uniform":
+        return (
+            scale * jax.random.uniform(key, spec.shape, minval=-1.0, maxval=1.0)
+        ).astype(spec.dtype)
+    raise ValueError(f"unknown init {spec.init}")
+
+
+def init_params(spec_tree, key: jax.Array):
+    """Materialise every ParamSpec with a deterministic per-leaf key."""
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    arrays = [init_one(s, k) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, arrays)
+
+
+def abstract_params(spec_tree):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), spec_tree, is_leaf=_is_spec
+    )
+
+
+def param_count(spec_tree) -> int:
+    leaves = jax.tree.leaves(spec_tree, is_leaf=_is_spec)
+    return sum(math.prod(s.shape) for s in leaves)
+
+
+def param_bytes(spec_tree) -> int:
+    leaves = jax.tree.leaves(spec_tree, is_leaf=_is_spec)
+    return sum(math.prod(s.shape) * jnp.dtype(s.dtype).itemsize for s in leaves)
+
+
+# ---------------------------------------------------------------------------
+# sharding-context plumbing: model code calls ``shard(x, axes...)`` without
+# threading mesh/rules through every call; step builders install the context.
+# ---------------------------------------------------------------------------
+
+_CTX: list = []
+
+
+class shard_ctx:
+    """Context manager installing (mesh, rules) for ``shard`` constraints."""
+
+    def __init__(self, mesh, rules=None):
+        from repro.distributed.partitioning import DEFAULT_RULES
+
+        self.pair = (mesh, rules or DEFAULT_RULES)
+
+    def __enter__(self):
+        _CTX.append(self.pair)
+        return self
+
+    def __exit__(self, *exc):
+        _CTX.pop()
+        return False
+
+
+def shard(x: jax.Array, *axes) -> jax.Array:
+    """with_sharding_constraint by logical axes; no-op outside shard_ctx."""
+    if not _CTX:
+        return x
+    mesh, rules = _CTX[-1]
+    from repro.distributed.partitioning import constrain
+
+    return constrain(x, axes, mesh, rules)

@@ -1,0 +1,348 @@
+"""RecSys family: DLRM (arXiv:1906.00091), DIN (arXiv:1706.06978),
+DIEN (arXiv:1809.03672), two-tower retrieval (Yi et al., RecSys'19).
+
+The hot path is the sparse embedding lookup. JAX has no EmbeddingBag; it is
+built here from ``jnp.take`` + ``segment``-style reduction (multi-hot bags
+sum over the nnz axis with a validity mask). Tables shard row-wise over the
+``model`` axis (``table_rows`` rule) — the gather across shards is the
+routed-lookup pattern shared with the paper's index (DESIGN.md §5).
+
+``two-tower`` additionally exposes the paper's technique directly: its
+1M-candidate retrieval scoring can run dense (exact) or through the
+vocabulary-tree ANN index (repro.core), benchmarked against each other.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.module import ParamSpec, shard
+
+
+# ---------------------------------------------------------------------------
+# shared substrate
+# ---------------------------------------------------------------------------
+
+
+def embedding_bag(table, ids, *, mode="sum", valid=None):
+    """EmbeddingBag: table (V, D), ids (..., nnz) -> (..., D).
+
+    ``valid`` masks padding ids; mean mode divides by the bag size.
+    """
+    emb = jnp.take(table, ids, axis=0)  # (..., nnz, D)
+    if valid is not None:
+        emb = emb * valid[..., None].astype(emb.dtype)
+    out = jnp.sum(emb, axis=-2)
+    if mode == "mean":
+        denom = (
+            jnp.sum(valid, axis=-1, keepdims=True)
+            if valid is not None
+            else ids.shape[-1]
+        )
+        out = out / jnp.maximum(1, denom).astype(out.dtype)
+    return out
+
+
+def field_lookup(tables, ids):
+    """tables (F, V, D), ids (B, F) -> (B, F, D) one-hot-per-field lookup."""
+    return jax.vmap(lambda t, i: jnp.take(t, i, axis=0), in_axes=(0, 1), out_axes=1)(
+        tables, ids
+    )
+
+
+def mlp_specs(dims: Sequence[int], prefix: str, axes=(None, "ffn")):
+    specs = {}
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        specs[f"{prefix}_w{i}"] = ParamSpec((a, b), axes)
+        specs[f"{prefix}_b{i}"] = ParamSpec((b,), (None,), init="zeros")
+    return specs
+
+
+def mlp_apply(params, prefix: str, x, n: int, *, final_act=False):
+    for i in range(n):
+        x = x @ params[f"{prefix}_w{i}"].astype(x.dtype) + params[
+            f"{prefix}_b{i}"
+        ].astype(x.dtype)
+        if i + 1 < n or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+def bce_loss(logit, label):
+    """Numerically stable sigmoid BCE. logit (B,), label (B,) in {0,1}."""
+    logit = logit.astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logit, 0) - logit * label + jnp.log1p(jnp.exp(-jnp.abs(logit)))
+    )
+
+
+# ---------------------------------------------------------------------------
+# DLRM
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm-rm2"
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 64
+    vocab_per_field: int = 1_000_000
+    bot_mlp: tuple = (512, 256, 64)
+    top_mlp: tuple = (512, 512, 256, 1)
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        if self.bot_mlp[-1] != self.embed_dim:
+            raise ValueError(
+                f"DLRM bottom MLP must end at embed_dim "
+                f"({self.bot_mlp[-1]} != {self.embed_dim})"
+            )
+
+    @property
+    def compute_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def param_specs(self):
+        specs = {
+            "tables": ParamSpec(
+                (self.n_sparse, self.vocab_per_field, self.embed_dim),
+                (None, "table_rows", "embed"),
+                scale=0.01,
+            )
+        }
+        specs.update(mlp_specs((self.n_dense, *self.bot_mlp), "bot"))
+        n_pairs = (self.n_sparse + 1) * self.n_sparse // 2
+        top_in = self.bot_mlp[-1] + n_pairs
+        specs.update(mlp_specs((top_in, *self.top_mlp), "top"))
+        return specs
+
+    def param_count(self) -> int:
+        from repro.models.module import param_count
+
+        return param_count(self.param_specs())
+
+
+def dlrm_forward(params, cfg: DLRMConfig, batch):
+    """batch: dense (B, 13) float, sparse (B, 26) int32 -> logits (B,)."""
+    dense = batch["dense"].astype(cfg.compute_dtype)
+    dense = shard(dense, "batch", None)
+    d0 = mlp_apply(params, "bot", dense, len(cfg.bot_mlp), final_act=True)
+    embs = field_lookup(params["tables"].astype(cfg.compute_dtype), batch["sparse"])
+    embs = shard(embs, "batch", None, None)
+    z = jnp.concatenate([d0[:, None, :], embs], axis=1)  # (B, F+1, D)
+    gram = jnp.einsum("bfd,bgd->bfg", z, z, preferred_element_type=jnp.float32)
+    iu, ju = np.triu_indices(cfg.n_sparse + 1, k=1)
+    inter = gram[:, iu, ju].astype(cfg.compute_dtype)  # (B, pairs)
+    x = jnp.concatenate([d0, inter], axis=1)
+    out = mlp_apply(params, "top", x, len(cfg.top_mlp))
+    return out[:, 0]
+
+
+def dlrm_loss(params, cfg: DLRMConfig, batch):
+    logit = dlrm_forward(params, cfg, batch)
+    loss = bce_loss(logit, batch["label"])
+    return loss, {"loss": loss}
+
+
+# ---------------------------------------------------------------------------
+# DIN / DIEN
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DINConfig:
+    name: str = "din"
+    embed_dim: int = 18
+    seq_len: int = 100
+    vocab: int = 500_000
+    attn_mlp: tuple = (80, 40)
+    mlp: tuple = (200, 80)
+    gru_dim: int = 0  # >0 switches on the DIEN interest-evolution path
+    dtype: str = "float32"
+
+    @property
+    def compute_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def param_specs(self):
+        D = self.embed_dim
+        specs = {
+            "item_table": ParamSpec((self.vocab, D), ("table_rows", "embed"), scale=0.01)
+        }
+        if self.gru_dim:  # DIEN: GRU + AUGRU over the behaviour sequence
+            H = self.gru_dim
+            specs["gru_wx"] = ParamSpec((D, 3 * H), (None, "ffn"))
+            specs["gru_wh"] = ParamSpec((H, 3 * H), (None, "ffn"))
+            specs["gru_b"] = ParamSpec((3 * H,), (None,), init="zeros")
+            specs["augru_wx"] = ParamSpec((H, 3 * H), (None, "ffn"))
+            specs["augru_wh"] = ParamSpec((H, 3 * H), (None, "ffn"))
+            specs["augru_b"] = ParamSpec((3 * H,), (None,), init="zeros")
+            att_in = H + D
+            final_in = H + D
+        else:  # DIN: target attention over raw behaviour embeddings
+            att_in = 4 * D
+            final_in = 3 * D
+        specs.update(mlp_specs((att_in, *self.attn_mlp, 1), "att"))
+        specs.update(mlp_specs((final_in, *self.mlp, 1), "fin"))
+        return specs
+
+    def param_count(self) -> int:
+        from repro.models.module import param_count
+
+        return param_count(self.param_specs())
+
+
+def _gru_scan(x_seq, h0, wx, wh, b, *, a_seq=None):
+    """x_seq (T, B, D) -> h_seq (T, B, H). AUGRU when a_seq (T, B) given."""
+    H = h0.shape[-1]
+
+    def cell(h, inp):
+        x, a = inp
+        gates = x @ wx + h @ wh + b
+        r = jax.nn.sigmoid(gates[..., :H])
+        u = jax.nn.sigmoid(gates[..., H : 2 * H])
+        cand = jnp.tanh(x @ wx[:, 2 * H :] + (r * h) @ wh[:, 2 * H :] + b[2 * H :])
+        if a is not None:
+            u = u * a[..., None]  # attentional update gate (AUGRU)
+        h = (1.0 - u) * h + u * cand
+        return h, h
+
+    inputs = (x_seq, a_seq) if a_seq is not None else (x_seq, None)
+    if a_seq is None:
+        _, hs = jax.lax.scan(lambda h, x: cell(h, (x, None)), h0, x_seq)
+    else:
+        _, hs = jax.lax.scan(cell, h0, inputs)
+    return hs
+
+
+def din_forward(params, cfg: DINConfig, batch):
+    """batch: hist (B, T) int32 (0 = pad), target (B,) int32 -> logits (B,)."""
+    table = params["item_table"].astype(cfg.compute_dtype)
+    hist = batch["hist"]
+    target = batch["target"]
+    B, T = hist.shape
+    h_emb = jnp.take(table, hist, axis=0)  # (B, T, D)
+    t_emb = jnp.take(table, target, axis=0)  # (B, D)
+    h_emb = shard(h_emb, "batch", None, None)
+    valid = (hist > 0).astype(cfg.compute_dtype)  # (B, T)
+
+    if cfg.gru_dim:
+        H = cfg.gru_dim
+        hs = _gru_scan(
+            jnp.swapaxes(h_emb, 0, 1),
+            jnp.zeros((B, H), cfg.compute_dtype),
+            params["gru_wx"].astype(cfg.compute_dtype),
+            params["gru_wh"].astype(cfg.compute_dtype),
+            params["gru_b"].astype(cfg.compute_dtype),
+        )  # (T, B, H)
+        att_in = jnp.concatenate(
+            [hs, jnp.broadcast_to(t_emb[None], (T, B, t_emb.shape[-1]))], axis=-1
+        )
+        scores = mlp_apply(params, "att", att_in, len(cfg.attn_mlp) + 1)[..., 0]
+        scores = jax.nn.sigmoid(scores) * jnp.swapaxes(valid, 0, 1)  # (T, B)
+        h_final = _gru_scan(
+            hs,
+            jnp.zeros((B, H), cfg.compute_dtype),
+            params["augru_wx"].astype(cfg.compute_dtype),
+            params["augru_wh"].astype(cfg.compute_dtype),
+            params["augru_b"].astype(cfg.compute_dtype),
+            a_seq=scores,
+        )[-1]  # (B, H)
+        x = jnp.concatenate([h_final, t_emb], axis=-1)
+    else:
+        tb = jnp.broadcast_to(t_emb[:, None], h_emb.shape)
+        att_in = jnp.concatenate([h_emb, tb, h_emb - tb, h_emb * tb], axis=-1)
+        scores = mlp_apply(params, "att", att_in, len(cfg.attn_mlp) + 1)[..., 0]
+        scores = jax.nn.sigmoid(scores) * valid  # DIN: no softmax (paper §4)
+        pooled = jnp.einsum("btd,bt->bd", h_emb, scores.astype(h_emb.dtype))
+        x = jnp.concatenate([pooled, t_emb, pooled * t_emb], axis=-1)
+    out = mlp_apply(params, "fin", x, len(cfg.mlp) + 1)
+    return out[:, 0]
+
+
+def din_loss(params, cfg: DINConfig, batch):
+    logit = din_forward(params, cfg, batch)
+    loss = bce_loss(logit, batch["label"])
+    return loss, {"loss": loss}
+
+
+# ---------------------------------------------------------------------------
+# two-tower retrieval
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TwoTowerConfig:
+    name: str = "two-tower-retrieval"
+    embed_dim: int = 256  # final tower output dim
+    field_dim: int = 64
+    n_user_fields: int = 4
+    n_item_fields: int = 4
+    vocab_per_field: int = 100_000
+    tower_mlp: tuple = (1024, 512, 256)
+    temperature: float = 0.05
+    dtype: str = "float32"
+
+    @property
+    def compute_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def param_specs(self):
+        specs = {
+            "user_tables": ParamSpec(
+                (self.n_user_fields, self.vocab_per_field, self.field_dim),
+                (None, "table_rows", "embed"),
+                scale=0.01,
+            ),
+            "item_tables": ParamSpec(
+                (self.n_item_fields, self.vocab_per_field, self.field_dim),
+                (None, "table_rows", "embed"),
+                scale=0.01,
+            ),
+        }
+        u_in = self.n_user_fields * self.field_dim
+        i_in = self.n_item_fields * self.field_dim
+        specs.update(mlp_specs((u_in, *self.tower_mlp), "user"))
+        specs.update(mlp_specs((i_in, *self.tower_mlp), "item"))
+        return specs
+
+    def param_count(self) -> int:
+        from repro.models.module import param_count
+
+        return param_count(self.param_specs())
+
+
+def tower(params, cfg: TwoTowerConfig, prefix: str, ids):
+    tables = params[f"{prefix}_tables"].astype(cfg.compute_dtype)
+    embs = field_lookup(tables, ids)  # (B, F, D)
+    x = embs.reshape(ids.shape[0], -1)
+    x = shard(x, "batch", None)
+    x = mlp_apply(params, prefix, x, len(cfg.tower_mlp))
+    return x / jnp.maximum(1e-6, jnp.linalg.norm(x, axis=-1, keepdims=True))
+
+
+def twotower_loss(params, cfg: TwoTowerConfig, batch):
+    """In-batch sampled softmax (negatives = other rows of the batch)."""
+    u = tower(params, cfg, "user", batch["user_ids"])
+    it = tower(params, cfg, "item", batch["item_ids"])
+    logits = (u @ it.T).astype(jnp.float32) / cfg.temperature  # (B, B)
+    labels = jnp.arange(u.shape[0])
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.diagonal(logits)
+    loss = jnp.mean(logz - ll)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, {"loss": loss, "acc": acc}
+
+
+def twotower_score(params, cfg: TwoTowerConfig, batch):
+    """Retrieval scoring: one user against (Nc,) candidate items -> (Nc,)."""
+    u = tower(params, cfg, "user", batch["user_ids"])  # (1, D)
+    it = tower(params, cfg, "item", batch["cand_ids"])  # (Nc, D)
+    it = shard(it, "batch", None)
+    return (it @ u[0]).astype(jnp.float32)

@@ -1,0 +1,57 @@
+"""Gradient compression for the data-parallel wire (paper analog: map-output
+compression cut Hadoop's shuffle bytes 30%; bf16 halves ours, top-k cuts
+more). Both carry fp32 *error feedback* so compression noise does not
+accumulate (Seide et al. 2014 / Karimireddy et al. 2019 lineage).
+
+These transforms operate on the gradient pytree *before* the cross-replica
+reduction. In the explicit-DP train step (``make_train_step(dp_axis=...)``)
+the psum runs on the compressed representation inside shard_map; in the
+default pjit step they still bound optimizer-state bandwidth and serve as
+an ablation of compression noise.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def bf16_compress(grads, feedback):
+    """(compressed bf16 grads, new fp32 residual)."""
+
+    def one(g, r):
+        acc = g.astype(jnp.float32) + r
+        q = acc.astype(jnp.bfloat16)
+        return q, acc - q.astype(jnp.float32)
+
+    flat = jax.tree.map(one, grads, feedback)
+    comp = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    resid = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    return comp, resid
+
+
+def topk_compress(grads, feedback, *, fraction: float = 0.01):
+    """Magnitude top-k sparsification with error feedback.
+
+    Returns (sparse grads densified — zeros off-support, new residual).
+    The wire format on a real pod would be (values, indices); the dense
+    zero-filled form is numerically identical and psum-compatible.
+    """
+
+    def one(g, r):
+        acc = g.astype(jnp.float32) + r
+        flat = acc.reshape(-1)
+        k = max(1, int(flat.shape[0] * fraction))
+        thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+        mask = (jnp.abs(flat) >= thresh).astype(jnp.float32)
+        kept = flat * mask
+        return kept.reshape(acc.shape), (flat - kept).reshape(acc.shape)
+
+    pairs = jax.tree.map(one, grads, feedback)
+    comp = jax.tree.map(lambda t: t[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    resid = jax.tree.map(lambda t: t[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    return comp, resid

@@ -1,0 +1,77 @@
+"""AdamW in pure JAX (the cluster image carries no optax).
+
+fp32 moments regardless of param dtype; global-norm clipping; decoupled
+weight decay; linear-warmup cosine schedule helper.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: Union[float, Callable] = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: Optional[float] = 1.0
+
+
+def warmup_cosine(peak: float, warmup: int, total: int, floor: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * step / max(1, warmup)
+        frac = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = floor * peak + (1 - floor) * peak * 0.5 * (1 + jnp.cos(math.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+def init_opt_state(params):
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {
+        "m": zeros,
+        "v": jax.tree.map(jnp.copy, zeros),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    if cfg.clip_norm is not None:
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+    else:
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    lr = cfg.lr(step) if callable(cfg.lr) else cfg.lr
+    b1, b2 = cfg.b1, cfg.b2
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m_, v_):
+        mhat = m_ / bc1
+        vhat = v_ / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "step": step}, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,83 @@
+"""Train-step builders: microbatch accumulation + optimizer + compression.
+
+``make_train_step(loss_fn, opt_cfg)`` returns a jittable
+``(params, opt_state, batch) -> (params, opt_state, metrics)``.
+
+Options:
+  * ``microbatches=m`` — splits the batch's leading dim into m chunks and
+    accumulates grads in fp32 via ``lax.scan`` (activation memory / m,
+    compute-comm overlap: each chunk's backward overlaps the next chunk's
+    forward in the XLA schedule).
+  * ``compress="bf16"|"topk"`` — gradient compression with fp32 error
+    feedback carried inside opt_state (see grad_compress.py).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.train import grad_compress
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+def init_train_state(params, *, compress: Optional[str] = None):
+    state = init_opt_state(params)
+    if compress:
+        state["feedback"] = grad_compress.init_feedback(params)
+    return state
+
+
+def make_train_step(
+    loss_fn: Callable,
+    opt_cfg: AdamWConfig,
+    *,
+    microbatches: int = 1,
+    compress: Optional[str] = None,
+    topk_fraction: float = 0.01,
+):
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if microbatches == 1:
+            (loss, aux), grads = grad_fn(params, batch)
+            return grads, aux
+
+        def split(x):
+            return x.reshape((microbatches, x.shape[0] // microbatches) + x.shape[1:])
+
+        chunks = jax.tree.map(split, batch)
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def acc(carry, chunk):
+            (loss, aux), grads = grad_fn(params, chunk)
+            carry = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32) / microbatches, carry, grads
+            )
+            return carry, aux
+
+        grads, auxes = jax.lax.scan(acc, zero, chunks)
+        aux = jax.tree.map(lambda x: jnp.mean(x.astype(jnp.float32)), auxes)
+        return grads, aux
+
+    def train_step(params, opt_state, batch):
+        grads, aux = compute_grads(params, batch)
+        if compress == "bf16":
+            grads, fb = grad_compress.bf16_compress(grads, opt_state["feedback"])
+        elif compress == "topk":
+            grads, fb = grad_compress.topk_compress(
+                grads, opt_state["feedback"], fraction=topk_fraction
+            )
+        elif compress is not None:
+            raise ValueError(f"unknown compress {compress!r}")
+        feedback = fb if compress else None
+        core_state = {k: v for k, v in opt_state.items() if k != "feedback"}
+        params, core_state, metrics = adamw_update(params, grads, core_state, opt_cfg)
+        if feedback is not None:
+            core_state["feedback"] = feedback
+        metrics.update(aux)
+        return params, core_state, metrics
+
+    return train_step

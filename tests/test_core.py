@@ -1,0 +1,155 @@
+"""Core substrate: tree, routing/counting sort, dispatch, lookup."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dispatch import combine_rows, dispatch_rows, make_dispatch
+from repro.core.lookup import build_lookup
+from repro.core.route import SENTINEL, counting_layout, scatter_to_slots
+from repro.core.tree import build_tree, tree_assign
+
+
+# ---------------------------------------------------------------------------
+# counting sort / routing layout
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(1, 300),
+    n_dest=st.integers(1, 16),
+    capacity=st.integers(1, 64),
+    seed=st.integers(0, 2**30),
+)
+def test_counting_layout_properties(n, n_dest, capacity, seed):
+    dest = jax.random.randint(jax.random.PRNGKey(seed), (n,), 0, n_dest)
+    lay = counting_layout(dest, n_dest, capacity)
+    slot = np.array(lay.slot_of_row)
+    fits = np.array(lay.fits)
+    d = np.array(dest)
+    # every fitting row lands in its destination's slot range, no collisions
+    used = slot[fits]
+    assert len(np.unique(used)) == len(used)
+    assert ((used // capacity) == d[fits]).all()
+    # overflow = rows beyond capacity per destination
+    expect_drop = sum(
+        max(0, int((d == i).sum()) - capacity) for i in range(n_dest)
+    )
+    assert int(lay.overflow) == expect_drop
+    # stability: within a destination, earlier rows occupy earlier slots
+    for i in range(n_dest):
+        rows = np.flatnonzero((d == i) & fits)
+        assert (np.diff(slot[rows]) > 0).all() if len(rows) > 1 else True
+
+
+def test_scatter_to_slots_roundtrip():
+    dest = jnp.asarray([0, 1, 0, 2, 1, 0])
+    x = jnp.arange(6.0)[:, None] * jnp.ones((6, 3))
+    lay = counting_layout(dest, 3, 4)
+    buf = scatter_to_slots(lay, x, 3, 4)
+    buf = np.array(buf).reshape(3, 4, 3)
+    np.testing.assert_array_equal(buf[0, :3, 0], [0, 2, 5])
+    np.testing.assert_array_equal(buf[1, :2, 0], [1, 4])
+    np.testing.assert_array_equal(buf[2, :1, 0], [3])
+    assert (buf[0, 3:] == 0).all() and (buf[2, 1:] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# dispatch / combine (the MoE + index shared substrate)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(1, 200),
+    nb=st.integers(1, 8),
+    seed=st.integers(0, 2**30),
+)
+def test_dispatch_combine_roundtrip(n, nb, seed):
+    assign = jax.random.randint(jax.random.PRNGKey(seed), (n,), 0, nb)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (n, 5))
+    capacity = n  # ample: nothing dropped
+    d = make_dispatch(assign, nb, capacity)
+    assert int(d.overflow) == 0
+    buckets = dispatch_rows(d, x)
+    back = combine_rows(d, buckets)
+    np.testing.assert_allclose(np.array(back), np.array(x), rtol=1e-6)
+
+
+def test_dispatch_drops_are_counted_and_zero_filled():
+    assign = jnp.zeros((10,), jnp.int32)  # all to bucket 0
+    x = jnp.ones((10, 2))
+    d = make_dispatch(assign, 2, capacity=4)
+    assert int(d.overflow) == 6
+    back = np.array(combine_rows(d, dispatch_rows(d, x)))
+    assert (back[:4] == 1).all() and (back[4:] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# tree
+# ---------------------------------------------------------------------------
+
+
+def test_tree_build_shapes_and_determinism():
+    vecs = jax.random.normal(jax.random.PRNGKey(0), (2000, 16)) * 3
+    t1 = build_tree(vecs, (4, 8), key=jax.random.PRNGKey(7))
+    t2 = build_tree(vecs, (4, 8), key=jax.random.PRNGKey(7))
+    assert t1.fanouts == (4, 8) and t1.n_leaves == 32
+    assert t1.levels[0].shape == (4, 16)
+    assert t1.levels[1].shape == (4, 8, 16)
+    for a, b in zip(t1.levels, t2.levels):
+        np.testing.assert_array_equal(np.array(a), np.array(b))
+
+
+def test_tree_assign_matches_manual_traversal():
+    vecs = jax.random.normal(jax.random.PRNGKey(1), (500, 8))
+    tree = build_tree(vecs, (4, 4), key=jax.random.PRNGKey(2))
+    leaves = np.array(tree_assign(tree, vecs))
+    l0 = np.array(tree.levels[0])
+    l1 = np.array(tree.levels[1])
+    V = np.array(vecs)
+    for i in range(0, 500, 37):
+        b = ((V[i] - l0) ** 2).sum(1).argmin()
+        c = ((V[i] - l1[b]) ** 2).sum(1).argmin()
+        assert leaves[i] == b * 4 + c
+    assert leaves.min() >= 0 and leaves.max() < tree.n_leaves
+
+
+def test_tree_refinement_reduces_quantization_error():
+    vecs = jax.random.normal(jax.random.PRNGKey(3), (4000, 8)) * 2
+    t0 = build_tree(vecs, (8, 4), key=jax.random.PRNGKey(4), refine_iters=0)
+    t2 = build_tree(vecs, (8, 4), key=jax.random.PRNGKey(4), refine_iters=2)
+
+    def qerr(tree):
+        leaves = tree_assign(tree, vecs)
+        flat = tree.levels[1].reshape(-1, 8)
+        return float(jnp.mean(jnp.sum((vecs - flat[leaves]) ** 2, -1)))
+
+    assert qerr(t2) < qerr(t0)
+
+
+# ---------------------------------------------------------------------------
+# lookup table
+# ---------------------------------------------------------------------------
+
+
+def test_lookup_table_csr_invariants():
+    vecs = jax.random.normal(jax.random.PRNGKey(5), (800, 8))
+    tree = build_tree(vecs, (4, 4), key=jax.random.PRNGKey(6))
+    queries = jax.random.normal(jax.random.PRNGKey(7), (100, 8))
+    lk = jax.jit(build_lookup)(tree, queries)
+    leaves = np.array(lk.leaves)
+    offs = np.array(lk.offsets)
+    assert (np.diff(leaves) >= 0).all(), "queries must be leaf-sorted"
+    assert offs[0] == 0 and offs[-1] == 100
+    assert (np.diff(offs) >= 0).all()
+    # CSR slices select exactly the queries of each leaf
+    for leaf in np.unique(leaves):
+        s, e = offs[leaf], offs[leaf + 1]
+        assert (leaves[s:e] == leaf).all()
+    # permutation round-trips
+    orig = np.array(tree_assign(tree, queries))
+    np.testing.assert_array_equal(orig[np.array(lk.qids)], leaves)

@@ -1,0 +1,119 @@
+"""End-to-end index + search exactness vs brute-force oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.index_build import build_index
+from repro.core.search import batch_search
+from repro.core.tree import build_tree, tree_assign
+from repro.data import synth
+from repro.distributed.meshutil import local_mesh
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    vecs_np, _ = synth.sample_descriptors(3000, 24, seed=0, n_centers=50)
+    vecs = jnp.asarray(vecs_np)
+    tree = build_tree(vecs, (8, 4), key=jax.random.PRNGKey(1))
+    mesh = local_mesh()
+    index = build_index(vecs, tree, mesh, wire_dtype=jnp.float32)
+    return vecs, tree, mesh, index
+
+
+def in_leaf_oracle(vecs, tree, queries, k):
+    leaves = np.array(tree_assign(tree, vecs))
+    qleaves = np.array(tree_assign(tree, jnp.asarray(queries)))
+    V = np.array(vecs, np.float32)
+    out = []
+    for i in range(len(queries)):
+        cand = np.flatnonzero(leaves == qleaves[i])
+        d2 = ((V[cand] - queries[i]) ** 2).sum(1)
+        order = np.argsort(d2)
+        out.append((cand[order][:k], np.sort(d2)[:k]))
+    return out
+
+
+def test_index_completeness(corpus):
+    vecs, tree, mesh, index = corpus
+    assert int(index.overflow) == 0
+    ids = np.array(index.ids)
+    valid = ids[ids >= 0]
+    assert len(valid) == vecs.shape[0]
+    assert len(np.unique(valid)) == vecs.shape[0], "every descriptor indexed once"
+    # leaf-sorted within shards, and leaves agree with direct assignment
+    leaves = np.array(index.leaves)
+    direct = np.array(tree_assign(tree, vecs))
+    np.testing.assert_array_equal(leaves[ids >= 0][np.argsort(valid)], direct)
+
+
+def test_search_exact_within_leaves(corpus):
+    vecs, tree, mesh, index = corpus
+    q_np = np.array(vecs[:80]) + np.random.default_rng(2).standard_normal(
+        (80, vecs.shape[1])
+    ).astype(np.float32)
+    res = batch_search(index, tree, jnp.asarray(q_np), k=5, mesh=mesh, q_cap=512)
+    assert int(res.q_cap_overflow) == 0
+    oracle = in_leaf_oracle(vecs, tree, q_np, 5)
+    ids = np.array(res.ids)
+    dists = np.array(res.dists)
+    for i, (want_ids, want_d) in enumerate(oracle):
+        got = ids[i][ids[i] >= 0]
+        assert len(got) == min(5, len(want_ids))
+        # ||p||^2 - 2pq + ||q||^2 in fp32 cancels ~1 ulp of the squared
+        # norms (values up to ~1e6 for byte descriptors) vs the (p-q)^2
+        # oracle: allow that absolute slack
+        np.testing.assert_allclose(
+            dists[i][: len(got)], want_d[: len(got)], rtol=1e-3, atol=2.0
+        )
+        assert set(got.tolist()) == set(want_ids[: len(got)].tolist())
+
+
+def test_search_q_cap_overflow_detected(corpus):
+    """A slab budget that is too small must be *counted*, never silent."""
+    vecs, tree, mesh, index = corpus
+    # all queries in one leaf: pick the densest leaf's members
+    leaves = np.array(tree_assign(tree, vecs))
+    dense_leaf = np.bincount(leaves).argmax()
+    rows = np.flatnonzero(leaves == dense_leaf)[:64]
+    assert len(rows) >= 32
+    queries = vecs[rows]
+    res = batch_search(index, tree, queries, k=3, mesh=mesh, q_cap=8)
+    assert int(res.q_cap_overflow) > 0
+
+
+def test_search_self_query_finds_itself(corpus):
+    vecs, tree, mesh, index = corpus
+    res = batch_search(index, tree, vecs[:50], k=1, mesh=mesh, q_cap=512)
+    np.testing.assert_array_equal(np.array(res.ids[:, 0]), np.arange(50))
+    np.testing.assert_allclose(np.array(res.dists[:, 0]), 0.0, atol=1e-3)
+
+
+def test_bf16_wire_compression_close(corpus):
+    """The paper's map-output-compression analog: bf16 wire loses only
+    rounding-level accuracy (top-1 overlap >= 95%)."""
+    vecs, tree, mesh, _ = corpus
+    idx16 = build_index(vecs, tree, mesh, wire_dtype=jnp.bfloat16)
+    q = vecs[:100] + 0.5
+    r32 = batch_search(
+        build_index(vecs, tree, mesh, wire_dtype=jnp.float32),
+        tree, q, k=1, mesh=mesh, q_cap=512,
+    )
+    r16 = batch_search(idx16, tree, q, k=1, mesh=mesh, q_cap=512)
+    agree = (np.array(r32.ids[:, 0]) == np.array(r16.ids[:, 0])).mean()
+    assert agree >= 0.95, f"bf16 wire top-1 agreement {agree}"
+
+
+def test_unpadded_row_counts():
+    """Non-divisible row counts are padded and padding never surfaces."""
+    vecs = jax.random.normal(jax.random.PRNGKey(3), (1003, 8))
+    tree = build_tree(vecs, (4, 4), key=jax.random.PRNGKey(4))
+    mesh = local_mesh()
+    index = build_index(vecs, tree, mesh, wire_dtype=jnp.float32)
+    ids = np.array(index.ids)
+    assert (ids < 1003).all()
+    assert len(np.unique(ids[ids >= 0])) == 1003
+    res = batch_search(index, tree, vecs[:7], k=2, mesh=mesh, q_cap=256)
+    assert (np.array(res.ids) < 1003).all()
+    np.testing.assert_array_equal(np.array(res.ids[:, 0]), np.arange(7))

@@ -1,0 +1,237 @@
+"""Model zoo behaviour: LM consistency, masking, MoE, GIN, recsys oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import gnn, recsys
+from repro.models import transformer as tfm
+from repro.models.module import init_params
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = tfm.TransformerConfig(
+        name="t", n_layers=2, d_model=32, n_heads=4, n_kv_heads=2, head_dim=8,
+        d_ff=64, vocab_size=64, dtype="float32",
+    )
+    params = init_params(cfg.param_specs(), jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_prefill_decode_match_forward(lm):
+    cfg, params = lm
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, 64)
+    logits, _ = jax.jit(lambda p, t: tfm.forward(p, cfg, t))(params, toks)
+    plogits, cache = jax.jit(lambda p, t: tfm.prefill(p, cfg, t, 16))(params, toks)
+    np.testing.assert_allclose(np.array(plogits), np.array(logits), atol=1e-4)
+    nxt = jnp.argmax(plogits[:, -1:], -1).astype(jnp.int32)
+    dl, _ = jax.jit(
+        lambda p, t, c: tfm.decode_step(p, cfg, t, c, jnp.int32(12))
+    )(params, nxt, cache)
+    full, _ = jax.jit(lambda p, t: tfm.forward(p, cfg, t))(
+        params, jnp.concatenate([toks, nxt], 1)
+    )
+    np.testing.assert_allclose(
+        np.array(dl[:, 0]), np.array(full[:, -1]), atol=1e-3
+    )
+
+
+def test_sliding_window_masks_past(lm):
+    """With window w, positions >= w back must not influence the output."""
+    cfg0, _ = lm
+    cfg = tfm.TransformerConfig(
+        name="w", n_layers=1, d_model=32, n_heads=4, n_kv_heads=4, head_dim=8,
+        d_ff=64, vocab_size=64, dtype="float32", window=3,
+    )
+    params = init_params(cfg.param_specs(), jax.random.PRNGKey(2))
+    t1 = jax.random.randint(jax.random.PRNGKey(3), (1, 10), 0, 64)
+    t2 = t1.at[0, 0].set((t1[0, 0] + 17) % 64)  # perturb a distant token
+    l1, _ = tfm.forward(params, cfg, t1)
+    l2, _ = tfm.forward(params, cfg, t2)
+    # last position attends to [7,8,9] only -> identical logits
+    np.testing.assert_allclose(
+        np.array(l1[0, -1]), np.array(l2[0, -1]), atol=1e-5
+    )
+    # but an in-window perturbation must change it
+    t3 = t1.at[0, 9].set((t1[0, 9] + 17) % 64)
+    l3, _ = tfm.forward(params, cfg, t3)
+    assert np.abs(np.array(l3[0, -1]) - np.array(l1[0, -1])).max() > 1e-4
+
+
+def test_causality(lm):
+    cfg, params = lm
+    t1 = jax.random.randint(jax.random.PRNGKey(4), (1, 8), 0, 64)
+    t2 = t1.at[0, 5].set((t1[0, 5] + 3) % 64)
+    l1, _ = tfm.forward(params, cfg, t1)
+    l2, _ = tfm.forward(params, cfg, t2)
+    np.testing.assert_allclose(
+        np.array(l1[0, :5]), np.array(l2[0, :5]), atol=1e-5
+    )
+
+
+def test_moe_drops_counted():
+    cfg = tfm.TransformerConfig(
+        name="m", n_layers=1, d_model=16, n_heads=2, n_kv_heads=2, head_dim=8,
+        d_ff=32, vocab_size=32, dtype="float32",
+        moe=tfm.MoEConfig(n_experts=4, top_k=2, d_ff=32, capacity_factor=0.1),
+    )
+    params = init_params(cfg.param_specs(), jax.random.PRNGKey(5))
+    toks = jax.random.randint(jax.random.PRNGKey(6), (4, 64), 0, 32)
+    _, aux = tfm.forward(params, cfg, toks)
+    assert int(aux["moe_drops"]) > 0  # tiny capacity factor must drop
+
+
+def test_lm_loss_decreases():
+    from repro.data.batches import lm_batch
+    from repro.train import AdamWConfig, make_train_step
+    from repro.train.step import init_train_state
+
+    cfg = tfm.TransformerConfig(
+        name="t2", n_layers=2, d_model=32, n_heads=4, n_kv_heads=2, head_dim=8,
+        d_ff=64, vocab_size=128, dtype="float32",
+    )
+    params = init_params(cfg.param_specs(), jax.random.PRNGKey(0))
+    state = init_train_state(params)
+    step = jax.jit(
+        make_train_step(lambda p, b: tfm.loss_fn(p, cfg, b), AdamWConfig(lr=3e-3))
+    )
+    batch = jax.tree.map(jnp.asarray, lm_batch(8, 32, 128, seed=0))
+    losses = []
+    for _ in range(25):  # same batch: loss must drop
+        params, state, m = step(params, state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] * 0.8, losses[::6]
+
+
+# ---------------------------------------------------------------------------
+# GIN
+# ---------------------------------------------------------------------------
+
+
+def test_gin_matches_dense_adjacency_oracle():
+    cfg = gnn.GINConfig(name="g", n_layers=2, d_in=6, d_hidden=8, n_classes=3)
+    params = init_params(cfg.param_specs(), jax.random.PRNGKey(0))
+    N, E = 20, 60
+    feats = jax.random.normal(jax.random.PRNGKey(1), (N, 6))
+    edges = jax.random.randint(jax.random.PRNGKey(2), (2, E), 0, N)
+    batch = {"feats": feats, "edges": edges,
+             "edge_w": jnp.ones((E,)), "labels": jnp.zeros((N,), jnp.int32)}
+    logits = np.array(gnn.forward(params, cfg, batch))
+
+    # numpy oracle with dense adjacency
+    A = np.zeros((N, N), np.float32)
+    for s, d in np.array(edges).T:
+        A[d, s] += 1.0
+    h = np.array(feats)
+    P = {k: np.array(v) for k, v in params.items()}
+    relu = lambda x: np.maximum(x, 0)
+    z = (1 + P["eps"][0]) * h + A @ h
+    h = relu(relu(z @ P["in_w1"] + P["in_b1"]) @ P["in_w2"] + P["in_b2"])
+    z = (1 + P["eps"][1]) * h + A @ h
+    h = relu(relu(z @ P["w1"][0] + P["b1"][0]) @ P["w2"][0] + P["b2"][0])
+    want = h @ P["out_w"] + P["out_b"]
+    np.testing.assert_allclose(logits, want, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**30))
+def test_gin_edge_order_invariance(seed):
+    """Permuting the edge list must not change the output (sum agg)."""
+    cfg = gnn.GINConfig(name="g", n_layers=2, d_in=4, d_hidden=8, n_classes=2)
+    params = init_params(cfg.param_specs(), jax.random.PRNGKey(0))
+    N, E = 15, 40
+    key = jax.random.PRNGKey(seed)
+    feats = jax.random.normal(key, (N, 4))
+    edges = jax.random.randint(jax.random.PRNGKey(seed + 1), (2, E), 0, N)
+    perm = jax.random.permutation(jax.random.PRNGKey(seed + 2), E)
+    b1 = {"feats": feats, "edges": edges, "edge_w": jnp.ones((E,)),
+          "labels": jnp.zeros((N,), jnp.int32)}
+    b2 = dict(b1, edges=edges[:, perm])
+    np.testing.assert_allclose(
+        np.array(gnn.forward(params, cfg, b1)),
+        np.array(gnn.forward(params, cfg, b2)),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_gin_padded_edges_are_noops():
+    cfg = gnn.GINConfig(name="g", n_layers=2, d_in=4, d_hidden=8, n_classes=2)
+    params = init_params(cfg.param_specs(), jax.random.PRNGKey(0))
+    N, E = 15, 30
+    feats = jax.random.normal(jax.random.PRNGKey(1), (N, 4))
+    edges = jax.random.randint(jax.random.PRNGKey(2), (2, E), 0, N)
+    b1 = {"feats": feats, "edges": edges, "edge_w": jnp.ones((E,)),
+          "labels": jnp.zeros((N,), jnp.int32)}
+    pad = jnp.zeros((2, 10), jnp.int32)
+    b2 = {
+        "feats": feats,
+        "edges": jnp.concatenate([edges, pad], 1),
+        "edge_w": jnp.concatenate([jnp.ones((E,)), jnp.zeros((10,))]),
+        "labels": b1["labels"],
+    }
+    np.testing.assert_allclose(
+        np.array(gnn.forward(params, cfg, b1)),
+        np.array(gnn.forward(params, cfg, b2)),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+# ---------------------------------------------------------------------------
+# recsys
+# ---------------------------------------------------------------------------
+
+
+def test_embedding_bag_oracle():
+    table = jax.random.normal(jax.random.PRNGKey(0), (50, 8))
+    ids = jax.random.randint(jax.random.PRNGKey(1), (6, 4), 0, 50)
+    valid = jax.random.bernoulli(jax.random.PRNGKey(2), 0.7, (6, 4))
+    out = np.array(recsys.embedding_bag(table, ids, valid=valid))
+    T, I, V = np.array(table), np.array(ids), np.array(valid)
+    want = np.stack([(T[I[b]] * V[b][:, None]).sum(0) for b in range(6)])
+    np.testing.assert_allclose(out, want, rtol=1e-5)
+    out_mean = np.array(recsys.embedding_bag(table, ids, mode="mean", valid=valid))
+    denom = np.maximum(1, V.sum(1))[:, None]
+    np.testing.assert_allclose(out_mean, want / denom, rtol=1e-5)
+
+
+def test_din_padding_history_is_masked():
+    cfg = recsys.DINConfig(name="d", vocab=100, seq_len=6, attn_mlp=(8,),
+                           mlp=(8,))
+    params = init_params(cfg.param_specs(), jax.random.PRNGKey(0))
+    hist1 = jnp.asarray([[3, 4, 5, 0, 0, 0]])
+    hist2 = jnp.asarray([[3, 4, 5, 7, 9, 11]])  # extra (non-pad) items
+    t = jnp.asarray([42])
+    s1 = float(recsys.din_forward(params, cfg, {"hist": hist1, "target": t})[0])
+    s1b = float(
+        recsys.din_forward(
+            params, cfg, {"hist": jnp.asarray([[3, 4, 5, 0, 0, 0]]), "target": t}
+        )[0]
+    )
+    s2 = float(recsys.din_forward(params, cfg, {"hist": hist2, "target": t})[0])
+    assert s1 == s1b
+    assert abs(s1 - s2) > 1e-7  # real items do change the score
+
+
+def test_twotower_training_separates_pairs():
+    from repro.data.batches import twotower_batch
+    from repro.train import AdamWConfig, make_train_step
+    from repro.train.step import init_train_state
+
+    cfg = recsys.TwoTowerConfig(name="tt", vocab_per_field=200, field_dim=8,
+                                tower_mlp=(32, 16), embed_dim=16)
+    params = init_params(cfg.param_specs(), jax.random.PRNGKey(0))
+    state = init_train_state(params)
+    step = jax.jit(
+        make_train_step(
+            lambda p, b: recsys.twotower_loss(p, cfg, b), AdamWConfig(lr=3e-3)
+        )
+    )
+    accs = []
+    for i in range(30):
+        b = jax.tree.map(jnp.asarray, twotower_batch(32, 4, 4, 200, seed=i % 4))
+        params, state, m = step(params, state, b)
+        accs.append(float(m["acc"]))
+    assert np.mean(accs[-5:]) > np.mean(accs[:5]) + 0.2, accs[::6]

@@ -1,0 +1,68 @@
+"""Logical-axis partitioning rules + divisibility fallback (AbstractMesh —
+no need for 256 real devices)."""
+
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.distributed.partitioning import DEFAULT_RULES, partition_spec
+
+MESH_1POD = AbstractMesh((16, 16), ("data", "model"))
+MESH_2POD = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_batch_shards_over_pod_and_data():
+    spec = partition_spec((256, 4096), ("batch", None), MESH_2POD, DEFAULT_RULES)
+    assert spec == P(("pod", "data"), None)
+
+
+def test_divisibility_fallback_heads():
+    # llama3.2: 24 heads don't divide model=16 -> replicate that dim
+    spec = partition_spec((28, 24, 128), ("layers", "heads", "head_dim"),
+                          MESH_1POD, DEFAULT_RULES)
+    assert spec == P(None, None, None)
+    # but the fused qkv projection (3072) shards
+    spec = partition_spec((28, 3072, 3072), ("layers", "embed", "qkv"),
+                          MESH_1POD, DEFAULT_RULES)
+    assert spec == P(None, None, "model")
+
+
+def test_axis_used_once_per_array():
+    # both dims want 'model'; first one wins, second replicates
+    spec = partition_spec((64, 1408), ("experts", "ffn"), MESH_1POD,
+                          DEFAULT_RULES)
+    assert spec == P("model", None)
+
+
+def test_kv_seq_takes_free_axes():
+    # decode_32k: batch takes (pod,data); kv_seq gets model
+    shape = (32, 128, 32768, 8, 128)
+    axes = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+    spec = partition_spec(shape, axes, MESH_2POD, DEFAULT_RULES)
+    assert spec == P(None, ("pod", "data"), "model", None, None)
+    # long_500k: batch=1 replicates; kv_seq gets all three axes
+    shape = (32, 1, 524288, 8, 128)
+    spec = partition_spec(shape, axes, MESH_2POD, DEFAULT_RULES)
+    assert spec == P(None, None, ("pod", "data", "model"), None, None)
+
+
+def test_non_divisible_batch_replicates():
+    spec = partition_spec((1, 128), ("batch", None), MESH_2POD, DEFAULT_RULES)
+    assert spec == P(None, None)
+
+
+def test_rank_mismatch_raises():
+    with pytest.raises(ValueError, match="rank"):
+        partition_spec((4, 4), ("batch",), MESH_1POD, DEFAULT_RULES)
+
+
+def test_rules_extension():
+    rules = DEFAULT_RULES.extend(qkv=None)
+    spec = partition_spec((32, 3072), ("embed", "qkv"), MESH_1POD, rules)
+    assert spec == P(None, None)
+
+
+def test_vocab_shards_all_lm_archs():
+    for v in (128256, 262144, 92544, 163840, 32064):
+        spec = partition_spec((v, 2048), ("vocab", "embed"), MESH_1POD,
+                              DEFAULT_RULES)
+        assert spec == P("model", None), v

@@ -1,0 +1,154 @@
+"""End-to-end behaviour of the paper's system: the full workflow (store ->
+tree -> distributed index -> batch search -> image-level quality), fault
+injection, and the per-arch reduced-config smoke tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED, REGISTRY
+
+
+# ---------------------------------------------------------------------------
+# the paper's workflow end-to-end (Fig 4 protocol, scaled down)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def workflow():
+    from repro.core.index_build import build_index
+    from repro.core.tree import build_tree
+    from repro.data import synth
+    from repro.distributed.meshutil import local_mesh
+
+    mesh = local_mesh()
+    n_images, dpi, dim = 400, 24, 32
+    vecs_np, img_ids = synth.sample_images(n_images, dpi, dim, seed=0)
+    vecs = jnp.asarray(vecs_np)
+    tree = build_tree(vecs, (8, 8), key=jax.random.PRNGKey(1))
+    index = build_index(vecs, tree, mesh, wire_dtype=jnp.float32)
+    return mesh, vecs_np, img_ids, tree, index, n_images
+
+
+def test_copydays_quality_protocol(workflow):
+    """Distorted queries find their original image at rank 1 (paper: ~82%
+    averaged over variants; mild variants should be near-perfect, strong
+    ones lower but nonzero)."""
+    from repro.core.search import batch_search
+    from repro.data.copydays import VARIANTS, make_copydays, vote_images
+
+    mesh, vecs_np, img_ids, tree, index, n_images = workflow
+    rng = np.random.default_rng(3)
+    originals = rng.choice(n_images, 40, replace=False)
+    rows = np.isin(img_ids, originals)
+    cd = make_copydays(vecs_np[rows], img_ids[rows], seed=4)
+    res = batch_search(
+        index, tree, jnp.asarray(cd.query_vecs), k=10, mesh=mesh, q_cap=1024
+    )
+    assert int(res.q_cap_overflow) == 0
+    per_variant, avg = vote_images(
+        np.array(res.ids), img_ids, cd.query_img, cd.query_variant, len(VARIANTS)
+    )
+    # mild variants near-perfect; average well above chance
+    assert per_variant[0] >= 0.9, per_variant
+    assert avg >= 0.5, (per_variant, avg)
+
+
+def test_search_quality_stable_with_more_distractors(workflow):
+    """Paper Fig 4: 20M -> 100M distractors barely degrades recall."""
+    from repro.core.index_build import build_index
+    from repro.core.search import batch_search
+    from repro.core.tree import build_tree
+    from repro.data import synth
+
+    mesh, vecs_np, img_ids, _, _, n_images = workflow
+    extra, _ = synth.sample_descriptors(3 * len(vecs_np), 32, seed=9,
+                                        n_centers=256)
+    recalls = []
+    for corpus in (vecs_np, np.concatenate([vecs_np, extra])):
+        vecs = jnp.asarray(corpus)
+        tree = build_tree(vecs, (8, 8), key=jax.random.PRNGKey(1))
+        index = build_index(vecs, tree, mesh, wire_dtype=jnp.float32)
+        q = jnp.asarray(
+            vecs_np[:300]
+            + np.random.default_rng(5).standard_normal((300, 32)).astype(np.float32) * 2
+        )
+        res = batch_search(index, tree, q, k=1, mesh=mesh, q_cap=2048)
+        recalls.append(float((np.array(res.ids[:, 0]) == np.arange(300)).mean()))
+    assert recalls[0] >= 0.85
+    assert recalls[1] >= recalls[0] - 0.12, recalls
+
+
+def test_streaming_index_with_failures_matches_clean_run():
+    """launch/index.py semantics: injected failures + retries produce an
+    index identical to the failure-free run (deterministic re-execution)."""
+    import jax.numpy as jnp
+
+    from repro.core.index_build import build_index
+    from repro.core.tree import build_tree
+    from repro.data.store import VirtualStore
+    from repro.distributed.failure import FailureInjector
+    from repro.distributed.meshutil import local_mesh
+    from repro.distributed.wavescheduler import WaveScheduler
+
+    mesh = local_mesh()
+    store = VirtualStore(20_000, 16, block_rows=5_000, seed=0, n_centers=64)
+    tree = build_tree(
+        jnp.asarray(store.sample_for_tree(4096)), (4, 8),
+        key=jax.random.PRNGKey(0),
+    )
+
+    def wave_fn(b):
+        blk = store.read_block(b)
+        idx = build_index(
+            jnp.asarray(blk.vecs), tree, mesh,
+            ids=jnp.asarray(blk.ids.astype(np.int32)),
+            wire_dtype=jnp.float32,
+        )
+        return np.sort(np.array(idx.ids)[np.array(idx.ids) >= 0])
+
+    clean = WaveScheduler(wave_fn).run(range(store.n_blocks))
+    faulty = WaveScheduler(
+        wave_fn,
+        failure_injector=FailureInjector(fail_at=[(1, 0), (2, 0)]),
+        max_retries=1,
+    ).run(range(store.n_blocks))
+    for a, b in zip(clean.state, faulty.state):
+        np.testing.assert_array_equal(a, b)
+    total = np.concatenate(clean.state)
+    assert len(total) == store.n_rows
+    assert len(np.unique(total)) == store.n_rows
+
+
+# ---------------------------------------------------------------------------
+# per-arch smoke tests (reduced configs, one train/serve step each)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ASSIGNED + ["sift100m"])
+def test_arch_smoke(arch):
+    metrics = REGISTRY[arch].smoke()
+    assert metrics, f"{arch} smoke returned no metrics"
+
+
+def test_all_assigned_archs_have_four_shapes():
+    for arch in ASSIGNED:
+        cells = REGISTRY[arch].cells
+        assert len(cells) == 4, (arch, sorted(cells))
+
+
+def test_full_config_param_counts_match_names():
+    """Sanity: the headline parameter counts roughly match the arch names."""
+    lm = {
+        "llama3.2-3b": (2.5e9, 4.5e9),
+        "gemma3-4b": (3.0e9, 5.5e9),
+        "internlm2-1.8b": (1.4e9, 2.3e9),
+        "moonshot-v1-16b-a3b": (1.2e10, 3.2e10),
+        "phi3.5-moe-42b-a6.6b": (3.6e10, 4.6e10),
+    }
+    for arch, (lo, hi) in lm.items():
+        n = REGISTRY[arch].config.param_count()
+        assert lo <= n <= hi, f"{arch}: {n:.3e} outside [{lo:.1e}, {hi:.1e}]"
+    active = REGISTRY["phi3.5-moe-42b-a6.6b"].config.active_param_count()
+    assert 5.5e9 <= active <= 8.5e9, active

@@ -1,0 +1,194 @@
+"""Optimizer, gradient compression, microbatching, checkpointing, waves."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.distributed.checkpoint import CheckpointManager
+from repro.distributed.failure import FailureInjector, InjectedFailure
+from repro.distributed.wavescheduler import WaveScheduler, plan_waves
+from repro.train import AdamWConfig, adamw_update, init_opt_state, make_train_step
+from repro.train.grad_compress import bf16_compress, init_feedback, topk_compress
+from repro.train.step import init_train_state
+
+
+def quad_loss(p, batch):
+    r = p["w"] * batch["x"] - batch["y"]
+    return jnp.mean(r * r), {"loss": jnp.mean(r * r)}
+
+
+def test_adamw_converges_quadratic():
+    params = {"w": jnp.asarray(5.0)}
+    state = init_opt_state(params)
+    cfg = AdamWConfig(lr=0.1, clip_norm=None)
+    batch = {"x": jnp.ones(()), "y": jnp.asarray(2.0)}
+    for _ in range(200):
+        grads = jax.grad(lambda p: quad_loss(p, batch)[0])(params)
+        params, state, _ = adamw_update(params, grads, state, cfg)
+    assert abs(float(params["w"]) - 2.0) < 1e-2
+
+
+def test_grad_clip_bounds_update():
+    params = {"w": jnp.asarray(0.0)}
+    state = init_opt_state(params)
+    cfg = AdamWConfig(lr=1.0, clip_norm=1e-3)
+    grads = {"w": jnp.asarray(1e6)}
+    _, _, metrics = adamw_update(params, grads, state, cfg)
+    assert float(metrics["grad_norm"]) == pytest.approx(1e6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**30))
+def test_bf16_error_feedback_conserves_mass(seed):
+    g = {"a": jax.random.normal(jax.random.PRNGKey(seed), (64,)) * 1e-3}
+    fb = init_feedback(g)
+    total = jnp.zeros((64,))
+    sent = jnp.zeros((64,))
+    for i in range(8):
+        comp, fb = bf16_compress(g, fb)
+        sent = sent + comp["a"].astype(jnp.float32)
+        total = total + g["a"]
+    # error feedback: accumulated sent + residual == accumulated true grads
+    np.testing.assert_allclose(
+        np.array(sent + fb["a"]), np.array(total), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_topk_compression_sparsity_and_feedback():
+    g = {"a": jnp.arange(1.0, 101.0)}
+    fb = init_feedback(g)
+    comp, fb = topk_compress(g, fb, fraction=0.1)
+    nz = int((np.array(comp["a"]) != 0).sum())
+    assert nz == 10
+    np.testing.assert_allclose(
+        np.array(comp["a"] + fb["a"]), np.array(g["a"]), rtol=1e-6
+    )
+
+
+def test_microbatch_equals_full_batch():
+    cfg = AdamWConfig(lr=1e-2)
+    params = {"w": jnp.asarray([1.0, -1.0])}
+
+    def loss(p, b):
+        r = b["x"] @ p["w"] - b["y"]
+        return jnp.mean(r * r), {"loss": jnp.mean(r * r)}
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, 2))
+    y = jax.random.normal(jax.random.PRNGKey(1), (16,))
+    batch = {"x": x, "y": y}
+    s1 = init_train_state(params)
+    s2 = init_train_state(params)
+    p1, _, m1 = make_train_step(loss, cfg)(params, s1, batch)
+    p2, _, m2 = make_train_step(loss, cfg, microbatches=4)(params, s2, batch)
+    np.testing.assert_allclose(np.array(p1["w"]), np.array(p2["w"]), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"a": jnp.arange(10.0), "b": {"c": jnp.ones((3, 3), jnp.bfloat16)}}
+    for step in (1, 2, 3):
+        mgr.save(step, tree)
+    assert mgr.all_steps() == [2, 3]  # GC keeps last 2
+    restored, manifest = mgr.restore(tree)
+    assert manifest["step"] == 3
+    np.testing.assert_array_equal(np.array(restored["a"]), np.arange(10.0))
+    assert restored["b"]["c"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_crc_detects_corruption(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    tree = {"a": jnp.arange(16.0)}
+    path = mgr.save(7, tree)
+    fname = [f for f in os.listdir(path) if f.endswith(".npy")][0]
+    arr = np.load(os.path.join(path, fname))
+    arr[0] = 999.0
+    np.save(os.path.join(path, fname), arr)
+    with pytest.raises(IOError, match="crc"):
+        mgr.restore(tree)
+
+
+def test_checkpoint_restore_with_shardings(tmp_path):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.distributed.meshutil import local_mesh
+
+    mesh = local_mesh()
+    mgr = CheckpointManager(str(tmp_path))
+    tree = {"w": jnp.arange(32.0).reshape(8, 4)}
+    mgr.save(1, tree)
+    sh = {"w": NamedSharding(mesh, P("data", None))}
+    restored, _ = mgr.restore(tree, shardings=sh)
+    assert restored["w"].sharding == sh["w"]
+    np.testing.assert_array_equal(np.array(restored["w"]), np.array(tree["w"]))
+
+
+# ---------------------------------------------------------------------------
+# wave scheduler + failure injection
+# ---------------------------------------------------------------------------
+
+
+def test_waves_retry_reproduces_exact_results():
+    def wave_fn(w):
+        start, size = w
+        return np.arange(start, start + size) ** 2
+
+    waves = plan_waves(100, 13)
+    clean = WaveScheduler(wave_fn).run(waves)
+    injector = FailureInjector(fail_at=[(0, 0), (3, 0), (3, 1)])
+    faulty = WaveScheduler(wave_fn, failure_injector=injector, max_retries=2).run(waves)
+    assert injector.fired == [(0, 0), (3, 0), (3, 1)]
+    assert len([r for r in faulty.records if not r.ok]) == 3
+    for a, b in zip(clean.state, faulty.state):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_waves_exhausted_retries_raise():
+    injector = FailureInjector(fail_at=[(1, 0), (1, 1)])
+    sched = WaveScheduler(lambda w: w, failure_injector=injector, max_retries=1)
+    with pytest.raises(InjectedFailure):
+        sched.run([1, 2, 3])
+
+
+def test_wave_checkpoint_resume(tmp_path):
+    """Kill the job mid-run; resume completes with identical final state."""
+    mgr = CheckpointManager(str(tmp_path))
+    calls = []
+
+    def wave_fn(w):
+        calls.append(w)
+        return w * 2
+
+    def fold(s, r):
+        s = s or {"acc": np.zeros(1)}
+        return {"acc": s["acc"] + r}
+
+    sched = WaveScheduler(
+        wave_fn, fold, checkpoint=mgr, checkpoint_every=2,
+        failure_injector=FailureInjector(fail_at=[(5, 0), (5, 1), (5, 2)]),
+        max_retries=2,
+    )
+    with pytest.raises(InjectedFailure):
+        sched.run(range(10))
+    # resume from the surviving checkpoint
+    cursor = sched.resume_cursor()
+    assert cursor == 4  # checkpoints at waves 2 and 4
+    state = sched.resume_state({"acc": np.zeros(1)})
+    sched2 = WaveScheduler(wave_fn, fold, checkpoint=mgr, checkpoint_every=2)
+    out = sched2.run(range(10), init_state=state, start_at=cursor)
+    assert out.state["acc"][0] == sum(w * 2 for w in range(10))
+
+
+def test_elastic_replanning():
+    w8 = plan_waves(100, 8)
+    w32 = plan_waves(100, 32)
+    assert sum(s for _, s in w8) == sum(s for _, s in w32) == 100
+    assert len(w8) > len(w32)

@@ -1,0 +1,91 @@
+"""Hillclimb-variant correctness: each beyond-baseline optimization must be
+numerically equivalent to its baseline (the §Perf wins are free lunches,
+not approximations — except where documented)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import transformer as tfm
+from repro.models.module import init_params, shard_ctx
+
+
+@pytest.fixture(scope="module")
+def moe_setup():
+    cfg = tfm.TransformerConfig(
+        name="m", n_layers=2, d_model=32, n_heads=4, n_kv_heads=4, head_dim=8,
+        d_ff=48, vocab_size=64, dtype="float32",
+        moe=tfm.MoEConfig(n_experts=4, top_k=2, d_ff=48, capacity_factor=4.0),
+    )
+    params = init_params(cfg.param_specs(), jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, 64)
+    return cfg, params, toks
+
+
+def test_routed_moe_matches_global(moe_setup):
+    from repro.distributed.meshutil import local_mesh
+
+    cfg, params, toks = moe_setup
+    mesh = local_mesh()
+    cfg_r = dataclasses.replace(cfg, moe_impl="routed")
+
+    def run(c):
+        def f(p, t):
+            with shard_ctx(mesh):
+                return tfm.forward(p, c, t)[0]
+
+        return jax.jit(f)(params, toks)
+
+    np.testing.assert_allclose(
+        np.array(run(cfg)), np.array(run(cfg_r)), atol=2e-4
+    )
+
+
+def test_chunked_attention_matches_full():
+    cfg = tfm.TransformerConfig(
+        name="t", n_layers=2, d_model=32, n_heads=4, n_kv_heads=2, head_dim=8,
+        d_ff=64, vocab_size=64, dtype="float32", window=6, global_every=2,
+    )
+    cfg_c = dataclasses.replace(cfg, attn_impl="chunked", attn_chunk=8)
+    params = init_params(cfg.param_specs(), jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0, 64)
+    lf, _ = jax.jit(lambda p, t: tfm.forward(p, cfg, t))(params, toks)
+    lc, _ = jax.jit(lambda p, t: tfm.forward(p, cfg_c, t))(params, toks)
+    np.testing.assert_allclose(np.array(lf), np.array(lc), atol=2e-4)
+
+
+def test_query_routed_search_matches_point_major():
+    from repro.core.index_build import build_index
+    from repro.core.search import batch_search
+    from repro.core.tree import build_tree
+    from repro.distributed.meshutil import local_mesh
+
+    mesh = local_mesh()
+    vecs = jax.random.normal(jax.random.PRNGKey(0), (3000, 16)) * 4
+    tree = build_tree(vecs, (6, 6), key=jax.random.PRNGKey(1))
+    index = build_index(vecs, tree, mesh, wire_dtype=jnp.float32)
+    q = vecs[:150] + 0.1
+    r1 = batch_search(index, tree, q, k=4, mesh=mesh, q_cap=512)
+    r2 = batch_search(index, tree, q, k=4, mesh=mesh, layout="query_routed")
+    assert int(r2.q_cap_overflow) == 0
+    np.testing.assert_array_equal(np.array(r1.ids), np.array(r2.ids))
+    m = np.isfinite(np.array(r1.dists))
+    np.testing.assert_allclose(
+        np.array(r1.dists)[m], np.array(r2.dists)[m], rtol=1e-3, atol=1.0
+    )
+
+
+def test_head_pad_variant_cells_construct():
+    from jax.sharding import AbstractMesh
+
+    from repro.configs import variants
+
+    cell = variants.apply("head_pad", "llama3.2-3b", "train_4k")
+    assert cell.kind == "train"
+    cell = variants.apply("routed_moe", "phi3.5-moe-42b-a6.6b", "train_4k")
+    assert cell.kind == "train"
+    cell = variants.apply("query_routed", "sift100m", "search_1m")
+    assert cell.kind == "serve"
