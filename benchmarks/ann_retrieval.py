@@ -13,7 +13,7 @@ import numpy as np
 from benchmarks.common import row, timeit
 
 
-def run():
+def run(layout: str = "point_major", probes_sweep=(1, 3)):
     out = []
     from repro.core.index_build import build_index
     from repro.core.search import batch_search
@@ -71,22 +71,49 @@ def run():
     tree = build_tree(cand_emb, (8, 8), key=jax.random.PRNGKey(2),
                       refine_iters=2)
     index = build_index(cand_emb, tree, mesh, wire_dtype=jnp.float32)
-    res = batch_search(index, tree, user_emb, k=10, mesh=mesh, q_cap=4096)
-    t_ann = timeit(
-        lambda: batch_search(index, tree, user_emb, k=10, mesh=mesh,
-                             q_cap=4096),
-        warmup=1, iters=3,
-    )
-    ann_idx = np.array(res.ids)
-    recall = np.mean([
-        len(set(ann_idx[i][ann_idx[i] >= 0]) & set(exact_idx[i])) / 10
-        for i in range(16)
-    ])
-    out.append(
-        row(
-            "ann_tree_index", t_ann,
-            f"recall@10={recall:.3f} pairs={float(res.pairs):.3g} "
-            f"({float(res.pairs) / (16 * n_cand):.4f} of dense)",
+    # multi-probe recall/cost sweep: every extra probed leaf buys recall at
+    # a near-linear pairs cost (docs/engine.md)
+    for probes in probes_sweep:
+        res = batch_search(index, tree, user_emb, k=10, mesh=mesh,
+                           q_cap=4096, layout=layout, probes=probes)
+        t_ann = timeit(
+            lambda p=probes: batch_search(index, tree, user_emb, k=10,
+                                          mesh=mesh, q_cap=4096,
+                                          layout=layout, probes=p),
+            warmup=1, iters=3,
         )
-    )
+        ann_idx = np.array(res.ids)
+        recall = np.mean([
+            len(set(ann_idx[i][ann_idx[i] >= 0]) & set(exact_idx[i])) / 10
+            for i in range(16)
+        ])
+        name = "ann_tree_index" if probes == 1 else f"ann_tree_index_T{probes}"
+        out.append(
+            row(
+                name, t_ann,
+                f"recall@10={recall:.3f} pairs={float(res.pairs):.3g} "
+                f"({float(res.pairs) / (16 * n_cand):.4f} of dense) "
+                f"layout={layout} probes={probes}",
+            )
+        )
     return out
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--layout", choices=("point_major", "query_routed", "auto"),
+        default="point_major",
+    )
+    ap.add_argument("--probes", type=int, nargs="+", default=[1, 3])
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    for r in run(layout=args.layout, probes_sweep=tuple(args.probes)):
+        print(r)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -30,9 +30,29 @@ MODULES = [
 ]
 
 
+def smoke() -> int:
+    """Tiny end-to-end serve runs on both layouts with multi-probe — the
+    per-PR gate wired into scripts/smoke.sh. Fails loudly, returns rc."""
+    from repro.launch import serve
+
+    base = [
+        "--rows", "20000", "--dim", "32", "--images", "400",
+        "--fanout", "16", "16", "--batches", "1", "--batch-images", "32",
+        "--probes", "2",
+    ]
+    for layout in ("point_major", "query_routed"):
+        print(f"# smoke: serve --layout {layout} --probes 2", file=sys.stderr)
+        rc = serve.main(base + ["--layout", layout])
+        if rc != 0:
+            return rc
+    return 0
+
+
 def main() -> None:
     import importlib
 
+    if "--smoke" in sys.argv[1:]:
+        raise SystemExit(smoke())
     names = sys.argv[1:] or MODULES
     print("name,us_per_call,derived")
     for name in names:

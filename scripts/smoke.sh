@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# Per-PR smoke gate: the tier-1 suite plus a tiny end-to-end serve run on
+# BOTH search layouts with multi-probe (--probes 2), so every future PR
+# exercises the full engine serve path, not just unit tests.
+#
+# Usage: scripts/smoke.sh  (from the repo root)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 test suite =="
+python -m pytest -x -q
+
+echo "== serve smoke (both layouts, --probes 2) =="
+python -m benchmarks.run --smoke
+
+echo "smoke OK"

@@ -16,5 +16,6 @@ from repro.core.tree import VocabTree, build_tree, tree_assign  # noqa: F401
 from repro.core.index_build import build_index, DistributedIndex  # noqa: F401
 from repro.core.search import batch_search, SearchResult  # noqa: F401
 from repro.core.lookup import build_lookup, LookupTable  # noqa: F401
+from repro.core.engine import SearchPlan, plan  # noqa: F401
 
 __version__ = "1.0.0"

@@ -5,3 +5,4 @@ from repro.core.tree import VocabTree, build_tree, tree_assign  # noqa: F401
 from repro.core.lookup import LookupTable, build_lookup  # noqa: F401
 from repro.core.index_build import DistributedIndex, build_index  # noqa: F401
 from repro.core.search import SearchResult, batch_search  # noqa: F401
+from repro.core.engine import SearchPlan, make_executor, plan  # noqa: F401

@@ -1,0 +1,25 @@
+"""Unified search-engine subsystem.
+
+One declarative :class:`SearchPlan` describes *how* a batch of queries is
+executed against a :class:`~repro.core.index_build.DistributedIndex`:
+layout (point-major wave scan vs query-routed), tile sizes, slab budgets,
+``k``, multi-probe width, kernel impl and wire dtype. ``plan()`` auto-picks
+layout and budgets from the index/mesh/query shapes; ``make_executor()``
+builds the jittable ``(index, lookup) -> SearchResult`` pipeline for a plan.
+
+Both executors are thin orchestrations over the shared tile-scan core in
+:mod:`repro.core.engine.tilescan` — slab slicing, the fused distance+top-k
+candidate fold, and pairs/overflow accounting are written once.
+"""
+
+from repro.core.engine.plan import (  # noqa: F401
+    LAYOUTS,
+    SearchPlan,
+    largest_divisor_leq,
+    plan,
+)
+from repro.core.engine.executors import (  # noqa: F401
+    SearchResult,
+    make_executor,
+    pad_lookup,
+)

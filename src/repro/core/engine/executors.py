@@ -1,0 +1,345 @@
+"""The two search executors, built on the shared tile-scan core.
+
+Point-major (paper §2.4): every shard sweeps its cluster-sorted index rows
+in waves of ``block_rows`` against the replicated lookup table; the slab of
+queries colliding with a tile is contiguous (both sides leaf-sorted), and a
+running ``(rows, k)`` best table is folded per wave, then merged across
+shards with one log-shaped top-k.
+
+Query-routed (beyond-paper): the lookup rows are shuffled to the shard
+owning their leaf (the same capacity-padded counting sort + all_to_all as
+index creation), after which every query row is answered entirely locally —
+one contiguous point slab per query tile, no running table, no cross-shard
+merge.
+
+Multi-probe: ``build_lookup(tree, queries, probes=T)`` expands each query
+into ``T`` rows (one per probed leaf) whose ``qids`` are *flat slots*
+``query_id * T + probe_rank``. Both executors treat rows independently; the
+final ``merge_probe_groups`` folds each query's ``T`` disjoint candidate
+rows into one ``k``-row (see tilescan.py for why no id-dedupe is needed).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import route as route_lib
+from repro.core.distance import sq_norms
+from repro.core.engine import tilescan
+from repro.core.engine.plan import SearchPlan
+from repro.core.index_build import DistributedIndex
+from repro.core.lookup import LookupTable
+from repro.core.sentinels import INVALID_ID, LEAF_SENTINEL, PAD_QUERY_LEAF
+from repro.distributed.compat import pcast_varying, shard_map
+from repro.distributed.meshutil import batch_axes, round_up
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SearchResult:
+    ids: jax.Array  # (Q, k) global descriptor ids, -1 where fewer than k
+    dists: jax.Array  # (Q, k) true squared L2 distances (inf where id=-1)
+    pairs: jax.Array  # () number of (point, query) distance pairs computed
+    q_cap_overflow: jax.Array  # () slab-budget misses (0 == exact-in-cluster)
+
+    def tree_flatten(self):
+        return (self.ids, self.dists, self.pairs, self.q_cap_overflow), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+class _Carry(NamedTuple):
+    best_d: jax.Array
+    best_i: jax.Array
+    pairs: jax.Array
+    overflow: jax.Array
+
+
+def pad_lookup(lookup: LookupTable, q_total: int) -> LookupTable:
+    """Pad the lookup table to ``q_total`` rows; padding never matches.
+
+    Pad rows get fresh flat slot ids past the real ones so every scatter
+    target stays a permutation of ``arange(q_total)``.
+    """
+    q = lookup.vecs.shape[0]
+    if q_total < q:
+        raise ValueError(f"{q_total=} < {q}")
+    if q_total == q:
+        return lookup
+    pad = q_total - q
+    return LookupTable(
+        vecs=jnp.concatenate(
+            [lookup.vecs, jnp.zeros((pad, lookup.vecs.shape[1]), lookup.vecs.dtype)]
+        ),
+        qids=jnp.concatenate([lookup.qids, jnp.arange(q, q_total, dtype=jnp.int32)]),
+        leaves=jnp.concatenate(
+            [lookup.leaves, jnp.full((pad,), PAD_QUERY_LEAF, jnp.int32)]
+        ),
+        offsets=lookup.offsets,
+    )
+
+
+def _shard_id(mesh: Mesh, axes) -> jax.Array:
+    sid = jnp.int32(0)
+    for a in axes:
+        sid = sid * mesh.shape[a] + jax.lax.axis_index(a)
+    return sid
+
+
+def _point_major_fn(mesh, plan: SearchPlan, *, n_leaves, shard_rows, q_total,
+                    axes):
+    block_rows, q_cap, k = plan.block_rows, plan.q_cap, plan.k
+    n_shards = math.prod(mesh.shape[a] for a in axes)
+    if shard_rows % block_rows != 0:
+        raise ValueError(f"{shard_rows=} not divisible by {block_rows=}")
+    if k > block_rows:
+        raise ValueError(f"{k=} must be <= {block_rows=}")
+    if q_cap > q_total:
+        raise ValueError(f"{q_cap=} must be <= padded query count {q_total=}")
+    n_waves = shard_rows // block_rows
+
+    def shard_fn(vecs, leaves, ids, lk_vecs, lk_leaves, lk_offsets):
+        vecs, leaves, ids = vecs[0], leaves[0], ids[0]
+
+        def wave(i, c: _Carry) -> _Carry:
+            start = i * block_rows
+            pv = jax.lax.dynamic_slice(vecs, (start, 0), (block_rows, vecs.shape[1]))
+            plf = jax.lax.dynamic_slice(leaves, (start,), (block_rows,))
+            pid = jax.lax.dynamic_slice(ids, (start,), (block_rows,))
+            # contiguous query slab for this tile's leaf span
+            slab = tilescan.leaf_slab(
+                lk_offsets, plf[0], n_entries=n_leaves, total_rows=q_total,
+                cap=q_cap,
+            )
+            qv = jax.lax.dynamic_slice(
+                lk_vecs, (slab.start, 0), (q_cap, lk_vecs.shape[1])
+            )
+            qlf = jax.lax.dynamic_slice(lk_leaves, (slab.start,), (q_cap,))
+            cand_d, cand_i = tilescan.scan_tile(
+                pv, plf, pid, qv, qlf, k=k, impl=plan.impl
+            )
+            # fold into the running per-query k-NN table
+            cur_d = jax.lax.dynamic_slice(c.best_d, (slab.start, 0), (q_cap, k))
+            cur_i = jax.lax.dynamic_slice(c.best_i, (slab.start, 0), (q_cap, k))
+            new_d, new_i = tilescan.fold_topk(cur_d, cur_i, cand_d, cand_i)
+            best_d = jax.lax.dynamic_update_slice(c.best_d, new_d, (slab.start, 0))
+            best_i = jax.lax.dynamic_update_slice(c.best_i, new_i, (slab.start, 0))
+            # bookkeeping: pairs computed + slab-budget misses
+            pairs = c.pairs + tilescan.count_pairs(plf, qlf)
+            overflow = c.overflow + tilescan.slab_overflow(
+                lk_offsets, tilescan.last_valid_leaf(plf), slab,
+                n_entries=n_leaves,
+            )
+            return _Carry(best_d, best_i, pairs, overflow)
+
+        init = _Carry(
+            best_d=jnp.full((q_total, k), jnp.inf, jnp.float32),
+            best_i=jnp.full((q_total, k), INVALID_ID, jnp.int32),
+            pairs=jnp.zeros((), jnp.float32),
+            overflow=jnp.zeros((), jnp.int32),
+        )
+        # the carry varies across shards (each shard scans its own rows)
+        init = jax.tree.map(lambda x: pcast_varying(x, axes), init)
+        out = jax.lax.fori_loop(0, n_waves, wave, init)
+        pairs = jax.lax.psum(out.pairs, axes)
+        overflow = jax.lax.psum(out.overflow, axes)
+        return out.best_d[None], out.best_i[None], pairs, overflow
+
+    def pipeline(index: DistributedIndex, lookup: LookupTable) -> SearchResult:
+        d = index.vecs.shape[-1]
+        vecs = index.vecs.reshape(n_shards, shard_rows, d)
+        leaves = index.leaves.reshape(n_shards, shard_rows)
+        ids = index.ids.reshape(n_shards, shard_rows)
+        row_spec = P(axes, None)
+        flat_spec = P(axes)
+        rep = P()
+        best_d, best_i, pairs, overflow = shard_map(
+            shard_fn,
+            mesh=mesh,
+            in_specs=(row_spec, flat_spec, flat_spec, rep, rep, rep),
+            out_specs=(P(axes, None, None), P(axes, None, None), rep, rep),
+        )(vecs, leaves, ids, lookup.vecs, lookup.leaves, lookup.offsets)
+        # ---- reduce: merge per-shard k-NN tables --------------------------
+        # (S, Q, k) sharded over S -> (Q, S*k) sharded over Q (all_to_all
+        # reshard), then a purely local per-row top-k. Never replicated:
+        # at pod scale the stacked table is tens of GB global.
+        row_sh = NamedSharding(mesh, P(axes, None))
+        all_d = jnp.transpose(best_d, (1, 0, 2)).reshape(q_total, n_shards * k)
+        all_i = jnp.transpose(best_i, (1, 0, 2)).reshape(q_total, n_shards * k)
+        all_d = jax.lax.with_sharding_constraint(all_d, row_sh)
+        all_i = jax.lax.with_sharding_constraint(all_i, row_sh)
+        neg, sel = jax.lax.top_k(-all_d, k)
+        merged_d = -neg + sq_norms(lookup.vecs)[:, None]  # add back ||q||^2
+        merged_i = jnp.take_along_axis(all_i, sel, axis=1)
+        merged_d = jnp.where(merged_i >= 0, merged_d, jnp.inf)
+        # ---- unsort to flat slot order, then merge probe groups -----------
+        out_d = jnp.full_like(merged_d, jnp.inf).at[lookup.qids].set(merged_d)
+        out_i = jnp.full_like(merged_i, INVALID_ID).at[lookup.qids].set(merged_i)
+        out_d, out_i = tilescan.merge_probe_groups(out_d, out_i, plan.probes)
+        out_d = jax.lax.with_sharding_constraint(out_d, row_sh)
+        out_i = jax.lax.with_sharding_constraint(out_i, row_sh)
+        return SearchResult(ids=out_i, dists=out_d, pairs=pairs,
+                            q_cap_overflow=overflow)
+
+    return pipeline
+
+
+def _query_routed_fn(mesh, plan: SearchPlan, *, n_leaves, shard_rows, q_total,
+                     axes):
+    q_tile, p_cap, k = plan.q_tile, plan.p_cap, plan.k
+    n_shards = math.prod(mesh.shape[a] for a in axes)
+    if n_leaves % n_shards:
+        raise ValueError(f"{n_leaves=} must divide over {n_shards} shards")
+    lps = n_leaves // n_shards
+    q_cap_shard = round_up(
+        max(q_tile, int(q_total / n_shards * plan.query_capacity_factor)),
+        q_tile,
+    )
+    n_qwaves = q_cap_shard // q_tile
+
+    def shard_fn(vecs, leaves, ids, offsets, lk_vecs, lk_leaves, lk_qids):
+        vecs, leaves, ids, offsets = vecs[0], leaves[0], ids[0], offsets[0]
+        leaf_base = _shard_id(mesh, axes) * lps
+        # ---- shuffle: route query rows to their leaf's owner shard --------
+        routed = route_lib.route_by_leaf(
+            lk_vecs,
+            lk_qids,
+            lk_leaves,
+            axis_name=axes,
+            n_shards=n_shards,
+            leaves_per_shard=lps,
+            capacity=q_cap_shard // n_shards,
+            wire_dtype=plan.wire_dtype,
+        )
+        qv_all, qids_all, qlf_all, _, _ = route_lib.cluster_sort(
+            routed, leaf_base=leaf_base, leaves_per_shard=lps
+        )
+        # pad/trim the local query set to the static budget
+        pad = q_cap_shard - qv_all.shape[0]
+        if pad > 0:
+            qv_all = jnp.concatenate(
+                [qv_all, jnp.zeros((pad, qv_all.shape[1]), qv_all.dtype)]
+            )
+            qids_all = jnp.concatenate(
+                [qids_all, jnp.full((pad,), INVALID_ID, jnp.int32)]
+            )
+            qlf_all = jnp.concatenate(
+                [qlf_all, jnp.full((pad,), LEAF_SENTINEL, jnp.int32)]
+            )
+        else:
+            qv_all = qv_all[:q_cap_shard]
+            qids_all = qids_all[:q_cap_shard]
+            qlf_all = qlf_all[:q_cap_shard]
+
+        def wave(w):
+            qs = w * q_tile
+            qv = jax.lax.dynamic_slice(qv_all, (qs, 0), (q_tile, qv_all.shape[1]))
+            qlf = jax.lax.dynamic_slice(qlf_all, (qs,), (q_tile,))
+            # contiguous local point slab covering this tile's leaf span
+            slab = tilescan.leaf_slab(
+                offsets, qlf[0] - leaf_base, n_entries=lps,
+                total_rows=shard_rows, cap=p_cap,
+            )
+            pv = jax.lax.dynamic_slice(
+                vecs, (slab.start, 0), (p_cap, vecs.shape[1])
+            )
+            plf = jax.lax.dynamic_slice(leaves, (slab.start,), (p_cap,))
+            pid = jax.lax.dynamic_slice(ids, (slab.start,), (p_cap,))
+            cand_d, cand_i = tilescan.scan_tile(
+                pv, plf, pid, qv, qlf, k=k, impl=plan.impl
+            )
+            cand_d = cand_d + sq_norms(qv)[:, None]  # true squared distance
+            ov = tilescan.slab_overflow(
+                offsets, tilescan.last_valid_leaf(qlf, base=leaf_base), slab,
+                n_entries=lps,
+            )
+            pairs = tilescan.count_pairs(plf, qlf)
+            return cand_d, cand_i, ov, pairs
+
+        cand_d, cand_i, ov, pairs = jax.lax.map(wave, jnp.arange(n_qwaves))
+        overflow = jax.lax.psum(jnp.sum(ov), axes) + jax.lax.psum(
+            routed.overflow, axes
+        )
+        pairs = jax.lax.psum(jnp.sum(pairs), axes)
+        return (
+            cand_d.reshape(1, q_cap_shard, k),
+            cand_i.reshape(1, q_cap_shard, k),
+            qids_all[None],
+            pairs,
+            overflow,
+        )
+
+    def pipeline(index: DistributedIndex, lookup: LookupTable) -> SearchResult:
+        d = index.vecs.shape[-1]
+        vecs = index.vecs.reshape(n_shards, shard_rows, d)
+        leaves = index.leaves.reshape(n_shards, shard_rows)
+        ids = index.ids.reshape(n_shards, shard_rows)
+        row_spec = P(axes, None)
+        flat_spec = P(axes)
+        rep = P()
+        cand_d, cand_i, qids, pairs, overflow = shard_map(
+            shard_fn,
+            mesh=mesh,
+            in_specs=(row_spec, flat_spec, flat_spec, row_spec, rep, rep, rep),
+            out_specs=(P(axes, None, None), P(axes, None, None), P(axes, None),
+                       rep, rep),
+        )(vecs, leaves, ids, index.offsets, lookup.vecs, lookup.leaves,
+          lookup.qids)
+        # one global scatter back to flat slot order (each lookup row was
+        # answered by exactly one shard — no cross-shard merge needed),
+        # then merge each query's probe rows
+        flat_d = cand_d.reshape(-1, k)
+        flat_i = cand_i.reshape(-1, k)
+        flat_q = qids.reshape(-1)
+        safe_q = jnp.where(flat_q >= 0, flat_q, q_total)
+        out_d = jnp.full((q_total, k), jnp.inf, jnp.float32).at[safe_q].set(
+            flat_d, mode="drop"
+        )
+        out_i = jnp.full((q_total, k), INVALID_ID, jnp.int32).at[safe_q].set(
+            flat_i, mode="drop"
+        )
+        out_d, out_i = tilescan.merge_probe_groups(out_d, out_i, plan.probes)
+        row_sh = NamedSharding(mesh, P(axes, None))
+        out_d = jax.lax.with_sharding_constraint(out_d, row_sh)
+        out_i = jax.lax.with_sharding_constraint(out_i, row_sh)
+        return SearchResult(ids=out_i, dists=out_d, pairs=pairs,
+                            q_cap_overflow=overflow)
+
+    return pipeline
+
+
+def make_executor(
+    mesh: Mesh,
+    plan: SearchPlan,
+    *,
+    n_leaves: int,
+    shard_rows: int,
+    q_total: int,
+    axes=None,
+):
+    """Build the jittable ``(index, lookup) -> SearchResult`` pipeline.
+
+    ``q_total`` is the *padded lookup row* count (``n_queries * probes``
+    rounded up); it must be a multiple of ``plan.probes`` so the final
+    probe-group merge can reshape. Output tables have
+    ``q_total // plan.probes`` rows (one per original query group).
+    """
+    plan = plan.resolved()
+    axes = tuple(axes) if axes else batch_axes(mesh)
+    if q_total % plan.probes:
+        raise ValueError(f"{q_total=} must be a multiple of {plan.probes=}")
+    builder = (
+        _point_major_fn if plan.layout == "point_major" else _query_routed_fn
+    )
+    return builder(
+        mesh, plan, n_leaves=n_leaves, shard_rows=shard_rows, q_total=q_total,
+        axes=axes,
+    )

@@ -1,0 +1,210 @@
+"""Declarative search plans + the auto-planning heuristic.
+
+A :class:`SearchPlan` is the single static description both executors are
+built from. ``plan()`` resolves an ``"auto"`` layout and any unset budgets
+from the index/mesh/query shapes using a first-order cost model of the two
+scan layouts:
+
+  * ``point_major`` — every shard sweeps its ``shard_rows`` index rows in
+    waves of ``block_rows`` against a ``q_cap``-row query slab, carrying a
+    full ``(rows, k)`` running-best table. Tile work per shard is
+    ``shard_rows * q_cap`` distance pairs; the carry costs
+    ``O(rows * k)`` HBM traffic per wave.
+  * ``query_routed`` — queries are shuffled to the shard owning their leaf,
+    then each ``q_tile`` query tile reads one ``p_cap`` point slab. Tile
+    work per shard is ``n_qwaves * q_tile * p_cap`` pairs with no carry.
+
+The model only has to rank the two layouts, not predict wall-clock.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax.numpy as jnp
+
+from repro.distributed.meshutil import round_up
+
+LAYOUTS = ("point_major", "query_routed")
+
+
+def largest_divisor_leq(n: int, cap: int) -> int:
+    """Largest divisor of ``n`` that is ``<= cap`` — O(sqrt n), no linear
+    countdown. Used to snap requested tile sizes onto the shard grid."""
+    if n <= 0:
+        raise ValueError(f"{n=} must be positive")
+    cap = max(1, min(cap, n))
+    best = 1
+    for lo in range(1, int(math.isqrt(n)) + 1):
+        if n % lo:
+            continue
+        hi = n // lo
+        if lo <= cap and lo > best:
+            best = lo
+        if hi <= cap and hi > best:
+            best = hi
+    return best
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchPlan:
+    """Static description of one search execution (hashable, jit-safe).
+
+    ``None`` budget fields mean "let ``plan()``/the wrapper pick"; the
+    executors require them resolved.
+    """
+
+    layout: str  # "point_major" | "query_routed"
+    k: int
+    probes: int = 1  # multi-probe width T: leaves visited per query
+    impl: str = "xla"  # l2topk impl: "xla" | "pallas" | "auto"
+    wire_dtype: Any = jnp.float32  # routed-shuffle payload dtype
+    # point-major budgets
+    block_rows: int | None = None  # index rows per wave tile
+    q_cap: int | None = None  # query-slab rows per tile
+    # query-routed budgets
+    q_tile: int | None = None  # queries per wave tile
+    p_cap: int | None = None  # point-slab rows per query tile
+    query_capacity_factor: float = 4.0  # routing headroom for hot shards
+
+    def __post_init__(self):
+        if self.layout not in LAYOUTS:
+            raise ValueError(f"unknown layout {self.layout!r}; want {LAYOUTS}")
+        if self.k < 1:
+            raise ValueError(f"{self.k=} must be >= 1")
+        if self.probes < 1:
+            raise ValueError(f"{self.probes=} must be >= 1")
+
+    def resolved(self) -> "SearchPlan":
+        """Check the budgets this layout needs are set."""
+        need = (
+            ("block_rows", "q_cap")
+            if self.layout == "point_major"
+            else ("q_tile", "p_cap")
+        )
+        for f in need:
+            if getattr(self, f) is None:
+                raise ValueError(f"plan field {f!r} unresolved for {self.layout}")
+        return self
+
+
+def _point_major_budgets(
+    p: SearchPlan, *, shard_rows: int, n_leaves: int, q_rows: int,
+    n_shards: int
+) -> SearchPlan:
+    block_rows = p.block_rows or 1024
+    block_rows = largest_divisor_leq(shard_rows, block_rows)
+    q_cap = p.q_cap
+    if q_cap is None:
+        # slab must cover the probe-expanded queries of every leaf a block
+        # tile spans: expected rows = q_rows * block_rows / global rows,
+        # floored by the per-leaf mean; 4x headroom for skew (multi-probe
+        # concentrates extra rows in popular leaves — paper Exp #5 RAM knob)
+        expected = max(
+            q_rows * block_rows // max(1, shard_rows * n_shards),
+            q_rows // max(1, n_leaves),
+        )
+        q_cap = min(q_rows, max(256, round_up(4 * expected, 8)))
+    return dataclasses.replace(p, block_rows=block_rows, q_cap=q_cap)
+
+
+def _query_routed_budgets(
+    p: SearchPlan, *, shard_rows: int, n_leaves: int, q_rows: int,
+    n_shards: int
+) -> SearchPlan:
+    q_tile = p.q_tile or 128
+    p_cap = p.p_cap
+    if p_cap is None:
+        # each shard owns n_leaves/n_shards leaves, so rows per *owned*
+        # leaf is shard_rows * n_shards / n_leaves (== global rows/leaf)
+        avg_leaf = max(1, shard_rows * n_shards // max(1, n_leaves))
+        # a q_tile of consecutive sorted queries covers ~q_tile/local_rows
+        # of the shard's leaf range — when queries are sparse relative to
+        # leaves the point span explodes (and the cost model then correctly
+        # prefers point-major); 2x headroom for skew
+        local_rows = max(q_tile, q_rows // max(1, n_shards))
+        span = shard_rows * q_tile // local_rows
+        p_cap = min(
+            shard_rows, round_up(max(4096, 16 * avg_leaf, 2 * span), 8)
+        )
+    return dataclasses.replace(p, q_tile=q_tile, p_cap=p_cap)
+
+
+def _scan_cost(p: SearchPlan, *, shard_rows: int, n_shards: int,
+               q_rows: int, k: int) -> float:
+    """First-order per-shard cost (distance pairs + carry traffic)."""
+    if p.layout == "point_major":
+        n_waves = shard_rows // p.block_rows
+        tile_pairs = shard_rows * p.q_cap
+        carry = n_waves * q_rows * k  # running-best table touched per wave
+        return float(tile_pairs + carry)
+    q_cap_shard = round_up(
+        max(p.q_tile, int(q_rows / n_shards * p.query_capacity_factor)),
+        p.q_tile,
+    )
+    n_qwaves = q_cap_shard // p.q_tile
+    shuffle = q_rows / n_shards * 2.0  # all_to_all send+recv rows
+    return float(n_qwaves * p.q_tile * p.p_cap + shuffle)
+
+
+def plan(
+    *,
+    rows: int,
+    n_leaves: int,
+    n_queries: int,
+    n_shards: int,
+    k: int,
+    probes: int = 1,
+    layout: str = "auto",
+    impl: str = "xla",
+    wire_dtype: Any = jnp.float32,
+    block_rows: int | None = None,
+    q_cap: int | None = None,
+    q_tile: int | None = None,
+    p_cap: int | None = None,
+    query_capacity_factor: float = 4.0,
+) -> SearchPlan:
+    """Resolve a full :class:`SearchPlan` from shapes.
+
+    ``layout="auto"`` budgets *both* layouts and keeps the one with the
+    lower modelled scan cost; ``query_routed`` additionally requires
+    ``n_leaves`` to divide evenly over the shards (leaf ownership is a
+    contiguous range per shard).
+    """
+    if probes > n_leaves:
+        raise ValueError(f"{probes=} must be <= {n_leaves=}")
+    shard_rows = max(1, rows // max(1, n_shards))
+    q_rows = max(1, n_queries * probes)  # probe-expanded lookup rows
+    base = dict(
+        k=k, probes=probes, impl=impl, wire_dtype=wire_dtype,
+        block_rows=block_rows, q_cap=q_cap, q_tile=q_tile, p_cap=p_cap,
+        query_capacity_factor=query_capacity_factor,
+    )
+    shapes = dict(shard_rows=shard_rows, n_leaves=n_leaves, q_rows=q_rows)
+    pm = _point_major_budgets(
+        SearchPlan(layout="point_major", **base), n_shards=n_shards, **shapes
+    )
+    routable = n_leaves % n_shards == 0
+    if layout == "point_major" or (layout == "auto" and not routable):
+        return pm.resolved()
+    qr = _query_routed_budgets(
+        SearchPlan(layout="query_routed", **base), n_shards=n_shards, **shapes
+    )
+    if layout == "query_routed":
+        if not routable:
+            raise ValueError(
+                f"{n_leaves=} must divide over {n_shards} shards for "
+                "layout='query_routed'"
+            )
+        return qr.resolved()
+    if layout != "auto":
+        raise ValueError(f"unknown layout {layout!r}")
+    cost = {
+        p.layout: _scan_cost(p, shard_rows=shard_rows, n_shards=n_shards,
+                             q_rows=q_rows, k=k)
+        for p in (pm, qr)
+    }
+    # tie goes to the paper-faithful baseline
+    return (pm if cost["point_major"] <= cost["query_routed"] else qr).resolved()

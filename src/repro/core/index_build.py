@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import route as route_lib
+from repro.distributed.compat import shard_map
 from repro.core.tree import VocabTree, tree_assign
 from repro.distributed.meshutil import batch_axes, data_axis_size, round_up
 
@@ -142,7 +143,7 @@ def build_index_fn(
         vecs = vecs.reshape(n_shards, rows_per_shard, vecs.shape[-1])
         ids = ids.reshape(n_shards, rows_per_shard)
         tree_specs = jax.tree.map(lambda _: P(), tree)
-        out = jax.shard_map(
+        out = shard_map(
             shard_fn,
             mesh=mesh,
             in_specs=(row_spec, flat_spec, tree_specs),
@@ -183,14 +184,10 @@ def build_index(
         # padding rows get id -1 and will be routed but never matched
         ids = jnp.concatenate([ids, jnp.full((n_pad - n,), -1, jnp.int32)])
     rows_per_shard = n_pad // n_shards
-    if wave_rows is None:
-        wave_rows = 4096
-    if rows_per_shard % wave_rows != 0:
-        # snap to the largest divisor of rows_per_shard <= requested
-        wave_rows = next(
-            w for w in range(min(wave_rows, rows_per_shard), 0, -1)
-            if rows_per_shard % w == 0
-        )
+    from repro.core.engine.plan import largest_divisor_leq
+
+    # snap to the largest divisor of rows_per_shard <= requested
+    wave_rows = largest_divisor_leq(rows_per_shard, wave_rows or 4096)
     fn = build_index_fn(
         mesh,
         n_leaves=tree.n_leaves,

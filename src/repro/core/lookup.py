@@ -15,6 +15,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.core.distance import sq_norms
 from repro.core.tree import VocabTree, tree_assign
 
 
@@ -49,16 +50,88 @@ class LookupTable:
         )
 
 
-def build_lookup(tree: VocabTree, queries: jax.Array) -> LookupTable:
-    """Assign queries to leaves and build the CSR table (jit-able)."""
-    leaves = tree_assign(tree, queries)
+def probe_leaves(tree: VocabTree, queries: jax.Array, probes: int) -> jax.Array:
+    """(Q, probes) leaves per query: the hierarchical assignment first, then
+    the next-nearest leaves (multi-probe soft assignment).
+
+    Beam descent, not a dense scan over all ``n_leaves`` centroids: each
+    level keeps the ``probes`` nearest nodes among the beam's children
+    (O(Q * probes * fanout * d) per level — same shape as ``tree_assign``,
+    beam-wide), so large-vocab trees (65k leaves) never materialise a
+    (Q, n_leaves) distance matrix.
+
+    Column 0 is exactly ``tree_assign``: the greedy chain is maintained
+    *inside* the loop with the same arithmetic (one descent, not two), is
+    force-kept in the beam, and is pinned to rank 0 — so ``probes=1``
+    reproduces the hard assignment and widening ``probes`` only ever
+    *adds* visited leaves (recall is monotone non-decreasing in T).
+    """
+    if probes == 1:
+        return tree_assign(tree, queries).astype(jnp.int32)[:, None]
+    qf = queries.astype(jnp.float32)
+    n_q = qf.shape[0]
+    roots = tree.levels[0].astype(jnp.float32)
+    d2 = sq_norms(roots)[None, :] - 2.0 * jnp.einsum(
+        "qd,md->qm", qf, roots, preferred_element_type=jnp.float32
+    )  # (Q, f0) — same partial distance tree_assign's nearest() uses
+    greedy = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    neg, nodes = jax.lax.top_k(-d2, min(probes, roots.shape[0]))
+    has = (nodes == greedy[:, None]).any(axis=1)
+    nodes = nodes.at[:, -1].set(jnp.where(has, nodes[:, -1], greedy))
+    for lvl in tree.levels[1:]:
+        f = lvl.shape[1]
+        lf = lvl.astype(jnp.float32)
+        cn = jnp.sum(lf * lf, axis=-1)  # (nodes, f) — loop-invariant
+        gathered = lf[nodes]  # (Q, B, f, d)
+        d2 = cn[nodes] - 2.0 * jnp.einsum(
+            "qd,qbfd->qbf", qf, gathered, preferred_element_type=jnp.float32
+        )
+        cand = nodes[:, :, None] * f + jnp.arange(f, dtype=jnp.int32)
+        neg, sel = jax.lax.top_k(-d2.reshape(n_q, -1), min(probes, cand[0].size))
+        nodes = jnp.take_along_axis(cand.reshape(n_q, -1), sel, axis=1)
+        # advance the greedy chain and force it into the beam (it can fall
+        # out: beam score is centroid distance, which is not monotone down
+        # the hierarchy) — replace the worst slot when missing
+        g_children = lf[greedy]  # (Q, f, d)
+        gd2 = cn[greedy] - 2.0 * jnp.einsum(
+            "qd,qfd->qf", qf, g_children, preferred_element_type=jnp.float32
+        )
+        greedy = greedy * f + jnp.argmin(gd2, axis=1).astype(jnp.int32)
+        has = (nodes == greedy[:, None]).any(axis=1)
+        nodes = nodes.at[:, -1].set(jnp.where(has, nodes[:, -1], greedy))
+    # pin the hard assignment (== greedy chain) to rank 0, keep the rest in
+    # beam (ascending-distance) order
+    is_primary = nodes == greedy[:, None]
+    rank = jnp.where(is_primary, -1, jnp.arange(nodes.shape[1], dtype=jnp.int32))
+    order = jnp.argsort(rank, axis=1, stable=True)
+    return jnp.take_along_axis(nodes, order, axis=1).astype(jnp.int32)
+
+
+def build_lookup(
+    tree: VocabTree, queries: jax.Array, *, probes: int = 1
+) -> LookupTable:
+    """Assign queries to their ``probes`` nearest leaves and build the CSR
+    table (jit-able; ``probes`` static).
+
+    With multi-probe, each query expands into ``probes`` rows (same vector,
+    one row per probed leaf). ``qids`` then hold *flat merge slots*
+    ``query_id * probes + probe_rank`` — a permutation of
+    ``arange(Q * probes)`` — which the engine executors scatter into and
+    fold back to one k-row per query at merge time.
+    """
+    if probes < 1:
+        raise ValueError(f"{probes=} must be >= 1")
+    if probes > tree.n_leaves:
+        raise ValueError(f"{probes=} must be <= n_leaves={tree.n_leaves}")
+    leaves = probe_leaves(tree, queries, probes).reshape(-1)
+    vecs = jnp.repeat(queries, probes, axis=0) if probes > 1 else queries
     order = jnp.argsort(leaves, stable=True)
     sorted_leaves = leaves[order].astype(jnp.int32)
     offsets = jnp.searchsorted(
         sorted_leaves, jnp.arange(tree.n_leaves + 1, dtype=jnp.int32)
     ).astype(jnp.int32)
     return LookupTable(
-        vecs=queries[order],
+        vecs=vecs[order],
         qids=order.astype(jnp.int32),
         leaves=sorted_leaves,
         offsets=offsets,

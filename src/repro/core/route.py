@@ -26,10 +26,10 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-# Sentinel leaf id that sorts after every real leaf (rows marked invalid).
-# Plain Python int: module-level jax arrays would initialise the backend at
-# import time and break the dry-run's forced device count.
-SENTINEL = 2**31 - 1
+from repro.core.sentinels import LEAF_SENTINEL
+
+# Historical alias — the named constants now live in repro.core.sentinels.
+SENTINEL = LEAF_SENTINEL
 
 
 class CountingLayout(NamedTuple):

@@ -1,58 +1,29 @@
-"""Distributed batch search (paper §2.4), SPMD.
+"""Distributed batch search (paper §2.4) — compatibility shim.
 
-Map: every shard scans its cluster-sorted index rows in waves of
-``block_rows`` (HDFS-block analog). Because both the index shard and the
-lookup table are sorted by leaf id, the queries colliding with a tile are a
-*contiguous slab* of the lookup table — the tile reads ``q_cap`` rows
-starting at ``offsets[first_leaf_of_tile]``, computes one dense distance
-GEMM, masks exact leaf equality, and folds the per-query best-k into a
-running table (``l2topk`` kernel shape). Reduce: per-shard k-NN tables are
-merged with one log-shaped top-k across the data axis.
+The actual machinery lives in :mod:`repro.core.engine`: a declarative
+:class:`~repro.core.engine.SearchPlan`, a ``plan()`` heuristic, and two
+executors (point-major and query-routed) rewritten on one shared tile-scan
+core. This module keeps the historical entry points stable:
 
-The lookup table is the broadcast auxiliary data; ``q_cap`` is the RAM-
-limited lookup-table budget the paper discusses in Exp #5 — overflow of the
-slab is counted and reported, never silently wrong (tests assert 0).
+  * ``batch_search_fn`` / ``routed_search_fn`` — jittable pipeline builders
+    with their original signatures (configs and hillclimb cells call these);
+  * ``pad_lookup`` — lookup padding (now sentinel-named);
+  * ``batch_search`` — the eager convenience wrapper, which gained
+    ``layout="auto"`` (plan-heuristic pick) and multi-probe ``probes=T``.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import NamedTuple
-
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
-from repro.core.distance import sq_norms
+from repro.core.engine import SearchPlan, make_executor, plan as make_plan
+from repro.core.engine.executors import SearchResult, pad_lookup  # noqa: F401
 from repro.core.index_build import DistributedIndex
 from repro.core.lookup import LookupTable, build_lookup
-from repro.core.route import SENTINEL
 from repro.core.tree import VocabTree
-from repro.distributed.meshutil import batch_axes, data_axis_size, round_up
-from repro.kernels.l2topk import ops as l2topk_ops
-
-
-@jax.tree_util.register_pytree_node_class
-@dataclasses.dataclass
-class SearchResult:
-    ids: jax.Array  # (Q, k) global descriptor ids, -1 where fewer than k
-    dists: jax.Array  # (Q, k) true squared L2 distances (inf where id=-1)
-    pairs: jax.Array  # () number of (point, query) distance pairs computed
-    q_cap_overflow: jax.Array  # () slab-budget misses (0 == exact-in-cluster)
-
-    def tree_flatten(self):
-        return (self.ids, self.dists, self.pairs, self.q_cap_overflow), None
-
-    @classmethod
-    def tree_unflatten(cls, aux, children):
-        return cls(*children)
-
-
-class _Carry(NamedTuple):
-    best_d: jax.Array
-    best_i: jax.Array
-    pairs: jax.Array
-    overflow: jax.Array
+from repro.distributed.meshutil import data_axis_size, round_up
 
 
 def batch_search_fn(
@@ -64,110 +35,19 @@ def batch_search_fn(
     block_rows: int,
     q_cap: int,
     k: int,
+    probes: int = 1,
     impl: str = "xla",
     axes=None,
 ):
-    """Build the jittable (index, lookup) -> SearchResult pipeline."""
-    import math as _math
-
-    axes = tuple(axes) if axes else batch_axes(mesh)
-    n_shards = _math.prod(mesh.shape[a] for a in axes)
-    if shard_rows % block_rows != 0:
-        raise ValueError(f"{shard_rows=} not divisible by {block_rows=}")
-    if k > block_rows:
-        raise ValueError(f"{k=} must be <= {block_rows=}")
-    if q_cap > q_total:
-        raise ValueError(f"{q_cap=} must be <= padded query count {q_total=}")
-    n_waves = shard_rows // block_rows
-
-    def shard_fn(vecs, leaves, ids, lk_vecs, lk_leaves, lk_offsets):
-        vecs, leaves, ids = vecs[0], leaves[0], ids[0]
-
-        def wave(i, c: _Carry) -> _Carry:
-            start = i * block_rows
-            pv = jax.lax.dynamic_slice(vecs, (start, 0), (block_rows, vecs.shape[1]))
-            plf = jax.lax.dynamic_slice(leaves, (start,), (block_rows,))
-            pid = jax.lax.dynamic_slice(ids, (start,), (block_rows,))
-            # contiguous query slab for this tile's leaf span
-            l0 = jnp.clip(plf[0], 0, n_leaves - 1)
-            qstart = jnp.clip(lk_offsets[l0], 0, q_total - q_cap)
-            qv = jax.lax.dynamic_slice(lk_vecs, (qstart, 0), (q_cap, lk_vecs.shape[1]))
-            qlf = jax.lax.dynamic_slice(lk_leaves, (qstart,), (q_cap,))
-            # fused distance + per-query top-k over the tile (kernel shape)
-            cand_d, cand_sel = l2topk_ops.l2_topk(
-                pv, plf, qv, qlf, k=k, impl=impl
-            )  # (q_cap, k): partial sqdist (no ||q||^2) + tile-row index
-            cand_i = jnp.where(cand_sel >= 0, pid[jnp.clip(cand_sel, 0)], -1)
-            cand_d = jnp.where(cand_i >= 0, cand_d, jnp.inf)
-            # fold into the running per-query k-NN table
-            cur_d = jax.lax.dynamic_slice(c.best_d, (qstart, 0), (q_cap, k))
-            cur_i = jax.lax.dynamic_slice(c.best_i, (qstart, 0), (q_cap, k))
-            all_d = jnp.concatenate([cur_d, cand_d], axis=1)
-            all_i = jnp.concatenate([cur_i, cand_i], axis=1)
-            neg, sel = jax.lax.top_k(-all_d, k)
-            new_i = jnp.take_along_axis(all_i, sel, axis=1)
-            best_d = jax.lax.dynamic_update_slice(c.best_d, -neg, (qstart, 0))
-            best_i = jax.lax.dynamic_update_slice(c.best_i, new_i, (qstart, 0))
-            # bookkeeping: pairs computed + slab-budget misses
-            valid = plf != SENTINEL
-            match = (plf[:, None] == qlf[None, :]) & valid[:, None]
-            pairs = c.pairs + jnp.sum(match, dtype=jnp.float32)
-            last_leaf = jnp.max(jnp.where(valid, plf, -1))
-            need_end = jnp.where(
-                last_leaf >= 0, lk_offsets[jnp.clip(last_leaf, 0, n_leaves - 1) + 1], qstart
-            )
-            overflow = c.overflow + jnp.maximum(0, need_end - qstart - q_cap)
-            return _Carry(best_d, best_i, pairs, overflow)
-
-        init = _Carry(
-            best_d=jnp.full((q_total, k), jnp.inf, jnp.float32),
-            best_i=jnp.full((q_total, k), -1, jnp.int32),
-            pairs=jnp.zeros((), jnp.float32),
-            overflow=jnp.zeros((), jnp.int32),
-        )
-        # the carry varies across shards (each shard scans its own rows)
-        init = jax.tree.map(lambda x: jax.lax.pcast(x, axes, to="varying"), init)
-        out = jax.lax.fori_loop(0, n_waves, wave, init)
-        pairs = jax.lax.psum(out.pairs, axes)
-        overflow = jax.lax.psum(out.overflow, axes)
-        return out.best_d[None], out.best_i[None], pairs, overflow
-
-    def pipeline(index: DistributedIndex, lookup: LookupTable) -> SearchResult:
-        d = index.vecs.shape[-1]
-        vecs = index.vecs.reshape(n_shards, shard_rows, d)
-        leaves = index.leaves.reshape(n_shards, shard_rows)
-        ids = index.ids.reshape(n_shards, shard_rows)
-        row_spec = P(axes, None)
-        flat_spec = P(axes)
-        rep = P()
-        best_d, best_i, pairs, overflow = jax.shard_map(
-            shard_fn,
-            mesh=mesh,
-            in_specs=(row_spec, flat_spec, flat_spec, rep, rep, rep),
-            out_specs=(P(axes, None, None), P(axes, None, None), rep, rep),
-        )(vecs, leaves, ids, lookup.vecs, lookup.leaves, lookup.offsets)
-        # ---- reduce: merge per-shard k-NN tables --------------------------
-        # (S, Q, k) sharded over S -> (Q, S*k) sharded over Q (all_to_all
-        # reshard), then a purely local per-row top-k. Never replicated:
-        # at pod scale the stacked table is tens of GB global.
-        row_sh = NamedSharding(mesh, P(axes, None))
-        all_d = jnp.transpose(best_d, (1, 0, 2)).reshape(q_total, n_shards * k)
-        all_i = jnp.transpose(best_i, (1, 0, 2)).reshape(q_total, n_shards * k)
-        all_d = jax.lax.with_sharding_constraint(all_d, row_sh)
-        all_i = jax.lax.with_sharding_constraint(all_i, row_sh)
-        neg, sel = jax.lax.top_k(-all_d, k)
-        merged_d = -neg + sq_norms(lookup.vecs)[:, None]  # add back ||q||^2
-        merged_i = jnp.take_along_axis(all_i, sel, axis=1)
-        merged_d = jnp.where(merged_i >= 0, merged_d, jnp.inf)
-        # ---- unsort to original query order -------------------------------
-        out_d = jnp.zeros_like(merged_d).at[lookup.qids].set(merged_d)
-        out_i = jnp.zeros_like(merged_i).at[lookup.qids].set(merged_i)
-        out_d = jax.lax.with_sharding_constraint(out_d, row_sh)
-        out_i = jax.lax.with_sharding_constraint(out_i, row_sh)
-        return SearchResult(ids=out_i, dists=out_d, pairs=pairs,
-                            q_cap_overflow=overflow)
-
-    return pipeline
+    """Build the point-major (index, lookup) -> SearchResult pipeline."""
+    p = SearchPlan(
+        layout="point_major", k=k, probes=probes, impl=impl,
+        block_rows=block_rows, q_cap=q_cap,
+    )
+    return make_executor(
+        mesh, p, n_leaves=n_leaves, shard_rows=shard_rows, q_total=q_total,
+        axes=axes,
+    )
 
 
 def routed_search_fn(
@@ -179,170 +59,21 @@ def routed_search_fn(
     q_tile: int,
     p_cap: int,
     k: int,
+    probes: int = 1,
     query_capacity_factor: float = 4.0,
     impl: str = "xla",
     wire_dtype=jnp.float32,
     axes=None,
 ):
-    """Query-routed search (beyond-paper, EXPERIMENTS.md §Perf hillclimb #2).
-
-    The baseline (``batch_search_fn``) is point-major: every shard scans its
-    index rows against a replicated lookup table, carrying a full
-    (q_total, k) running best table that is copied/updated every wave —
-    the dominant HBM term at scale. Here the *queries* are routed to the
-    shard owning their leaf (the same capacity-padded counting sort +
-    all_to_all as index creation — paper's shuffle, reused), after which
-    every query is answered entirely locally: one contiguous point slab per
-    query tile (both sides are cluster-sorted), one distance GEMM, one
-    top-k. No running table, no cross-shard k-NN merge.
-
-    Budget knobs (both counted, never silently wrong):
-      * query routing capacity (hot shards may overflow),
-      * ``p_cap`` — points slab per query tile (leaf-span overflow).
-    """
-    import math as _math
-
-    axes = tuple(axes) if axes else batch_axes(mesh)
-    n_shards = _math.prod(mesh.shape[a] for a in axes)
-    if n_leaves % n_shards:
-        raise ValueError(f"{n_leaves=} must divide over {n_shards} shards")
-    lps = n_leaves // n_shards
-    q_cap_shard = round_up(
-        max(q_tile, int(q_total / n_shards * query_capacity_factor)), q_tile
+    """Build the query-routed (index, lookup) -> SearchResult pipeline."""
+    p = SearchPlan(
+        layout="query_routed", k=k, probes=probes, impl=impl,
+        wire_dtype=wire_dtype, q_tile=q_tile, p_cap=p_cap,
+        query_capacity_factor=query_capacity_factor,
     )
-    n_qwaves = q_cap_shard // q_tile
-    from repro.core import route as route_lib
-    from repro.core.route import SENTINEL
-
-    def shard_fn(vecs, leaves, ids, offsets, lk_vecs, lk_leaves, lk_qids):
-        vecs, leaves, ids, offsets = vecs[0], leaves[0], ids[0], offsets[0]
-        shard_id = jnp.int32(0)
-        for a in axes:
-            shard_id = shard_id * mesh.shape[a] + jax.lax.axis_index(a)
-        leaf_base = shard_id * lps
-        # ---- shuffle: route queries to their leaf's owner shard ----------
-        routed = route_lib.route_by_leaf(
-            lk_vecs,
-            lk_qids,
-            lk_leaves,
-            axis_name=axes,
-            n_shards=n_shards,
-            leaves_per_shard=lps,
-            capacity=q_cap_shard // n_shards,
-            wire_dtype=wire_dtype,
-        )
-        qv_all, qids_all, qlf_all, _, _ = route_lib.cluster_sort(
-            routed, leaf_base=leaf_base, leaves_per_shard=lps
-        )
-        # pad/trim the local query set to the static budget
-        pad = q_cap_shard - qv_all.shape[0]
-        if pad > 0:
-            qv_all = jnp.concatenate(
-                [qv_all, jnp.zeros((pad, qv_all.shape[1]), qv_all.dtype)]
-            )
-            qids_all = jnp.concatenate([qids_all, jnp.full((pad,), -1, jnp.int32)])
-            qlf_all = jnp.concatenate(
-                [qlf_all, jnp.full((pad,), SENTINEL, jnp.int32)]
-            )
-        else:
-            qv_all = qv_all[:q_cap_shard]
-            qids_all = qids_all[:q_cap_shard]
-            qlf_all = qlf_all[:q_cap_shard]
-
-        def wave(w):
-            qs = w * q_tile
-            qv = jax.lax.dynamic_slice(qv_all, (qs, 0), (q_tile, qv_all.shape[1]))
-            qlf = jax.lax.dynamic_slice(qlf_all, (qs,), (q_tile,))
-            # contiguous local point slab covering this tile's leaf span
-            l0 = jnp.clip(qlf[0] - leaf_base, 0, lps - 1)
-            pstart = jnp.clip(offsets[l0], 0, shard_rows - p_cap)
-            pv = jax.lax.dynamic_slice(vecs, (pstart, 0), (p_cap, vecs.shape[1]))
-            plf = jax.lax.dynamic_slice(leaves, (pstart,), (p_cap,))
-            pid = jax.lax.dynamic_slice(ids, (pstart,), (p_cap,))
-            cand_d, cand_sel = l2topk_ops.l2_topk(
-                pv, plf, qv, qlf, k=k, impl=impl
-            )
-            cand_i = jnp.where(cand_sel >= 0, pid[jnp.clip(cand_sel, 0)], -1)
-            cand_d = jnp.where(cand_i >= 0, cand_d, jnp.inf)
-            cand_d = cand_d + sq_norms(qv)[:, None]  # true squared distance
-            # slab-budget accounting
-            valid = qlf != SENTINEL
-            last = jnp.max(jnp.where(valid, qlf, -1)) - leaf_base
-            need_end = jnp.where(
-                last >= 0, offsets[jnp.clip(last, 0, lps - 1) + 1], pstart
-            )
-            ov = jnp.maximum(0, need_end - pstart - p_cap)
-            pairs = jnp.sum(
-                (plf[:, None] == qlf[None, :]) & valid[None, :],
-                dtype=jnp.float32,
-            )
-            return cand_d, cand_i, ov, pairs
-
-        cand_d, cand_i, ov, pairs = jax.lax.map(wave, jnp.arange(n_qwaves))
-        overflow = jax.lax.psum(jnp.sum(ov), axes) + jax.lax.psum(
-            routed.overflow, axes
-        )
-        pairs = jax.lax.psum(jnp.sum(pairs), axes)
-        return (
-            cand_d.reshape(1, q_cap_shard, k),
-            cand_i.reshape(1, q_cap_shard, k),
-            qids_all[None],
-            pairs,
-            overflow,
-        )
-
-    def pipeline(index: DistributedIndex, lookup: LookupTable) -> SearchResult:
-        d = index.vecs.shape[-1]
-        vecs = index.vecs.reshape(n_shards, shard_rows, d)
-        leaves = index.leaves.reshape(n_shards, shard_rows)
-        ids = index.ids.reshape(n_shards, shard_rows)
-        row_spec = P(axes, None)
-        flat_spec = P(axes)
-        rep = P()
-        cand_d, cand_i, qids, pairs, overflow = jax.shard_map(
-            shard_fn,
-            mesh=mesh,
-            in_specs=(row_spec, flat_spec, flat_spec, row_spec, rep, rep, rep),
-            out_specs=(P(axes, None, None), P(axes, None, None), P(axes, None),
-                       rep, rep),
-        )(vecs, leaves, ids, index.offsets, lookup.vecs, lookup.leaves,
-          lookup.qids)
-        # one global scatter back to original query order (each query was
-        # answered by exactly one shard — no merge needed)
-        flat_d = cand_d.reshape(-1, k)
-        flat_i = cand_i.reshape(-1, k)
-        flat_q = qids.reshape(-1)
-        safe_q = jnp.where(flat_q >= 0, flat_q, q_total)
-        out_d = jnp.full((q_total, k), jnp.inf, jnp.float32).at[safe_q].set(
-            flat_d, mode="drop"
-        )
-        out_i = jnp.full((q_total, k), -1, jnp.int32).at[safe_q].set(
-            flat_i, mode="drop"
-        )
-        row_sh = NamedSharding(mesh, P(axes, None))
-        out_d = jax.lax.with_sharding_constraint(out_d, row_sh)
-        out_i = jax.lax.with_sharding_constraint(out_i, row_sh)
-        return SearchResult(ids=out_i, dists=out_d, pairs=pairs,
-                            q_cap_overflow=overflow)
-
-    return pipeline
-
-
-def pad_lookup(lookup: LookupTable, q_total: int) -> LookupTable:
-    """Pad the lookup table to ``q_total`` rows; padding never matches."""
-    q = lookup.vecs.shape[0]
-    if q_total < q:
-        raise ValueError(f"{q_total=} < {q}")
-    if q_total == q:
-        return lookup
-    pad = q_total - q
-    return LookupTable(
-        vecs=jnp.concatenate(
-            [lookup.vecs, jnp.zeros((pad, lookup.vecs.shape[1]), lookup.vecs.dtype)]
-        ),
-        qids=jnp.concatenate([lookup.qids, jnp.arange(q, q_total, dtype=jnp.int32)]),
-        leaves=jnp.concatenate([lookup.leaves, jnp.full((pad,), -2, jnp.int32)]),
-        offsets=lookup.offsets,
+    return make_executor(
+        mesh, p, n_leaves=n_leaves, shard_rows=shard_rows, q_total=q_total,
+        axes=axes,
     )
 
 
@@ -353,69 +84,52 @@ def batch_search(
     k: int,
     mesh: Mesh,
     *,
+    layout: str = "point_major",
+    probes: int = 1,
     block_rows: int | None = None,
     q_cap: int | None = None,
     impl: str = "xla",
-    layout: str = "point_major",
     p_cap: int | None = None,
     q_tile: int | None = None,
 ) -> SearchResult:
-    """Eager convenience wrapper: build lookup, pad, jit, run, trim.
+    """Eager convenience wrapper: plan, build lookup, pad, jit, run, trim.
 
-    layout="point_major": the paper-faithful baseline (scan index blocks
-    against the broadcast lookup table). layout="query_routed": the
-    beyond-paper pipeline (route queries to leaf owners; see
-    routed_search_fn).
+    ``layout`` is one of ``point_major`` (paper-faithful wave scan),
+    ``query_routed`` (beyond-paper shuffle), or ``auto`` (the ``plan()``
+    cost model picks). ``probes=T`` visits each query's T nearest leaves —
+    the multi-probe recall lever (docs/engine.md).
     """
     n_shards = data_axis_size(mesh)
     shard_rows = index.rows // n_shards
     q = queries.shape[0]
-    lookup = jax.jit(build_lookup)(tree, queries)
-    if layout == "query_routed":
-        q_tile = q_tile or 128
-        q_total = round_up(q, q_tile * n_shards)
-        lookup = pad_lookup(lookup, q_total)
-        if p_cap is None:
-            avg_leaf = max(1, index.rows // max(1, index.n_leaves))
-            # a q_tile may span many leaves on small shards: saturate to the
-            # full shard if the budget would cover most of it anyway
-            p_cap = min(shard_rows, round_up(max(4096, 16 * avg_leaf), 8))
-        fn = routed_search_fn(
-            mesh,
-            n_leaves=index.n_leaves,
-            shard_rows=shard_rows,
-            q_total=q_total,
-            q_tile=q_tile,
-            p_cap=p_cap,
-            k=k,
-            impl=impl,
-        )
-        res = jax.jit(fn)(index, lookup)
-        return SearchResult(
-            ids=res.ids[:q], dists=res.dists[:q], pairs=res.pairs,
-            q_cap_overflow=res.q_cap_overflow,
-        )
-    if block_rows is None:
-        block_rows = 1024
-    if shard_rows % block_rows != 0:
-        # snap to the largest divisor of shard_rows <= requested
-        block_rows = next(
-            b for b in range(min(block_rows, shard_rows), 0, -1)
-            if shard_rows % b == 0
-        )
-    if q_cap is None:
-        q_cap = min(q, max(256, round_up(4 * q // max(1, tree.n_leaves), 8)))
-    q_total = max(q, q_cap)
-    lookup = pad_lookup(lookup, q_total)
-    fn = batch_search_fn(
-        mesh,
+    p = make_plan(
+        rows=index.rows,
         n_leaves=index.n_leaves,
-        shard_rows=shard_rows,
-        q_total=q_total,
+        n_queries=q,
+        n_shards=n_shards,
+        k=k,
+        probes=probes,
+        layout=layout,
+        impl=impl,
         block_rows=block_rows,
         q_cap=q_cap,
-        k=k,
-        impl=impl,
+        q_tile=q_tile,
+        p_cap=p_cap,
+    )
+    lookup = jax.jit(build_lookup, static_argnames=("probes",))(
+        tree, queries, probes=probes
+    )
+    q_rows = q * probes
+    if p.layout == "query_routed":
+        # rows must land on the (q_tile * n_shards) routing grid *and* stay
+        # a multiple of probes for the probe-group merge
+        q_total = round_up(q_rows, p.q_tile * n_shards * probes)
+    else:
+        q_total = round_up(max(q_rows, p.q_cap), probes)
+    lookup = pad_lookup(lookup, q_total)
+    fn = make_executor(
+        mesh, p, n_leaves=index.n_leaves, shard_rows=shard_rows,
+        q_total=q_total,
     )
     res = jax.jit(fn)(index, lookup)
     return SearchResult(

@@ -28,6 +28,21 @@ def local_mesh(axes: Sequence[str] = ("data", "model")) -> Mesh:
     return jax.make_mesh(tuple(shape), tuple(axes))
 
 
+def abstract_mesh(shape: Sequence[int], axes: Sequence[str]):
+    """``AbstractMesh`` across jax versions.
+
+    Newer jax takes ``(sizes, names)``; 0.4.x takes a tuple of
+    ``(name, size)`` pairs. Tests and dry-runs use this so they never need
+    real devices.
+    """
+    from jax.sharding import AbstractMesh
+
+    try:
+        return AbstractMesh(tuple(shape), tuple(axes))
+    except TypeError:
+        return AbstractMesh(tuple(zip(tuple(axes), tuple(shape))))
+
+
 def mesh_axis_size(mesh: Mesh, name: str) -> int:
     if name not in mesh.axis_names:
         return 1

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.distributed.compat import tpu_compiler_params as _tpu_compiler_params
+
 
 def l2nn_kernel(x_ref, c_ref, out_i_ref, out_d_ref, best_d, best_i, *, n_valid_c: int):
     j = pl.program_id(1)
@@ -88,7 +90,7 @@ def l2nn_pallas(
             pltpu.VMEM((tile_n, 1), jnp.float32),
             pltpu.VMEM((tile_n, 1), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_tpu_compiler_params()(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

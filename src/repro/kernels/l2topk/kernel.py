@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.distributed.compat import tpu_compiler_params as _tpu_compiler_params
+
 
 
 def _augment(q_tile, p_tile):
@@ -138,7 +140,7 @@ def l2topk_pallas(
             pltpu.VMEM((tile_q, k), jnp.float32),
             pltpu.VMEM((tile_q, k), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_tpu_compiler_params()(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

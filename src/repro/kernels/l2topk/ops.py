@@ -13,11 +13,15 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core.sentinels import PAD_TILE_POINT_LEAF, PAD_TILE_QUERY_LEAF
 from repro.kernels.l2topk.kernel import l2topk_pallas
 from repro.kernels.l2topk.ref import l2_topk_ref
 
-_PAD_P_LEAF = -9  # padding leaf ids chosen so padding never matches anything
-_PAD_Q_LEAF = -8
+# Probe-aware padding: point-side and query-side tile padding use distinct
+# negative sentinels so padded rows never match anything — not real leaves,
+# not each other, and not padded multi-probe lookup rows (PAD_QUERY_LEAF).
+_PAD_P_LEAF = PAD_TILE_POINT_LEAF
+_PAD_Q_LEAF = PAD_TILE_QUERY_LEAF
 
 
 def _round_up(x: int, m: int) -> int:

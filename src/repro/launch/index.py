@@ -29,6 +29,19 @@ def main(argv=None) -> int:
     ap.add_argument("--fanout", type=int, nargs=2, default=(32, 32))
     ap.add_argument("--tree-sample", type=int, default=65_536)
     ap.add_argument("--inject-failures", action="store_true")
+    ap.add_argument(
+        "--verify-queries", type=int, default=0,
+        help="after indexing, search N perturbed corpus rows and report "
+        "recall (0 = skip)",
+    )
+    ap.add_argument(
+        "--layout", choices=("point_major", "query_routed", "auto"),
+        default="auto", help="scan layout for the verification search",
+    )
+    ap.add_argument(
+        "--probes", type=int, default=1,
+        help="multi-probe width for the verification search",
+    )
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -105,6 +118,33 @@ def main(argv=None) -> int:
     n_indexed = sum((p["ids"] >= 0).sum() for p in result.state["parts"])
     assert n_indexed == store.n_rows, (n_indexed, store.n_rows)
     print(f"indexed {n_indexed} descriptors == corpus size OK")
+
+    if args.verify_queries:
+        # verification search: rebuild one jittable index over the corpus
+        # and check perturbed corpus rows find themselves under the
+        # requested execution plan (layout/probes knobs)
+        from repro.core.search import batch_search
+
+        rng = np.random.default_rng(args.seed + 7)
+        all_vecs = np.concatenate(
+            [store.read_block(b).vecs for b in range(store.n_blocks)]
+        )
+        index = build_index(jnp.asarray(all_vecs), tree, mesh)
+        rows = rng.choice(store.n_rows, args.verify_queries, replace=False)
+        queries = jnp.asarray(
+            all_vecs[rows]
+            + rng.standard_normal((len(rows), args.dim)).astype(np.float32)
+        )
+        res = batch_search(
+            index, tree, queries, k=1, mesh=mesh, layout=args.layout,
+            probes=args.probes,
+        )
+        recall = float((np.array(res.ids[:, 0]) == rows).mean())
+        print(
+            f"verify: layout={args.layout} probes={args.probes} "
+            f"recall@1 {recall:.3f} pairs {float(res.pairs):.3g} "
+            f"q_cap_overflow {int(res.q_cap_overflow)}"
+        )
     return 0
 
 

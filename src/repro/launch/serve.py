@@ -9,7 +9,7 @@ broadcast (first map wave) and raise throughput.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --rows 200000 --images 2000 \
-      --batches 3 --batch-images 256
+      --batches 3 --batch-images 256 [--layout auto] [--probes 3]
 """
 
 from __future__ import annotations
@@ -32,6 +32,15 @@ def main(argv=None) -> int:
     ap.add_argument("--batch-images", type=int, default=256)
     ap.add_argument("--desc-per-image", type=int, default=None)
     ap.add_argument("--k", type=int, default=10)
+    ap.add_argument(
+        "--layout", choices=("point_major", "query_routed", "auto"),
+        default="point_major",
+        help="scan layout; auto lets the engine plan() heuristic pick",
+    )
+    ap.add_argument(
+        "--probes", type=int, default=1,
+        help="multi-probe width: leaves visited per query (recall lever)",
+    )
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -43,7 +52,8 @@ def main(argv=None) -> int:
 
     mesh = local_mesh()
     dpi = args.desc_per_image or max(1, args.rows // args.images)
-    print(f"corpus: {args.images} images x {dpi} descriptors x d={args.dim}")
+    print(f"corpus: {args.images} images x {dpi} descriptors x d={args.dim} "
+          f"(layout={args.layout}, probes={args.probes})")
     vecs_np, img_ids = synth.sample_images(
         args.images, dpi, args.dim, seed=args.seed
     )
@@ -70,7 +80,8 @@ def main(argv=None) -> int:
             vecs_np[rows] + rng.standard_normal((len(rows), args.dim)).astype(np.float32) * 4
         )
         t0 = time.perf_counter()
-        res = batch_search(index, tree, queries, k=args.k, mesh=mesh)
+        res = batch_search(index, tree, queries, k=args.k, mesh=mesh,
+                           layout=args.layout, probes=args.probes)
         jax.block_until_ready(res.ids)
         dt = time.perf_counter() - t0
         # image-level voting for top-1

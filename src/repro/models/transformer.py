@@ -367,7 +367,9 @@ def _moe_ffn_routed(x2d, layer, cfg: TransformerConfig, capacity: int):
         return out, drops
 
     dt = x2d.dtype
-    out, drops = jax.shard_map(
+    from repro.distributed.compat import shard_map
+
+    out, drops = shard_map(
         inner,
         mesh=mesh,
         in_specs=(

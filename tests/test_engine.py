@@ -1,0 +1,254 @@
+"""Engine subsystem: plans, executors on the shared tile-scan core,
+multi-probe correctness/recall, and exact pairs/overflow accounting."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dispatch import combine_rows, dispatch_rows, make_dispatch
+from repro.core.engine import SearchPlan, largest_divisor_leq, plan
+from repro.core.index_build import build_index
+from repro.core.lookup import build_lookup, probe_leaves
+from repro.core.search import batch_search
+from repro.core.tree import build_tree, tree_assign
+from repro.data import synth
+from repro.distributed.meshutil import local_mesh
+
+LAYOUTS = ("point_major", "query_routed")
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    vecs_np, _ = synth.sample_descriptors(3000, 24, seed=0, n_centers=50)
+    vecs = jnp.asarray(vecs_np)
+    tree = build_tree(vecs, (8, 4), key=jax.random.PRNGKey(1))
+    mesh = local_mesh()
+    index = build_index(vecs, tree, mesh, wire_dtype=jnp.float32)
+    q_np = np.array(vecs[:80]) + np.random.default_rng(2).standard_normal(
+        (80, vecs.shape[1])
+    ).astype(np.float32)
+    return vecs, tree, mesh, index, q_np
+
+
+def multiprobe_oracle(vecs, tree, q_np, probes, k):
+    """Brute force over the union of each query's ``probes`` leaves."""
+    leaves = np.array(tree_assign(tree, vecs))
+    plv = np.array(probe_leaves(tree, jnp.asarray(q_np), probes))
+    V = np.array(vecs, np.float32)
+    out, pairs = [], 0
+    for i in range(len(q_np)):
+        cand = np.flatnonzero(np.isin(leaves, plv[i]))
+        pairs += len(cand)
+        d2 = ((V[cand] - q_np[i]) ** 2).sum(1)
+        order = np.argsort(d2, kind="stable")
+        out.append((cand[order][:k], np.sort(d2)[:k]))
+    return out, pairs
+
+
+# ---------------------------------------------------------------------------
+# plan() heuristic + largest divisor
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 5000), cap=st.integers(1, 5000))
+def test_largest_divisor_leq(n, cap):
+    got = largest_divisor_leq(n, cap)
+    # reference: the linear countdown this replaced
+    want = next(b for b in range(min(cap, n), 0, -1) if n % b == 0)
+    assert got == want
+    assert n % got == 0 and got <= max(1, min(cap, n))
+
+
+def test_plan_resolves_budgets_and_layouts():
+    for layout in ("point_major", "query_routed", "auto"):
+        p = plan(rows=100_000, n_leaves=1024, n_queries=512, n_shards=1,
+                 k=10, layout=layout)
+        assert p.layout in LAYOUTS
+        if p.layout == "point_major":
+            assert 100_000 % p.block_rows == 0
+            assert p.q_cap >= 256
+        else:
+            assert p.q_tile >= 1 and p.p_cap >= 1
+    # explicit layouts are honored
+    assert plan(rows=8192, n_leaves=64, n_queries=32, n_shards=1, k=3,
+                layout="point_major").layout == "point_major"
+    assert plan(rows=8192, n_leaves=64, n_queries=32, n_shards=1, k=3,
+                layout="query_routed").layout == "query_routed"
+    # query_routed needs leaves to divide over shards; auto falls back
+    assert plan(rows=8192, n_leaves=63, n_queries=32, n_shards=2, k=3,
+                layout="auto").layout == "point_major"
+    with pytest.raises(ValueError):
+        plan(rows=8192, n_leaves=63, n_queries=32, n_shards=2, k=3,
+             layout="query_routed")
+    with pytest.raises(ValueError):
+        plan(rows=8192, n_leaves=16, n_queries=32, n_shards=1, k=3, probes=17)
+
+
+def test_search_plan_validation():
+    with pytest.raises(ValueError):
+        SearchPlan(layout="bogus", k=5)
+    with pytest.raises(ValueError):
+        SearchPlan(layout="point_major", k=0)
+    with pytest.raises(ValueError):
+        SearchPlan(layout="point_major", k=5, q_cap=64).resolved()  # no block_rows
+
+
+# ---------------------------------------------------------------------------
+# probe expansion
+# ---------------------------------------------------------------------------
+
+
+def test_probe_leaves_extend_hard_assignment(corpus):
+    vecs, tree, mesh, index, q_np = corpus
+    q = jnp.asarray(q_np)
+    hard = np.array(tree_assign(tree, q))
+    for probes in (1, 3):
+        plv = np.array(probe_leaves(tree, q, probes))
+        assert plv.shape == (len(q_np), probes)
+        np.testing.assert_array_equal(plv[:, 0], hard)
+        # probed leaves are distinct per query
+        for i in range(len(q_np)):
+            assert len(set(plv[i].tolist())) == probes
+
+
+def test_build_lookup_flat_slots(corpus):
+    vecs, tree, mesh, index, q_np = corpus
+    q = jnp.asarray(q_np)
+    for probes in (1, 4):
+        lk = jax.jit(build_lookup, static_argnames=("probes",))(
+            tree, q, probes=probes
+        )
+        qids = np.array(lk.qids)
+        # qids are a permutation of the flat slot space
+        np.testing.assert_array_equal(np.sort(qids),
+                                      np.arange(len(q_np) * probes))
+        # rows are leaf-sorted and offsets CSR-index them
+        lv = np.array(lk.leaves)
+        assert (np.diff(lv) >= 0).all()
+        off = np.array(lk.offsets)
+        for leaf in (0, tree.n_leaves // 2, tree.n_leaves - 1):
+            assert (lv[off[leaf]:off[leaf + 1]] == leaf).all()
+
+
+# ---------------------------------------------------------------------------
+# executors vs oracle (probes=1 and multi-probe), both layouts
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("layout", LAYOUTS)
+@pytest.mark.parametrize("probes", [1, 3])
+def test_search_matches_multiprobe_oracle(corpus, layout, probes):
+    vecs, tree, mesh, index, q_np = corpus
+    k = 5
+    res = batch_search(index, tree, jnp.asarray(q_np), k=k, mesh=mesh,
+                       layout=layout, probes=probes)
+    assert int(res.q_cap_overflow) == 0
+    oracle, oracle_pairs = multiprobe_oracle(vecs, tree, q_np, probes, k)
+    ids = np.array(res.ids)
+    dists = np.array(res.dists)
+    for i, (want_ids, want_d) in enumerate(oracle):
+        got = ids[i][ids[i] >= 0]
+        assert len(got) == min(k, len(want_ids))
+        np.testing.assert_allclose(
+            dists[i][: len(got)], want_d[: len(got)], rtol=1e-3, atol=2.0
+        )
+        assert set(got.tolist()) == set(want_ids[: len(got)].tolist())
+    # pairs accounting is EXACT: every probed (point, query) pair counted
+    assert float(res.pairs) == oracle_pairs
+
+
+@pytest.mark.parametrize("probes", [1, 3])
+def test_layouts_agree_exactly(corpus, probes):
+    vecs, tree, mesh, index, q_np = corpus
+    q = jnp.asarray(q_np)
+    r_pm = batch_search(index, tree, q, k=4, mesh=mesh,
+                        layout="point_major", probes=probes)
+    r_qr = batch_search(index, tree, q, k=4, mesh=mesh,
+                        layout="query_routed", probes=probes)
+    np.testing.assert_array_equal(np.array(r_pm.ids), np.array(r_qr.ids))
+    assert float(r_pm.pairs) == float(r_qr.pairs)
+
+
+def test_multiprobe_improves_recall(corpus):
+    """probes=3 strictly improves recall@1 over probes=1 against the
+    global brute-force nearest neighbour, at a strictly higher pairs cost
+    (the multi-probe recall/cost tradeoff, docs/engine.md)."""
+    vecs, tree, mesh, index, q_np = corpus
+    V = np.array(vecs, np.float32)
+    gt = np.array([np.argmin(((V - qi) ** 2).sum(1)) for qi in q_np])
+    recall, pairs = {}, {}
+    for probes in (1, 3):
+        res = batch_search(index, tree, jnp.asarray(q_np), k=1, mesh=mesh,
+                           probes=probes)
+        recall[probes] = float((np.array(res.ids[:, 0]) == gt).mean())
+        pairs[probes] = float(res.pairs)
+    assert recall[3] > recall[1], (recall, pairs)
+    assert pairs[3] > pairs[1]
+
+
+def test_self_queries_with_probes(corpus):
+    vecs, tree, mesh, index, q_np = corpus
+    res = batch_search(index, tree, vecs[:50], k=1, mesh=mesh, probes=2)
+    np.testing.assert_array_equal(np.array(res.ids[:, 0]), np.arange(50))
+    np.testing.assert_allclose(np.array(res.dists[:, 0]), 0.0, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# overflow accounting: zero when budgeted, counted when starved
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("layout", LAYOUTS)
+def test_overflow_zero_on_wellbudgeted(corpus, layout):
+    vecs, tree, mesh, index, q_np = corpus
+    res = batch_search(index, tree, jnp.asarray(q_np), k=3, mesh=mesh,
+                       layout=layout, probes=2)
+    assert int(res.q_cap_overflow) == 0
+
+
+@pytest.mark.parametrize("layout", LAYOUTS)
+def test_overflow_counted_on_starved_caps(corpus, layout):
+    """A slab budget that is too small must be *counted*, never silent."""
+    vecs, tree, mesh, index, q_np = corpus
+    leaves = np.array(tree_assign(tree, vecs))
+    dense_leaf = np.bincount(leaves).argmax()
+    rows = np.flatnonzero(leaves == dense_leaf)[:64]
+    assert len(rows) >= 32
+    queries = vecs[rows]
+    kw = dict(q_cap=8) if layout == "point_major" else dict(p_cap=8)
+    res = batch_search(index, tree, queries, k=3, mesh=mesh, layout=layout,
+                       **kw)
+    assert int(res.q_cap_overflow) > 0
+
+
+# ---------------------------------------------------------------------------
+# dispatch substrate: capacity-padded sort round trip
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 200),
+    n_buckets=st.integers(1, 12),
+    capacity=st.integers(1, 48),
+    seed=st.integers(0, 2**30),
+)
+def test_dispatch_combine_roundtrip_property(n, n_buckets, capacity, seed):
+    key = jax.random.PRNGKey(seed)
+    assign = jax.random.randint(key, (n,), 0, n_buckets)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (n, 3))
+    d = make_dispatch(assign, n_buckets, capacity)
+    y = combine_rows(d, dispatch_rows(d, x), fill=-7.0)
+    fits = np.array(d.fits)
+    np.testing.assert_allclose(np.array(y)[fits], np.array(x)[fits],
+                               rtol=1e-6)
+    assert (np.array(y)[~fits] == -7.0).all()
+    # overflow is exactly the rows beyond capacity per bucket
+    a = np.array(assign)
+    want_drop = sum(
+        max(0, int((a == b).sum()) - capacity) for b in range(n_buckets)
+    )
+    assert int(d.overflow) == want_drop == int((~fits).sum())

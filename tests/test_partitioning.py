@@ -2,12 +2,13 @@
 no need for 256 real devices)."""
 
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
+from repro.distributed.meshutil import abstract_mesh
 from repro.distributed.partitioning import DEFAULT_RULES, partition_spec
 
-MESH_1POD = AbstractMesh((16, 16), ("data", "model"))
-MESH_2POD = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+MESH_1POD = abstract_mesh((16, 16), ("data", "model"))
+MESH_2POD = abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def test_batch_shards_over_pod_and_data():
