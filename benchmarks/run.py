@@ -9,6 +9,8 @@
   quality         — Fig 4 (Copydays recall vs distractors)
   throughput      — Exp #5 (ms/image vs batch size)
   ann_retrieval   — beyond-paper: tree-ANN on the two-tower arch
+  serving         — beyond-paper: online serving (latency percentiles,
+                    micro-batching, hot-leaf cache) + plan observations JSON
 
 Usage: PYTHONPATH=src python -m benchmarks.run [module ...]
 """
@@ -27,12 +29,16 @@ MODULES = [
     "quality",
     "throughput",
     "ann_retrieval",
+    "serving",
 ]
 
 
 def smoke() -> int:
-    """Tiny end-to-end serve runs on both layouts with multi-probe — the
-    per-PR gate wired into scripts/smoke.sh. Fails loudly, returns rc."""
+    """Tiny end-to-end serve runs on both layouts with multi-probe, plus
+    the serving-session gate (2 warmed buckets, ~100 zipf requests, zero
+    steady-state recompiles) — the per-PR gate wired into
+    scripts/smoke.sh. Fails loudly, returns rc."""
+    from benchmarks import serving as serving_bench
     from repro.launch import serve
 
     base = [
@@ -45,7 +51,8 @@ def smoke() -> int:
         rc = serve.main(base + ["--layout", layout])
         if rc != 0:
             return rc
-    return 0
+    print("# smoke: serving session (2 buckets, zipf trace)", file=sys.stderr)
+    return serving_bench.smoke()
 
 
 def main() -> None:

@@ -1,0 +1,106 @@
+"""Serving benchmark: the online analog of paper Exp #5.
+
+Exp #5 reports batch throughput (ms/image) at two batch sizes; a service
+additionally owns the *latency distribution* that micro-batching buys that
+throughput with. This module replays uniform and Zipf traces through a
+warmed :class:`~repro.serving.SearchSession` + ``MicroBatcher`` and emits
+
+  * CSV rows (the harness contract): per-trace p50/p95 latency, engine
+    ms/image, cache hit rate, steady-state recompiles;
+  * a JSON file (``benchmarks/out/serving.json`` or ``$REPRO_BENCH_OUT``)
+    with the full metrics, per-bucket plans, and the per-plan *measured*
+    ms/image observations (``engine.observations()``) — the data a later
+    PR calibrates the ``plan()`` cost model against (ROADMAP open item).
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+
+from benchmarks.common import Corpus, row
+
+
+def _session(c, *, buckets, cache_leaves=0, cache_admit=2, probes=1):
+    from repro.serving import SearchSession
+
+    s = SearchSession(
+        c.index, c.tree, c.mesh, k=10, layout="auto", probes=probes,
+        buckets=buckets, cache_leaves=cache_leaves,
+        cache_admit_after=cache_admit,
+    )
+    s.warmup()
+    return s
+
+
+def _replay(session, c, *, skew, n_requests, desc_per_image, rate, seed=3):
+    from repro.serving import MicroBatcher, TraceLoadGenerator
+
+    n_images = len(c.vecs_np) // desc_per_image
+    gen = TraceLoadGenerator(c.vecs_np, desc_per_image, seed=seed)
+    reqs = gen.from_trace(n_requests, n_images, skew=skew, rate=rate)
+    MicroBatcher(session, max_wait_ms=5.0, max_queue=4096).run(reqs)
+    return session.metrics
+
+
+def run():
+    from repro.core.engine import observations, reset_observations
+
+    out_rows = []
+    payload = {}
+    c = Corpus()
+    dpi = 24
+    reset_observations()
+    for skew, cache_leaves in (("uniform", 0), ("zipf", 1024)):
+        session = _session(
+            c, buckets=(1024, 4096), cache_leaves=cache_leaves,
+            cache_admit=1,
+        )
+        m = _replay(session, c, skew=skew, n_requests=200,
+                    desc_per_image=dpi, rate=100.0)
+        lat = m.latency.summary()
+        name = f"serving_{skew}_200req"
+        out_rows.append(row(
+            name, lat["p50_ms"] / 1e3,
+            f"p95_ms={lat['p95_ms']:.1f} ms_per_image={m.ms_per_image:.2f} "
+            f"cache_hit={session.cache.hit_rate:.2f} "
+            f"recompiles={session.steady_state_recompiles()}",
+        ))
+        payload[skew] = {
+            "metrics": m.to_dict(),
+            "cache": session.cache.stats(),
+            "plans": session.plan_summary(),
+        }
+    payload["plan_observations"] = observations()
+    out_dir = os.environ.get("REPRO_BENCH_OUT", "benchmarks/out")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, "serving.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    out_rows.append(row("serving_json", 0.0, f"wrote={path}"))
+    return out_rows
+
+
+def smoke() -> int:
+    """Tiny serving gate: small corpus, 2 buckets, ~100 requests; asserts
+    p95 is finite and the compile count stays at the warmed-bucket count."""
+    c = Corpus(rows=20_000, dim=32, fanouts=(16, 16))
+    session = _session(c, buckets=(256, 1024), cache_leaves=256,
+                       cache_admit=1, probes=2)
+    warmed = session.recompiles()
+    assert warmed == 2, f"expected 2 warmed bucket programs, got {warmed}"
+    m = _replay(session, c, skew="zipf", n_requests=100, desc_per_image=20,
+                rate=200.0)
+    p95 = m.latency.percentile(95)
+    assert math.isfinite(p95), f"p95 latency not finite: {p95}"
+    assert session.recompiles() == warmed, (
+        f"steady-state recompile: {session.recompiles()} != {warmed}"
+    )
+    assert m.requests == 100, f"served {m.requests}/100"
+    print(
+        f"# serving smoke: p50 {m.latency.percentile(50):.1f} ms, "
+        f"p95 {p95:.1f} ms, ms/image {m.ms_per_image:.2f}, "
+        f"cache hit {session.cache.hit_rate:.2f}, recompiles 0",
+    )
+    return 0

@@ -12,7 +12,12 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== tier-1 test suite =="
 python -m pytest -x -q
 
-echo "== serve smoke (both layouts, --probes 2) =="
+echo "== serve smoke (both layouts, --probes 2) + serving session gate =="
 python -m benchmarks.run --smoke
+
+echo "== serving CLI smoke (zipf trace, hot-leaf cache, recompile gate) =="
+python -m repro.launch.serve --rows 20000 --dim 32 --images 400 \
+    --fanout 16 16 --trace zipf --requests 100 --buckets 512,1024 \
+    --probes 2 --cache-leaves 256 --cache-admit 1 --rate 300 --no-recall
 
 echo "smoke OK"

@@ -15,8 +15,13 @@ candidate fold, and pairs/overflow accounting are written once.
 from repro.core.engine.plan import (  # noqa: F401
     LAYOUTS,
     SearchPlan,
+    bucket_ladder,
     largest_divisor_leq,
+    observations,
     plan,
+    record_observation,
+    reset_observations,
+    snap_to_bucket,
 )
 from repro.core.engine.executors import (  # noqa: F401
     SearchResult,

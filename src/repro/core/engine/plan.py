@@ -48,6 +48,94 @@ def largest_divisor_leq(n: int, cap: int) -> int:
     return best
 
 
+def bucket_ladder(
+    max_queries: int,
+    *,
+    n_buckets: int = 4,
+    min_queries: int = 32,
+) -> tuple[int, ...]:
+    """Padded batch-size buckets for the serving layer, ascending.
+
+    A geometric ladder from ``max_queries`` down (each rung ~half the one
+    above), with every rung snapped to a *divisor* of ``max_queries`` via
+    the shared :func:`largest_divisor_leq` helper — so a full bucket of
+    small requests coalesces exactly into the next rung and the executor
+    set stays tiny. Serving sessions compile one executor per rung at
+    warmup; steady-state requests snap up to a rung and never recompile.
+    """
+    if max_queries < 1:
+        raise ValueError(f"{max_queries=} must be positive")
+    min_queries = max(1, min(min_queries, max_queries))
+    rungs = {max_queries}
+    target = max_queries // 2
+    while len(rungs) < n_buckets and target >= min_queries:
+        rung = largest_divisor_leq(max_queries, target)
+        if rung >= min_queries:  # divisor-poor sizes: no sub-floor rungs
+            rungs.add(rung)
+        target //= 2
+    return tuple(sorted(rungs))
+
+
+def snap_to_bucket(n: int, buckets) -> int:
+    """Smallest warmed bucket that fits ``n`` rows (largest bucket caps it:
+    callers split bigger batches across dispatches)."""
+    if n < 1:
+        raise ValueError(f"{n=} must be positive")
+    fitting = [b for b in buckets if b >= n]
+    return min(fitting) if fitting else max(buckets)
+
+
+# ---------------------------------------------------------------------------
+# Measured-cost observations (ROADMAP: calibrate plan() from real runs).
+# Keyed by the plan's cost-relevant signature; the serving session and the
+# benchmarks feed these via ``SearchPlan.observe(ms_per_image)`` and persist
+# them in the benchmark JSON so a later PR can fit the cost model.
+# ---------------------------------------------------------------------------
+
+_OBSERVATIONS: dict[tuple, dict] = {}
+
+
+def _plan_signature(p: "SearchPlan") -> tuple:
+    return (
+        p.layout, p.k, p.probes, p.impl, p.block_rows, p.q_cap, p.q_tile,
+        p.p_cap,
+    )
+
+
+def record_observation(p: "SearchPlan", ms_per_image: float) -> None:
+    """Fold one measured ms/image into the per-plan running stats."""
+    ms = float(ms_per_image)
+    o = _OBSERVATIONS.setdefault(
+        _plan_signature(p),
+        {"count": 0, "total_ms": 0.0, "min_ms": ms, "max_ms": ms,
+         "last_ms": ms},
+    )
+    o["count"] += 1
+    o["total_ms"] += ms
+    o["min_ms"] = min(o["min_ms"], ms)
+    o["max_ms"] = max(o["max_ms"], ms)
+    o["last_ms"] = ms
+
+
+def observations() -> dict[str, dict]:
+    """JSON-ready snapshot: plan signature string -> running ms/image stats
+    (with a derived ``mean_ms``)."""
+    out = {}
+    for sig, o in _OBSERVATIONS.items():
+        layout, k, probes, impl, block_rows, q_cap, q_tile, p_cap = sig
+        key = (
+            f"{layout}/k={k}/probes={probes}/impl={impl}/"
+            f"block_rows={block_rows}/q_cap={q_cap}/"
+            f"q_tile={q_tile}/p_cap={p_cap}"
+        )
+        out[key] = dict(o, mean_ms=o["total_ms"] / max(1, o["count"]))
+    return out
+
+
+def reset_observations() -> None:
+    _OBSERVATIONS.clear()
+
+
 @dataclasses.dataclass(frozen=True)
 class SearchPlan:
     """Static description of one search execution (hashable, jit-safe).
@@ -88,6 +176,11 @@ class SearchPlan:
             if getattr(self, f) is None:
                 raise ValueError(f"plan field {f!r} unresolved for {self.layout}")
         return self
+
+    def observe(self, ms_per_image: float) -> None:
+        """Record one measured ms/image for this plan (module-level registry
+        — the frozen plan itself stays hashable/jit-safe)."""
+        record_observation(self, ms_per_image)
 
 
 def _point_major_budgets(

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.distance import sq_norms
+from repro.core.sentinels import PAD_QUERY_LEAF
 from repro.core.tree import VocabTree, tree_assign
 
 
@@ -123,16 +124,90 @@ def build_lookup(
         raise ValueError(f"{probes=} must be >= 1")
     if probes > tree.n_leaves:
         raise ValueError(f"{probes=} must be <= n_leaves={tree.n_leaves}")
-    leaves = probe_leaves(tree, queries, probes).reshape(-1)
+    # one implementation of the sort/CSR build: the fixed-shape serving
+    # path with no masked rows and no tail padding IS the direct build
+    leaves = probe_leaves(tree, queries, probes)
+    return lookup_from_leaves(queries, leaves, n_leaves=tree.n_leaves)
+
+
+def lookup_from_leaves(
+    queries: jax.Array,
+    leaves: jax.Array,
+    *,
+    n_leaves: int,
+    n_valid: jax.Array | int | None = None,
+    q_total: int | None = None,
+) -> LookupTable:
+    """Build a :class:`LookupTable` from precomputed ``(Q, probes)`` probe
+    leaves, at a *fixed output shape* — the serving bucket path.
+
+    ``n_valid`` (traced OK) marks how many leading query rows are real;
+    rows ``>= n_valid`` get :data:`PAD_QUERY_LEAF`, so a padded bucket
+    never routes garbage to a real leaf, never matches any point, and never
+    changes a real query's slab — yet the jitted shapes are those of the
+    full bucket, so varying request sizes within a bucket never recompile.
+    ``q_total`` appends pad_lookup-style tail rows (fresh flat slots past
+    the real ones) up to the executor's padded row count.
+
+    Real rows keep exactly the ordering :func:`build_lookup` gives them
+    (stable sort by leaf), so bucketed results are bit-identical to the
+    direct path for the same plan budgets.
+    """
+    q, probes = leaves.shape
+    q_rows = q * probes
+    if q_total is None:
+        q_total = q_rows
+    if q_total < q_rows or q_total % probes:
+        raise ValueError(
+            f"{q_total=} must be >= {q_rows} and a multiple of {probes=}"
+        )
+    if n_valid is None:
+        n_valid = q
+    valid = jnp.arange(q, dtype=jnp.int32) < n_valid
+    leaves = jnp.where(
+        valid[:, None], leaves, jnp.int32(PAD_QUERY_LEAF)
+    ).reshape(-1)
     vecs = jnp.repeat(queries, probes, axis=0) if probes > 1 else queries
     order = jnp.argsort(leaves, stable=True)
     sorted_leaves = leaves[order].astype(jnp.int32)
+    # offsets over the q_rows sorted region only (tail pads appended after,
+    # exactly like pad_lookup — they are outside every CSR span)
     offsets = jnp.searchsorted(
-        sorted_leaves, jnp.arange(tree.n_leaves + 1, dtype=jnp.int32)
+        sorted_leaves, jnp.arange(n_leaves + 1, dtype=jnp.int32)
     ).astype(jnp.int32)
+    pad = q_total - q_rows
+    svecs = vecs[order]
+    qids = order.astype(jnp.int32)
+    if pad:
+        svecs = jnp.concatenate(
+            [svecs, jnp.zeros((pad, svecs.shape[1]), svecs.dtype)]
+        )
+        qids = jnp.concatenate(
+            [qids, jnp.arange(q_rows, q_total, dtype=jnp.int32)]
+        )
+        sorted_leaves = jnp.concatenate(
+            [sorted_leaves, jnp.full((pad,), PAD_QUERY_LEAF, jnp.int32)]
+        )
     return LookupTable(
-        vecs=vecs[order],
-        qids=order.astype(jnp.int32),
-        leaves=sorted_leaves,
-        offsets=offsets,
+        vecs=svecs, qids=qids, leaves=sorted_leaves, offsets=offsets
     )
+
+
+def build_lookup_bucketed(
+    tree: VocabTree,
+    queries: jax.Array,
+    n_valid: jax.Array | int,
+    *,
+    probes: int = 1,
+    q_total: int | None = None,
+) -> tuple[LookupTable, jax.Array]:
+    """Bucket-shaped :func:`build_lookup`: queries are padded to a warmed
+    bucket size and ``n_valid`` masks the tail. Returns the table plus the
+    ``(Q, probes)`` probe-leaf matrix (the serving hot-leaf cache keys on
+    it)."""
+    leaves = probe_leaves(tree, queries, probes)
+    lk = lookup_from_leaves(
+        queries, leaves, n_leaves=tree.n_leaves, n_valid=n_valid,
+        q_total=q_total,
+    )
+    return lk, leaves

@@ -79,6 +79,9 @@ class DescriptorStore:
         for b in range(self.n_blocks):
             yield self.read_block(b)
 
+    def read_rows(self, rows: np.ndarray) -> np.ndarray:
+        return _read_rows(self, rows)
+
 
 class VirtualStore:
     """Seeded on-the-fly store: block b is a pure function of (seed, b)."""
@@ -112,8 +115,34 @@ class VirtualStore:
         for b in range(self.n_blocks):
             yield self.read_block(b)
 
+    def read_rows(self, rows: np.ndarray) -> np.ndarray:
+        return _read_rows(self, rows)
+
     def sample_for_tree(self, n: int) -> np.ndarray:
         vecs, _ = synth.sample_descriptors(
             n, self.dim, mixture=self.mixture, seed=self.seed ^ 0x7EEE
         )
         return vecs
+
+
+def _read_rows(store, rows: np.ndarray) -> np.ndarray:
+    """Gather arbitrary global rows, touching each containing block once.
+
+    The serving trace replay uses this to materialise query vectors for a
+    request's image without holding the corpus resident: a trace references
+    descriptor row ids, and only the blocks those rows live in are read
+    (or regenerated, for a virtual store).
+    """
+    rows = np.asarray(rows, np.int64)
+    if rows.size and (rows.min() < 0 or rows.max() >= store.n_rows):
+        raise IndexError(
+            f"row ids must be in [0, {store.n_rows}); got "
+            f"[{rows.min()}, {rows.max()}]"
+        )
+    out = np.empty((rows.size, store.dim), np.float32)
+    blocks = rows // store.block_rows
+    for b in np.unique(blocks):
+        sel = blocks == b
+        blk = store.read_block(int(b))
+        out[sel] = blk.vecs[rows[sel] - int(b) * store.block_rows]
+    return out

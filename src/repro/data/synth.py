@@ -59,3 +59,46 @@ def sample_images(
     )
     img_ids = np.repeat(np.arange(n_images, dtype=np.int32), desc_per_image)
     return vecs, img_ids
+
+
+def zipf_weights(n: int, s: float = 1.1) -> np.ndarray:
+    """Zipf popularity over ``n`` items: weight of rank r is ``1/r^s``."""
+    if n < 1:
+        raise ValueError(f"{n=} must be positive")
+    w = 1.0 / np.arange(1, n + 1, dtype=np.float64) ** s
+    return w / w.sum()
+
+
+def sample_trace(
+    n_requests: int,
+    n_images: int,
+    *,
+    skew: str = "uniform",
+    zipf_s: float = 1.1,
+    rate: float | None = None,
+    seed: int = 0,
+):
+    """A replayable request trace: ``(image_ids, arrivals)``.
+
+    ``image_ids`` — which image each request queries, drawn uniformly or
+    Zipf-skewed (popular images repeat: the hot-leaf-cache workload).
+    Popularity ranks are themselves shuffled so "hot" images are spread
+    over the id space rather than clustered at low ids.
+    ``arrivals`` — seconds, Poisson arrivals at ``rate`` req/s (``None`` =
+    everything arrives at t=0: the paper's offline batch as a degenerate
+    trace). Deterministic under ``seed``; tests assert bit-equality.
+    """
+    if skew not in ("uniform", "zipf"):
+        raise ValueError(f"unknown {skew=}; want uniform|zipf")
+    rng = np.random.default_rng(seed)
+    if skew == "zipf":
+        ranks = rng.permutation(n_images)
+        p = zipf_weights(n_images, zipf_s)[ranks]
+        image_ids = rng.choice(n_images, size=n_requests, p=p)
+    else:
+        image_ids = rng.integers(0, n_images, size=n_requests)
+    if rate is None:
+        arrivals = np.zeros(n_requests, np.float64)
+    else:
+        arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n_requests))
+    return image_ids.astype(np.int64), arrivals

@@ -58,6 +58,17 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def read_manifest(self, step: Optional[int] = None) -> dict:
+        """The manifest of ``step`` (default: latest) without loading any
+        array — callers peek at ``extra``/shapes to rebuild pytree
+        skeletons before a restore (serving.persist does)."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        with open(os.path.join(self._step_dir(step), "manifest.json")) as f:
+            return json.load(f)
+
     # -- save / restore ----------------------------------------------------
     def save(self, step: int, tree, extra: Optional[dict] = None) -> str:
         final = self._step_dir(step)

@@ -1,0 +1,167 @@
+"""Hot-leaf cache: the in-memory analog of the paper's lookup-table
+broadcast (§2.5), specialised to skewed online traffic.
+
+The paper ships auxiliary data (tree + lookup table) to every map task once
+per batch job so the scan itself never waits on it. An online service sees
+the same effect *across requests*: under a skewed (Zipf) query stream a
+small set of tree leaves absorbs most of the routed queries. This cache
+pins those leaves' index slabs (vectors + descriptor ids, host-resident
+numpy) and answers a repeated query locally — an exact scan over exactly
+the leaves the engine would have scanned — without occupying a micro-batch
+slot.
+
+Two layers of keying:
+
+  * ``leaf_id -> slab`` — admitted once a leaf has been routed to
+    ``admit_after`` times, evicted LRU when over ``capacity`` leaves;
+  * ``query bytes -> probe leaves`` — the routing memo. Routing is a tree
+    descent (device work), so a cache *hit* must not need it: only queries
+    whose exact bytes have been routed before can be cache-served, which
+    is precisely the hot-repeated-query population the cache targets.
+
+Distances use the same algebraic form as the engine
+(``||p||^2 - 2 p.q + ||q||^2`` in float32), so ids agree with the engine
+scan; tests assert it.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+
+import numpy as np
+
+
+class HotLeafCache:
+    """LRU cache of hot leaf slabs + routing memo, with hit accounting."""
+
+    def __init__(self, capacity_leaves: int, *, admit_after: int = 2,
+                 memo_capacity: int = 65536):
+        self.capacity = int(capacity_leaves)
+        self.admit_after = int(admit_after)
+        self.memo_capacity = int(memo_capacity)
+        # leaf -> (vecs, ids, point sq-norms), norms precomputed at admission
+        self._slabs: OrderedDict[int, tuple] = OrderedDict()
+        self._freq: dict[int, int] = {}
+        self._memo: OrderedDict[bytes, np.ndarray] = OrderedDict()
+        self.hits = 0  # requests answered entirely from cache
+        self.misses = 0  # requests that went to the engine
+        # index-side tables (attach_index)
+        self._vecs = self._ids = None
+        self._order = self._starts = None
+
+    # -- index attachment ---------------------------------------------------
+    def attach_index(self, vecs: np.ndarray, ids: np.ndarray,
+                     leaves: np.ndarray, n_leaves: int) -> None:
+        """Host copies of the index rows + a leaf -> rows map (one global
+        sort; padding rows carry out-of-range leaves and fall off the
+        end)."""
+        self._vecs = np.asarray(vecs, np.float32)
+        self._ids = np.asarray(ids)
+        lv = np.asarray(leaves).astype(np.int64)
+        self._order = np.argsort(lv, kind="stable")
+        sorted_leaves = lv[self._order]
+        self._starts = np.searchsorted(
+            sorted_leaves, np.arange(n_leaves + 1, dtype=np.int64)
+        )
+
+    def _leaf_rows(self, leaf: int) -> np.ndarray:
+        return self._order[self._starts[leaf]: self._starts[leaf + 1]]
+
+    # -- serve path ---------------------------------------------------------
+    @property
+    def enabled(self) -> bool:
+        return self.capacity > 0 and self._vecs is not None
+
+    @property
+    def n_cached_leaves(self) -> int:
+        return len(self._slabs)
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def try_serve(
+        self, queries: np.ndarray, k: int
+    ) -> tuple[np.ndarray, np.ndarray] | None:
+        """Answer a request's query rows entirely from cache, or ``None``.
+
+        Serves only when *every* row's routing is memoised and *every*
+        routed leaf is resident — a partial hit would still cost an engine
+        dispatch, so it counts as a miss.
+        """
+        if not self.enabled:
+            return None
+        routed = []
+        for q in queries:
+            lv = self._memo.get(np.ascontiguousarray(q).tobytes())
+            if lv is None or not all(int(l) in self._slabs for l in lv):
+                self.misses += 1
+                return None
+            routed.append(lv)
+        out_i = np.full((len(queries), k), -1, np.int32)
+        out_d = np.full((len(queries), k), np.inf, np.float32)
+        for r, (q, lv) in enumerate(zip(queries, routed)):
+            cand_v, cand_i, cand_n = [], [], []
+            for l in lv:
+                sv, si, sn = self._slabs[int(l)]
+                self._slabs.move_to_end(int(l))  # LRU touch
+                cand_v.append(sv)
+                cand_i.append(si)
+                cand_n.append(sn)
+            pv = np.concatenate(cand_v)
+            pid = np.concatenate(cand_i)
+            qf = np.asarray(q, np.float32)
+            # same algebraic form as the engine's tile scan (point norms
+            # precomputed at admission — slabs are immutable)
+            d2 = (
+                np.concatenate(cand_n)
+                - 2.0 * pv @ qf
+                + float((qf * qf).sum())
+            ).astype(np.float32)
+            top = min(k, len(pid))
+            sel = np.argsort(d2, kind="stable")[:top]
+            out_i[r, :top] = pid[sel]
+            out_d[r, :top] = d2[sel]
+        self.hits += 1
+        return out_i, out_d
+
+    # -- learn path (after an engine dispatch) ------------------------------
+    def record(self, queries: np.ndarray, probe_leaves: np.ndarray, *,
+               exact: bool = True) -> None:
+        """Memoise routing for served queries and admit/evict hot leaves.
+
+        ``exact=False`` (the dispatch reported slab-budget overflow) skips
+        learning entirely: a cached full-slab scan would *disagree* with
+        the starved engine answer for the same query."""
+        if not self.enabled or not exact:
+            return
+        for q, lv in zip(queries, probe_leaves):
+            key = np.ascontiguousarray(q).tobytes()
+            if key not in self._memo:
+                if len(self._memo) >= self.memo_capacity:
+                    self._memo.popitem(last=False)
+                self._memo[key] = np.asarray(lv, np.int64).copy()
+            for l in lv:
+                l = int(l)
+                self._freq[l] = self._freq.get(l, 0) + 1
+                if l in self._slabs:
+                    self._slabs.move_to_end(l)
+                elif self._freq[l] >= self.admit_after:
+                    rows = self._leaf_rows(l)
+                    sv = self._vecs[rows]
+                    self._slabs[l] = (
+                        sv, self._ids[rows].astype(np.int32),
+                        (sv * sv).sum(1).astype(np.float32),
+                    )
+                    while len(self._slabs) > self.capacity:
+                        self._slabs.popitem(last=False)  # evict LRU
+
+    def stats(self) -> dict:
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "hit_rate": self.hit_rate,
+            "cached_leaves": self.n_cached_leaves,
+            "capacity_leaves": self.capacity,
+        }

@@ -1,0 +1,93 @@
+"""Serving metrics: latency percentiles, throughput, queue/cache counters.
+
+The paper's Exp #5 reports one number (ms/image at a fixed batch size); an
+online service needs the full latency distribution (p50/p95/p99 — queueing
+delay included), the throughput it was achieved at, and the health counters
+that explain it (queue depth, recompiles, cache hit rate, rejects). All
+accounting is plain Python/numpy — nothing here touches a device.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+class LatencyStats:
+    """Streaming latency collector with exact percentiles at report time."""
+
+    def __init__(self):
+        self._ms: list[float] = []
+
+    def add(self, ms: float) -> None:
+        self._ms.append(float(ms))
+
+    def __len__(self) -> int:
+        return len(self._ms)
+
+    def percentile(self, p: float) -> float:
+        if not self._ms:
+            return float("nan")
+        return float(np.percentile(np.asarray(self._ms), p))
+
+    def summary(self) -> dict:
+        if not self._ms:
+            return {"count": 0}
+        a = np.asarray(self._ms)
+        return {
+            "count": int(a.size),
+            "mean_ms": float(a.mean()),
+            "p50_ms": float(np.percentile(a, 50)),
+            "p95_ms": float(np.percentile(a, 95)),
+            "p99_ms": float(np.percentile(a, 99)),
+            "max_ms": float(a.max()),
+        }
+
+
+@dataclasses.dataclass
+class ServingMetrics:
+    """Counters + distributions for one serving session/replay."""
+
+    latency: LatencyStats = dataclasses.field(default_factory=LatencyStats)
+    requests: int = 0  # completed requests (images)
+    rejected: int = 0  # backpressure rejects
+    query_rows: int = 0  # query descriptor rows served via the engine
+    engine_batches: int = 0  # micro-batches dispatched to the engine
+    engine_ms: float = 0.0  # wall-clock busy time inside the engine
+    engine_images: int = 0  # images served by engine micro-batches
+    cache_images: int = 0  # images served from the hot-leaf cache
+    q_cap_overflow: int = 0  # slab-budget misses (counted, never silent)
+    warmup_ms: float = 0.0
+    recompiles_after_warmup: int = 0  # steady-state recompiles (want: 0)
+    queue_depth: list = dataclasses.field(default_factory=list)  # samples
+
+    def observe_queue_depth(self, depth: int) -> None:
+        self.queue_depth.append(int(depth))
+
+    @property
+    def ms_per_image(self) -> float:
+        """Engine busy time per engine-served image — the paper's Exp #5
+        metric (cache-served images excluded: they cost ~0 engine time)."""
+        if not self.engine_images:
+            return float("nan")
+        return self.engine_ms / self.engine_images
+
+    def to_dict(self) -> dict:
+        qd = np.asarray(self.queue_depth) if self.queue_depth else None
+        return {
+            "latency": self.latency.summary(),
+            "requests": self.requests,
+            "rejected": self.rejected,
+            "query_rows": self.query_rows,
+            "engine_batches": self.engine_batches,
+            "engine_ms": self.engine_ms,
+            "engine_images": self.engine_images,
+            "cache_images": self.cache_images,
+            "q_cap_overflow": self.q_cap_overflow,
+            "ms_per_image": self.ms_per_image,
+            "warmup_ms": self.warmup_ms,
+            "recompiles_after_warmup": self.recompiles_after_warmup,
+            "queue_depth_mean": float(qd.mean()) if qd is not None else 0.0,
+            "queue_depth_max": int(qd.max()) if qd is not None else 0,
+        }

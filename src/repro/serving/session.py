@@ -1,0 +1,294 @@
+"""SearchSession: the long-lived serving core.
+
+The paper's search phase is a batch job: build (or load) the index, ship
+the lookup table, scan. A *service* runs the same engine continuously, and
+on an XLA backend the extra failure mode is recompilation — every new query
+batch shape lowers a new program, which at serving latencies is the
+difference between 5 ms and 5 s. The session closes that hole:
+
+  * **load-or-build** — index + tree round-trip through
+    ``serving.persist`` (checkpoint + DescriptorStore), so a process
+    restart costs a restore, not an index build;
+  * **bucketed executors** — a small ladder of padded batch-size buckets
+    (``engine.bucket_ladder``), one fused jitted pipeline per rung
+    (probe routing -> fixed-shape lookup -> executor). Requests snap up to
+    a rung (``snap_to_bucket``) with the valid-row count passed as a
+    *traced* scalar, so steady state never sees a new shape and never
+    recompiles (``recompiles()`` exposes the jit cache stats; tests and
+    the smoke gate assert it stays at the warmed count);
+  * **hot-leaf cache** — ``serving.cache.HotLeafCache`` answers repeated
+    hot queries locally (see its docstring);
+  * **metrics** — ``serving.metrics.ServingMetrics`` plus per-plan
+    measured ms/image fed to ``SearchPlan.observe`` (the ROADMAP cost-model
+    calibration hook).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import (
+    SearchPlan,
+    bucket_ladder,
+    make_executor,
+    plan as make_plan,
+    snap_to_bucket,
+)
+from repro.core.index_build import DistributedIndex
+from repro.core.lookup import build_lookup_bucketed
+from repro.core.tree import VocabTree
+from repro.distributed.meshutil import data_axis_size, local_mesh, round_up
+from repro.serving.cache import HotLeafCache
+from repro.serving.metrics import ServingMetrics
+
+
+def _jit_cache_size(fn) -> int:
+    # private jax API; if it moves we must NOT silently return 0 — the
+    # zero-recompile serving gate would become vacuous
+    return int(fn._cache_size())
+
+
+@dataclasses.dataclass
+class _BucketRuntime:
+    """One warmed rung: plan + fused jitted pipeline at a fixed shape."""
+
+    bucket: int  # query-row capacity of this rung
+    plan: SearchPlan
+    q_total: int  # padded lookup rows the executor was built for
+    fn: object  # jitted (index, tree, queries, n_valid) -> (result, leaves)
+
+
+class SearchSession:
+    """Long-lived search service over one (index, tree, mesh)."""
+
+    def __init__(
+        self,
+        index: DistributedIndex,
+        tree: VocabTree,
+        mesh=None,
+        *,
+        k: int = 10,
+        layout: str = "auto",
+        probes: int = 1,
+        impl: str = "xla",
+        max_batch_rows: int = 4096,
+        n_buckets: int = 3,
+        buckets: Sequence[int] | None = None,
+        cache_leaves: int = 0,
+        cache_admit_after: int = 2,
+    ):
+        self.mesh = mesh if mesh is not None else local_mesh()
+        self.index = index
+        self.tree = tree
+        self.k = int(k)
+        self.layout = layout
+        self.probes = int(probes)
+        self.impl = impl
+        self.buckets = (
+            tuple(sorted(int(b) for b in buckets))
+            if buckets
+            else bucket_ladder(max_batch_rows, n_buckets=n_buckets)
+        )
+        self.metrics = ServingMetrics()
+        self.cache = HotLeafCache(cache_leaves, admit_after=cache_admit_after)
+        if self.cache.capacity > 0:
+            self.cache.attach_index(
+                np.asarray(index.vecs), np.asarray(index.ids),
+                np.asarray(index.leaves), index.n_leaves,
+            )
+        self._runtimes = {b: self._make_runtime(b) for b in self.buckets}
+        self._warmed_compiles: int | None = None
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def load_or_build(
+        cls,
+        index_dir: str | None,
+        *,
+        build_fn,
+        mesh=None,
+        rebuild: bool = False,
+        **session_kw,
+    ) -> tuple["SearchSession", dict]:
+        """Index-once / serve-many: restore from ``index_dir`` when a
+        checkpoint exists, else call ``build_fn() -> (index, tree, extra)``
+        and persist the result (when ``index_dir`` is given).
+
+        Returns ``(session, meta)`` where ``meta`` is the checkpoint extra
+        (corpus geometry etc.) on restore, or ``build_fn``'s extra.
+        """
+        from repro.serving import persist
+
+        mesh = mesh if mesh is not None else local_mesh()
+        if index_dir and not rebuild and persist.has_index(index_dir):
+            index, tree, meta = persist.load_index(index_dir, mesh)
+            meta = dict(meta, restored=True)
+        else:
+            index, tree, extra = build_fn()
+            meta = dict(extra or {}, restored=False)
+            if index_dir:
+                persist.save_index(index_dir, index, tree, extra=extra)
+        return cls(index, tree, mesh, **session_kw), meta
+
+    def _make_runtime(self, bucket: int) -> _BucketRuntime:
+        n_shards = data_axis_size(self.mesh)
+        shard_rows = self.index.rows // n_shards
+        p = make_plan(
+            rows=self.index.rows,
+            n_leaves=self.index.n_leaves,
+            n_queries=bucket,
+            n_shards=n_shards,
+            k=self.k,
+            probes=self.probes,
+            layout=self.layout,
+            impl=self.impl,
+        )
+        q_rows = bucket * self.probes
+        if p.layout == "query_routed":
+            q_total = round_up(q_rows, p.q_tile * n_shards * self.probes)
+        else:
+            q_total = round_up(max(q_rows, p.q_cap), self.probes)
+        exec_fn = make_executor(
+            self.mesh, p, n_leaves=self.index.n_leaves,
+            shard_rows=shard_rows, q_total=q_total,
+        )
+        probes = self.probes
+
+        def fused(index, tree, queries, n_valid):
+            lookup, leaves = build_lookup_bucketed(
+                tree, queries, n_valid, probes=probes, q_total=q_total
+            )
+            return exec_fn(index, lookup), leaves
+
+        return _BucketRuntime(
+            bucket=bucket, plan=p, q_total=q_total, fn=jax.jit(fused)
+        )
+
+    # -- compile accounting -------------------------------------------------
+    def recompiles(self) -> int:
+        """Total jitted-executor compilations so far (jit cache entries)."""
+        return sum(_jit_cache_size(rt.fn) for rt in self._runtimes.values())
+
+    def steady_state_recompiles(self) -> int:
+        """Compilations after warmup — the serving invariant is 0."""
+        if self._warmed_compiles is None:
+            return 0
+        n = self.recompiles() - self._warmed_compiles
+        self.metrics.recompiles_after_warmup = n
+        return n
+
+    def warmup(self) -> float:
+        """Compile every bucket rung once (dummy batch) — steady-state
+        requests then only ever replay warmed programs."""
+        d = self.index.vecs.shape[-1]
+        t0 = time.perf_counter()
+        for rt in self._runtimes.values():
+            dummy = jnp.zeros((rt.bucket, d), jnp.float32)
+            res, leaves = rt.fn(self.index, self.tree, dummy, np.int32(0))
+            jax.block_until_ready((res.ids, leaves))
+        dt_ms = (time.perf_counter() - t0) * 1e3
+        self.metrics.warmup_ms += dt_ms
+        self._warmed_compiles = self.recompiles()
+        return dt_ms
+
+    # -- serve path ---------------------------------------------------------
+    @property
+    def max_batch_rows(self) -> int:
+        return self.buckets[-1]
+
+    def _execute(
+        self, queries: np.ndarray, *, n_images: int | None = None
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray, float]:
+        """Run one micro-batch through its snapped bucket rung.
+
+        Returns ``(ids (n,k), dists (n,k), probe_leaves (n,probes),
+        seconds)``; feeds metrics, the hot-leaf cache, and the plan's
+        ms/image observations.
+        """
+        n, d = queries.shape
+        if n > self.max_batch_rows:
+            raise ValueError(
+                f"batch of {n} rows exceeds largest bucket "
+                f"{self.max_batch_rows}; split it across dispatches"
+            )
+        rt = self._runtimes[snap_to_bucket(n, self.buckets)]
+        buf = np.zeros((rt.bucket, d), np.float32)
+        buf[:n] = queries
+        t0 = time.perf_counter()
+        res, leaves = rt.fn(
+            self.index, self.tree, jnp.asarray(buf), np.int32(n)
+        )
+        jax.block_until_ready((res.ids, res.dists, leaves))
+        dt = time.perf_counter() - t0
+        ids = np.asarray(res.ids[:n])
+        dists = np.asarray(res.dists[:n])
+        leaves_np = np.asarray(leaves[:n])
+        self.metrics.engine_batches += 1
+        self.metrics.engine_ms += dt * 1e3
+        self.metrics.query_rows += n
+        overflow = int(res.q_cap_overflow)
+        self.metrics.q_cap_overflow += overflow
+        if n_images:
+            self.metrics.engine_images += n_images
+            rt.plan.observe(dt * 1e3 / n_images)
+        # a starved dispatch must not seed the cache: a cached full-slab
+        # scan would disagree with the truncated engine answer
+        self.cache.record(queries, leaves_np, exact=overflow == 0)
+        return ids, dists, leaves_np, dt
+
+    def search(
+        self, queries: np.ndarray, *, n_images: int | None = None
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """One-shot search of ``(n, d)`` query rows (splits batches larger
+        than the top bucket). Results are bit-identical to
+        ``core.search.batch_search`` under the same plan budgets."""
+        queries = np.asarray(queries, np.float32)
+        if len(queries) <= self.max_batch_rows:
+            ids, dists, _, _ = self._execute(queries, n_images=n_images)
+            return ids, dists
+        # split batches: per-chunk plan observations would mis-attribute the
+        # whole request's images to one chunk's wall time, so only the
+        # aggregate image/ms counters are fed (ms_per_image stays honest)
+        out_i, out_d = [], []
+        for s in range(0, len(queries), self.max_batch_rows):
+            chunk = queries[s: s + self.max_batch_rows]
+            ids, dists, _, _ = self._execute(chunk)
+            out_i.append(ids)
+            out_d.append(dists)
+        if n_images:
+            self.metrics.engine_images += n_images
+        return np.concatenate(out_i), np.concatenate(out_d)
+
+    def serve_many(self, request_batches) -> list[tuple[np.ndarray, np.ndarray]]:
+        """Serve a coalesced micro-batch: ``request_batches`` is a list of
+        per-request ``(rows, d)`` arrays whose total fits one bucket.
+        Returns one ``(ids, dists)`` pair per request."""
+        sizes = [len(q) for q in request_batches]
+        ids, dists, _, _ = self._execute(
+            np.concatenate(request_batches), n_images=len(request_batches)
+        )
+        out, off = [], 0
+        for s in sizes:
+            out.append((ids[off: off + s], dists[off: off + s]))
+            off += s
+        return out
+
+    def plan_summary(self) -> list[dict]:
+        return [
+            {
+                "bucket": rt.bucket,
+                "layout": rt.plan.layout,
+                "q_total": rt.q_total,
+                "block_rows": rt.plan.block_rows,
+                "q_cap": rt.plan.q_cap,
+                "q_tile": rt.plan.q_tile,
+                "p_cap": rt.plan.p_cap,
+            }
+            for rt in self._runtimes.values()
+        ]

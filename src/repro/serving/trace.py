@@ -1,0 +1,92 @@
+"""Trace-driven load generation for the serving layer.
+
+A *trace* is the replayable description of a workload: which image each
+request queries and when it arrives (``repro.data.synth.sample_trace`` —
+uniform or Zipf-skewed popularity, Poisson or all-at-once arrivals,
+deterministic under a seed). This module turns a trace into concrete
+:class:`Request` objects: a request is one query image, i.e. its
+``desc_per_image`` descriptor rows read from the corpus store
+(``read_rows`` — only the containing blocks are touched) and perturbed
+with noise seeded *by image id*, so a repeated image is the same photo with
+the same descriptors — exactly the repetition the hot-leaf cache exploits.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.data import synth
+
+
+@dataclasses.dataclass
+class Request:
+    """One in-flight search request: a query image's descriptor rows."""
+
+    rid: int
+    image_id: int
+    arrival: float  # seconds since trace start
+    queries: np.ndarray  # (desc_per_image, dim) float32
+
+    @property
+    def rows(self) -> int:
+        return self.queries.shape[0]
+
+
+class TraceLoadGenerator:
+    """Materialise query vectors for a (image_ids, arrivals) trace.
+
+    ``corpus`` is either a block store (anything with ``read_rows``/``dim``:
+    :class:`~repro.data.store.DescriptorStore` or ``VirtualStore``) or a
+    resident ``(rows, dim)`` array. Image ``i`` owns descriptor rows
+    ``[i * desc_per_image, (i+1) * desc_per_image)`` — the
+    ``synth.sample_images`` layout, which persisted corpora keep.
+    """
+
+    def __init__(self, corpus, desc_per_image: int, *, noise: float = 4.0,
+                 seed: int = 0):
+        self.corpus = corpus
+        self.desc_per_image = int(desc_per_image)
+        self.noise = float(noise)
+        self.seed = int(seed)
+
+    def _read_rows(self, rows: np.ndarray) -> np.ndarray:
+        if isinstance(self.corpus, np.ndarray):
+            return self.corpus[rows]
+        return self.corpus.read_rows(rows)
+
+    def query_image(self, image_id: int) -> np.ndarray:
+        """The (deterministic) query descriptors for one image."""
+        dpi = self.desc_per_image
+        rows = image_id * dpi + np.arange(dpi, dtype=np.int64)
+        vecs = np.asarray(self._read_rows(rows), np.float32)
+        rng = np.random.default_rng((self.seed, int(image_id)))
+        q = vecs + rng.standard_normal(vecs.shape).astype(np.float32) * self.noise
+        return np.clip(q, 0.0, 255.0)
+
+    def requests(
+        self, image_ids: np.ndarray, arrivals: np.ndarray
+    ) -> list[Request]:
+        return [
+            Request(rid=r, image_id=int(img), arrival=float(t),
+                    queries=self.query_image(int(img)))
+            for r, (img, t) in enumerate(zip(image_ids, arrivals))
+        ]
+
+    def from_trace(
+        self,
+        n_requests: int,
+        n_images: int,
+        *,
+        skew: str = "uniform",
+        zipf_s: float = 1.1,
+        rate: float | None = None,
+        seed: int | None = None,
+    ) -> list[Request]:
+        """Sample a trace and materialise it in one step."""
+        image_ids, arrivals = synth.sample_trace(
+            n_requests, n_images, skew=skew, zipf_s=zipf_s, rate=rate,
+            seed=self.seed if seed is None else seed,
+        )
+        return self.requests(image_ids, arrivals)

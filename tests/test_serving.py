@@ -1,0 +1,384 @@
+"""Serving layer: bucket snapping never recompiles inside the warmed set,
+micro-batched results are bit-identical to direct batch_search, traces are
+deterministic, the hot-leaf cache is exact, and the index persists."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import (
+    bucket_ladder,
+    observations,
+    plan as make_plan,
+    record_observation,
+    reset_observations,
+    snap_to_bucket,
+)
+from repro.core.index_build import build_index
+from repro.core.lookup import build_lookup, build_lookup_bucketed
+from repro.core.search import batch_search
+from repro.core.tree import build_tree
+from repro.data import synth
+from repro.distributed.meshutil import local_mesh
+from repro.serving import (
+    MicroBatcher,
+    SearchSession,
+    TraceLoadGenerator,
+    persist,
+)
+
+DIM = 24
+DPI = 8  # descriptors per image in the serving tests
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    vecs_np, _ = synth.sample_descriptors(3000, DIM, seed=0, n_centers=50)
+    vecs = jnp.asarray(vecs_np)
+    tree = build_tree(vecs, (8, 4), key=jax.random.PRNGKey(1))
+    mesh = local_mesh()
+    index = build_index(vecs, tree, mesh, wire_dtype=jnp.float32)
+    q_np = np.array(vecs[:80]) + np.random.default_rng(2).standard_normal(
+        (80, DIM)
+    ).astype(np.float32)
+    return vecs_np, tree, mesh, index, q_np
+
+
+@pytest.fixture(scope="module")
+def session(corpus):
+    vecs_np, tree, mesh, index, q_np = corpus
+    s = SearchSession(index, tree, mesh, k=5, layout="point_major",
+                      probes=2, buckets=(32, 96))
+    s.warmup()
+    return s
+
+
+# ---------------------------------------------------------------------------
+# bucket ladder / snapping / plan observations
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_ladder_divisors_and_snap():
+    b = bucket_ladder(4096, n_buckets=4, min_queries=32)
+    assert b[-1] == 4096 and len(b) == 4
+    assert all(4096 % x == 0 for x in b)  # rungs divide the top rung
+    assert b == tuple(sorted(b))
+    assert snap_to_bucket(1, b) == b[0]
+    assert snap_to_bucket(b[0], b) == b[0]
+    assert snap_to_bucket(b[0] + 1, b) == b[1]
+    assert snap_to_bucket(4096, b) == 4096
+    assert snap_to_bucket(9999, b) == 4096  # caller splits oversize batches
+    with pytest.raises(ValueError):
+        snap_to_bucket(0, b)
+    # degenerate ladders still work (primes collapse to {1, n})
+    small = bucket_ladder(7, n_buckets=3, min_queries=1)
+    assert small[-1] == 7 and all(7 % x == 0 for x in small)
+
+
+def test_plan_observations_registry():
+    reset_observations()
+    p = make_plan(rows=8192, n_leaves=64, n_queries=128, n_shards=1, k=5,
+                  layout="point_major")
+    p.observe(12.5)
+    p.observe(7.5)
+    record_observation(p, 10.0)
+    obs = observations()
+    assert len(obs) == 1
+    (key, o), = obs.items()
+    assert key.startswith("point_major/k=5/")
+    assert o["count"] == 3
+    assert o["min_ms"] == 7.5 and o["max_ms"] == 12.5
+    assert o["mean_ms"] == pytest.approx(10.0)
+    assert o["last_ms"] == 10.0
+    reset_observations()
+    assert observations() == {}
+
+
+# ---------------------------------------------------------------------------
+# bucketed lookup build
+# ---------------------------------------------------------------------------
+
+
+def test_bucketed_lookup_matches_build_lookup(corpus):
+    vecs_np, tree, mesh, index, q_np = corpus
+    q = jnp.asarray(q_np[:32])
+    for probes in (1, 3):
+        lk = build_lookup(tree, q, probes=probes)
+        blk, leaves = jax.jit(
+            build_lookup_bucketed, static_argnames=("probes", "q_total")
+        )(tree, q, 32, probes=probes, q_total=32 * probes)
+        assert leaves.shape == (32, probes)
+        for a, b in zip(
+            (lk.vecs, lk.qids, lk.leaves, lk.offsets),
+            (blk.vecs, blk.qids, blk.leaves, blk.offsets),
+        ):
+            np.testing.assert_array_equal(np.array(a), np.array(b))
+
+
+def test_bucketed_lookup_masks_padding(corpus):
+    """Rows past n_valid never reach a real leaf; real rows keep their
+    exact build_lookup ordering and CSR spans."""
+    vecs_np, tree, mesh, index, q_np = corpus
+    n_valid, bucket, probes = 20, 32, 2
+    buf = np.zeros((bucket, DIM), np.float32)
+    buf[:n_valid] = q_np[:n_valid]
+    blk, _ = build_lookup_bucketed(
+        tree, jnp.asarray(buf), n_valid, probes=probes,
+        q_total=bucket * probes + probes,
+    )
+    lv = np.array(blk.leaves)
+    qids = np.array(blk.qids)
+    real = lv >= 0
+    assert real.sum() == n_valid * probes
+    # every real row's flat slot belongs to a valid query
+    assert (qids[real] < n_valid * probes).all()
+    # CSR offsets span exactly the real rows
+    off = np.array(blk.offsets)
+    assert off[-1] - off[0] == n_valid * probes
+    # direct build over just the valid queries orders rows identically
+    lk = build_lookup(tree, jnp.asarray(q_np[:n_valid]), probes=probes)
+    np.testing.assert_array_equal(np.array(lk.qids), qids[real])
+    np.testing.assert_array_equal(np.array(lk.leaves), lv[real])
+
+
+# ---------------------------------------------------------------------------
+# session: no recompiles in the warmed set + bit-identical results
+# ---------------------------------------------------------------------------
+
+
+def test_no_recompile_within_warmed_buckets(session, corpus):
+    vecs_np, tree, mesh, index, q_np = corpus
+    warmed = session.recompiles()
+    assert warmed == len(session.buckets)  # one program per rung
+    for n in (1, 7, 31, 32, 33, 64, 96):
+        session.search(q_np[:n])
+    # oversize batches split across dispatches, still no new programs
+    big = np.concatenate([q_np, q_np])  # 160 rows > max bucket 96
+    session.search(big)
+    assert session.recompiles() == warmed
+    assert session.steady_state_recompiles() == 0
+
+
+@pytest.mark.parametrize("layout", ["point_major", "query_routed"])
+def test_microbatched_bit_identical_to_direct(corpus, layout):
+    """The acceptance invariant: session results == direct batch_search,
+    exactly, on both layouts — padding/masking never perturbs a result."""
+    vecs_np, tree, mesh, index, q_np = corpus
+    s = SearchSession(index, tree, mesh, k=5, layout=layout, probes=2,
+                      buckets=(96,))
+    s.warmup()
+    for n in (96, 50, 17):  # exact-fill and padded buckets
+        ids, dists = s.search(q_np[:n])
+        p = s._runtimes[96].plan
+        kw = (
+            dict(block_rows=p.block_rows, q_cap=p.q_cap)
+            if layout == "point_major"
+            else dict(q_tile=p.q_tile, p_cap=p.p_cap)
+        )
+        direct = batch_search(index, tree, jnp.asarray(q_np[:n]), k=5,
+                              mesh=mesh, layout=layout, probes=2, **kw)
+        np.testing.assert_array_equal(ids, np.array(direct.ids))
+        np.testing.assert_array_equal(dists, np.array(direct.dists))
+
+
+def test_serve_many_splits_per_request(session, corpus):
+    vecs_np, tree, mesh, index, q_np = corpus
+    parts = [q_np[:10], q_np[10:14], q_np[14:40]]
+    outs = session.serve_many(parts)
+    whole_i, whole_d = session.search(q_np[:40])
+    off = 0
+    for (ids, dists), part in zip(outs, parts):
+        assert ids.shape == (len(part), session.k)
+        np.testing.assert_array_equal(ids, whole_i[off: off + len(part)])
+        off += len(part)
+
+
+# ---------------------------------------------------------------------------
+# traces: determinism + skew
+# ---------------------------------------------------------------------------
+
+
+def test_trace_deterministic_and_skewed():
+    a_img, a_t = synth.sample_trace(500, 100, skew="zipf", rate=50.0, seed=9)
+    b_img, b_t = synth.sample_trace(500, 100, skew="zipf", rate=50.0, seed=9)
+    np.testing.assert_array_equal(a_img, b_img)
+    np.testing.assert_array_equal(a_t, b_t)
+    c_img, _ = synth.sample_trace(500, 100, skew="zipf", rate=50.0, seed=10)
+    assert not np.array_equal(a_img, c_img)
+    assert (np.diff(a_t) >= 0).all()  # arrivals are a point process
+    u_img, u_t = synth.sample_trace(500, 100, skew="uniform", seed=9)
+    assert (u_t == 0).all()  # no rate -> offline batch trace
+    # zipf concentrates mass: top-10 images absorb far more than uniform's
+    top = lambda ids: np.sort(np.bincount(ids, minlength=100))[-10:].sum()
+    assert top(a_img) > 2 * top(u_img)
+    with pytest.raises(ValueError):
+        synth.sample_trace(10, 100, skew="bogus")
+
+
+def test_trace_generator_repeats_are_identical(corpus):
+    vecs_np, tree, mesh, index, q_np = corpus
+    gen = TraceLoadGenerator(vecs_np, DPI, seed=5)
+    # same image -> the same photo -> identical query descriptors
+    np.testing.assert_array_equal(gen.query_image(7), gen.query_image(7))
+    reqs = gen.requests(np.array([3, 7, 3]), np.array([0.0, 0.1, 0.2]))
+    assert [r.rows for r in reqs] == [DPI] * 3
+    np.testing.assert_array_equal(reqs[0].queries, reqs[2].queries)
+    assert not np.array_equal(reqs[0].queries, reqs[1].queries)
+
+
+# ---------------------------------------------------------------------------
+# micro-batcher: coalescing, deadline, backpressure
+# ---------------------------------------------------------------------------
+
+
+def test_batcher_coalesces_and_respects_backpressure(corpus):
+    vecs_np, tree, mesh, index, q_np = corpus
+    s = SearchSession(index, tree, mesh, k=3, layout="point_major",
+                      buckets=(64,))
+    s.warmup()
+    gen = TraceLoadGenerator(vecs_np, DPI, seed=5)
+    # burst of 12 requests at t=0, 8 requests/bucket (64 rows / 8 dpi)
+    reqs = gen.requests(np.arange(12), np.zeros(12))
+    done = MicroBatcher(s, max_wait_ms=5.0, max_queue=4096).run(reqs)
+    m = s.metrics
+    assert m.requests == 12 and m.rejected == 0
+    assert m.engine_batches == 2  # 8 + 4, coalesced
+    assert len(m.latency) == 12
+    assert all(c.latency_ms >= 0 for c in done)
+    # backpressure: a queue cap of 5 rejects the burst's tail
+    s2 = SearchSession(index, tree, mesh, k=3, layout="point_major",
+                       buckets=(64,))
+    s2.warmup()
+    done2 = MicroBatcher(s2, max_wait_ms=5.0, max_queue=5).run(
+        gen.requests(np.arange(12), np.zeros(12))
+    )
+    rej = [c for c in done2 if c.source == "rejected"]
+    assert len(rej) == 7 and s2.metrics.rejected == 7
+    assert all(c.ids is None for c in rej)
+    assert s2.metrics.requests == 5
+
+
+def test_batcher_serves_requests_larger_than_top_bucket(corpus):
+    """A single request bigger than the largest bucket is split across
+    dispatches by the session instead of crashing the replay."""
+    vecs_np, tree, mesh, index, q_np = corpus
+    s = SearchSession(index, tree, mesh, k=3, layout="point_major",
+                      buckets=(16,))
+    s.warmup()
+    gen = TraceLoadGenerator(vecs_np, 40, seed=5)  # 40 rows > 16-row bucket
+    done = MicroBatcher(s, max_wait_ms=1.0, max_queue=8).run(
+        gen.requests(np.arange(2), np.zeros(2))
+    )
+    assert s.metrics.requests == 2 and s.metrics.rejected == 0
+    assert all(c.source == "engine" and c.ids.shape == (40, 3) for c in done)
+    assert s.steady_state_recompiles() == 0
+
+
+def test_batcher_deadline_dispatches_partial_batches(corpus):
+    """Sparse arrivals + a tight deadline: every request dispatches alone
+    rather than waiting to fill a bucket."""
+    vecs_np, tree, mesh, index, q_np = corpus
+    s = SearchSession(index, tree, mesh, k=3, layout="point_major",
+                      buckets=(64,))
+    s.warmup()
+    gen = TraceLoadGenerator(vecs_np, DPI, seed=5)
+    arrivals = np.arange(4) * 10.0  # 10 s apart >> 1 ms deadline
+    done = MicroBatcher(s, max_wait_ms=1.0, max_queue=64).run(
+        gen.requests(np.arange(4), arrivals)
+    )
+    assert s.metrics.engine_batches == 4
+    # latency excludes the inter-arrival gaps (virtual clock follows trace)
+    assert all(c.latency_ms < 5000 for c in done)
+
+
+# ---------------------------------------------------------------------------
+# hot-leaf cache: hits happen and are exact
+# ---------------------------------------------------------------------------
+
+
+def test_cache_hits_repeated_images_exactly(corpus):
+    vecs_np, tree, mesh, index, q_np = corpus
+    s = SearchSession(index, tree, mesh, k=3, layout="point_major",
+                      probes=2, buckets=(64,), cache_leaves=tree.n_leaves,
+                      cache_admit_after=1)
+    s.warmup()
+    gen = TraceLoadGenerator(vecs_np, DPI, seed=5)
+    # images 0..3 arrive cold at t=0, then repeat later (cache-warm)
+    image_ids = np.array([0, 1, 2, 3, 0, 1, 2, 3, 0])
+    arrivals = np.array([0, 0, 0, 0, 1, 1, 1, 1, 2], np.float64)
+    done = MicroBatcher(s, max_wait_ms=5.0, max_queue=64).run(
+        gen.requests(image_ids, arrivals)
+    )
+    m = s.metrics
+    assert m.requests == 9
+    assert m.cache_images == 5  # every repeat served from cache
+    assert s.cache.hits > 0 and s.cache.hit_rate > 0
+    # cached answers return the same neighbour ids as the engine did
+    by_src = {}
+    for c in done:
+        by_src.setdefault((c.image_id, c.source), c)
+    for img in range(4):
+        eng = by_src[(img, "engine")]
+        hit = by_src.get((img, "cache"))
+        if hit is None:
+            continue
+        np.testing.assert_array_equal(hit.ids, eng.ids)
+        # same candidate set and ids; distances agree to f32 GEMM rounding
+        np.testing.assert_allclose(hit.dists, eng.dists, rtol=1e-3, atol=0.5)
+
+
+# ---------------------------------------------------------------------------
+# persistence: index-once / serve-many
+# ---------------------------------------------------------------------------
+
+
+def test_index_persist_roundtrip(tmp_path, corpus):
+    vecs_np, tree, mesh, index, q_np = corpus
+    d = str(tmp_path / "idx")
+    assert not persist.has_index(d)
+    persist.save_index(d, index, tree, extra={"images": 375,
+                                              "desc_per_image": DPI})
+    assert persist.has_index(d)
+    r_index, r_tree, meta = persist.load_index(d, mesh)
+    assert meta["images"] == 375 and meta["n_leaves"] == index.n_leaves
+    assert meta["fanouts"] == [8, 4]
+    for a, b in (
+        (index.vecs, r_index.vecs), (index.ids, r_index.ids),
+        (index.leaves, r_index.leaves), (index.offsets, r_index.offsets),
+        (index.n_valid, r_index.n_valid),
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(tree.levels, r_tree.levels):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the restored index serves identical results
+    res_a = batch_search(index, tree, jnp.asarray(q_np[:16]), k=3, mesh=mesh)
+    res_b = batch_search(r_index, r_tree, jnp.asarray(q_np[:16]), k=3,
+                         mesh=mesh)
+    np.testing.assert_array_equal(np.array(res_a.ids), np.array(res_b.ids))
+    # corpus store round-trip
+    persist.save_corpus(d, vecs_np, block_rows=1024)
+    st = persist.load_corpus(d)
+    rows = np.array([0, 1023, 1024, 2999])
+    np.testing.assert_array_equal(st.read_rows(rows), vecs_np[rows])
+
+
+def test_load_or_build_prefers_checkpoint(tmp_path, corpus):
+    vecs_np, tree, mesh, index, q_np = corpus
+    d = str(tmp_path / "idx2")
+    calls = []
+
+    def build_fn():
+        calls.append(1)
+        return index, tree, {"images": 375}
+
+    s1, meta1 = SearchSession.load_or_build(
+        d, build_fn=build_fn, mesh=mesh, k=3, buckets=(32,))
+    assert calls == [1] and meta1["restored"] is False
+    s2, meta2 = SearchSession.load_or_build(
+        d, build_fn=build_fn, mesh=mesh, k=3, buckets=(32,))
+    assert calls == [1] and meta2["restored"] is True  # no rebuild
+    assert meta2["images"] == 375
+    s3, meta3 = SearchSession.load_or_build(
+        d, build_fn=build_fn, mesh=mesh, rebuild=True, k=3, buckets=(32,))
+    assert calls == [1, 1] and meta3["restored"] is False
