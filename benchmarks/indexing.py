@@ -3,9 +3,22 @@
 Hadoop tuning (map slots, output compression, sort buffers) maps onto our
 pipeline knobs: wire dtype (map-output compression), wave size (chunk
 size / JVM reuse), routing capacity factor (spill headroom). 'Default'
-mimics the paper's untuned run; 'tuned' applies every lesson."""
+mimics the paper's untuned run; 'tuned' applies every lesson.
+
+Beyond the one-shot tables, this module also owns the *incremental* side
+of the lifecycle API (``python -m benchmarks.indexing --incremental``):
+per-segment ``Index.append``+``commit`` throughput (rows/s) recorded to
+JSON, plus the lifecycle smoke (``--smoke``) gating every PR: create →
+append ×2 → search → compact → search must return identical neighbours."""
 
 from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
 
 import jax.numpy as jnp
 
@@ -51,3 +64,155 @@ def run():
                    warmup=1, iters=3)
         out.append(row(f"t4_{knob}", t, f"vs_default={base / t:.2f}x"))
     return out
+
+
+def run_incremental(
+    *,
+    segments: int = 4,
+    rows_per_segment: int = 30_000,
+    dim: int = 64,
+    fanouts: tuple = (32, 32),
+    json_path: str | None = None,
+    seed: int = 0,
+) -> dict:
+    """Incremental-append throughput: rows/s per committed segment.
+
+    The paper's collection grows between runs; this measures the cost of
+    growing ours — each round is one ``Index.append`` + ``commit`` into a
+    durable directory, timed end-to-end (build, segment checkpoint write,
+    manifest bump), plus a search over the accumulated segments.
+    """
+    import numpy as np
+
+    from repro.data.store import VirtualStore
+    from repro.index import Index
+    from repro.core.tree import build_tree
+    from repro.distributed.meshutil import local_mesh
+    import jax
+
+    mesh = local_mesh()
+    store = VirtualStore(
+        segments * rows_per_segment, dim, block_rows=rows_per_segment,
+        seed=seed,
+    )
+    tree = build_tree(
+        jnp.asarray(store.sample_for_tree(min(65_536, store.n_rows))),
+        tuple(fanouts), key=jax.random.PRNGKey(seed),
+    )
+    payload = {"segments": [], "rows_per_segment": rows_per_segment,
+               "dim": dim, "n_segments": segments}
+    with tempfile.TemporaryDirectory() as d:
+        idx = Index.create(tree, d, mesh=mesh)
+        for b in range(segments):
+            blk = store.read_block(b)
+            t0 = time.perf_counter()
+            name = idx.append(blk.vecs, ids=blk.ids)
+            idx.commit()
+            dt = time.perf_counter() - t0
+            payload["segments"].append({
+                "name": name,
+                "rows": int(blk.vecs.shape[0]),
+                "seconds": dt,
+                "rows_per_s": blk.vecs.shape[0] / dt,
+                "total_rows": idx.rows,
+            })
+        q = store.read_rows(
+            np.arange(0, store.n_rows, max(1, store.n_rows // 256))
+        )
+        t0 = time.perf_counter()
+        res = idx.search(q, k=10)
+        jax.block_until_ready(res.ids)
+        payload["search_s_over_all_segments"] = time.perf_counter() - t0
+    if json_path:
+        os.makedirs(os.path.dirname(json_path) or ".", exist_ok=True)
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"# incremental indexing JSON -> {json_path}", file=sys.stderr)
+    return payload
+
+
+def lifecycle_smoke() -> int:
+    """Per-PR gate: create → append ×2 → search → compact → search must be
+    exact — identical neighbour ids *and* distances before and after
+    compaction, and identical to a one-shot build of the same rows."""
+    import jax
+    import numpy as np
+
+    from repro.core.index_build import build_index
+    from repro.core.search import batch_search
+    from repro.core.tree import build_tree
+    from repro.data import synth
+    from repro.distributed.meshutil import local_mesh
+    from repro.index import Index
+
+    mesh = local_mesh()
+    vecs, _ = synth.sample_descriptors(12_000, 32, seed=0, n_centers=128)
+    tree = build_tree(jnp.asarray(vecs), (16, 16), key=jax.random.PRNGKey(1))
+    rng = np.random.default_rng(2)
+    q = vecs[:128] + rng.standard_normal((128, 32)).astype(np.float32)
+
+    with tempfile.TemporaryDirectory() as d:
+        idx = Index.create(tree, d, mesh=mesh)
+        idx.append(vecs[:7_000])
+        idx.append(vecs[7_000:])
+        idx.commit()
+        assert idx.n_segments == 2 and idx.rows == 12_000, idx.stats()
+        a = idx.search(q, k=5, layout="point_major", q_cap=1024)
+        assert int(a.q_cap_overflow) == 0
+        one = build_index(jnp.asarray(vecs), tree, mesh,
+                          wire_dtype=jnp.float32)
+        ref = batch_search(one, tree, jnp.asarray(q), k=5, mesh=mesh,
+                           layout="point_major", q_cap=1024)
+        np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(ref.ids))
+        idx.compact()
+        assert idx.n_segments == 1, idx.stats()
+        b = idx.search(q, k=5, layout="point_major", q_cap=1024)
+        np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+        np.testing.assert_array_equal(np.asarray(a.dists),
+                                      np.asarray(b.dists))
+        reopened = Index.open(d, mesh=mesh)
+        c = reopened.search(q, k=5, layout="point_major", q_cap=1024)
+        np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(c.ids))
+    print(
+        "# lifecycle smoke: append x2 == one-shot == compacted == reopened "
+        "(128 queries, k=5)", file=sys.stderr,
+    )
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the index-lifecycle smoke gate")
+    ap.add_argument("--incremental", action="store_true",
+                    help="incremental-append throughput mode")
+    ap.add_argument("--segments", type=int, default=4)
+    ap.add_argument("--rows-per-segment", type=int, default=30_000)
+    ap.add_argument("--dim", type=int, default=64)
+    ap.add_argument("--json", default=None,
+                    help="JSON output path (incremental mode; default "
+                    "benchmarks/out/indexing_incremental.json)")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        return lifecycle_smoke()
+    if args.incremental:
+        out_dir = os.environ.get("REPRO_BENCH_OUT", "benchmarks/out")
+        payload = run_incremental(
+            segments=args.segments, rows_per_segment=args.rows_per_segment,
+            dim=args.dim,
+            json_path=args.json or os.path.join(
+                out_dir, "indexing_incremental.json"
+            ),
+        )
+        for s in payload["segments"]:
+            print(row(f"incremental_{s['name']}", s["seconds"],
+                      f"rows_per_s={s['rows_per_s']:.0f}"))
+        return 0
+    print("name,us_per_call,derived")
+    for r in run():
+        print(r)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

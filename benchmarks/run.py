@@ -34,10 +34,12 @@ MODULES = [
 
 
 def smoke() -> int:
-    """Tiny end-to-end serve runs on both layouts with multi-probe, plus
-    the serving-session gate (2 warmed buckets, ~100 zipf requests, zero
-    steady-state recompiles) — the per-PR gate wired into
-    scripts/smoke.sh. Fails loudly, returns rc."""
+    """Tiny end-to-end serve runs on both layouts with multi-probe, the
+    serving-session gate (2 warmed buckets, ~100 zipf requests, zero
+    steady-state recompiles), and the index-lifecycle gate (create →
+    append ×2 → search → compact → search, identical results) — the
+    per-PR gate wired into scripts/smoke.sh. Fails loudly, returns rc."""
+    from benchmarks import indexing as indexing_bench
     from benchmarks import serving as serving_bench
     from repro.launch import serve
 
@@ -51,6 +53,11 @@ def smoke() -> int:
         rc = serve.main(base + ["--layout", layout])
         if rc != 0:
             return rc
+    print("# smoke: index lifecycle (append x2 / compact exactness)",
+          file=sys.stderr)
+    rc = indexing_bench.lifecycle_smoke()
+    if rc != 0:
+        return rc
     print("# smoke: serving session (2 buckets, zipf trace)", file=sys.stderr)
     return serving_bench.smoke()
 

@@ -12,7 +12,9 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== tier-1 test suite =="
 python -m pytest -x -q
 
-echo "== serve smoke (both layouts, --probes 2) + serving session gate =="
+# includes the index-lifecycle gate (create -> append x2 -> search ->
+# compact -> search, exactness asserted); standalone: benchmarks.indexing --smoke
+echo "== serve smoke (both layouts, --probes 2) + lifecycle + session gates =="
 python -m benchmarks.run --smoke
 
 echo "== serving CLI smoke (zipf trace, hot-leaf cache, recompile gate) =="

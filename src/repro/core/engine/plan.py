@@ -258,6 +258,7 @@ def plan(
     q_tile: int | None = None,
     p_cap: int | None = None,
     query_capacity_factor: float = 4.0,
+    use_observations: bool = False,
 ) -> SearchPlan:
     """Resolve a full :class:`SearchPlan` from shapes.
 
@@ -265,6 +266,20 @@ def plan(
     lower modelled scan cost; ``query_routed`` additionally requires
     ``n_leaves`` to divide evenly over the shards (leaf ownership is a
     contiguous range per shard).
+
+    ``use_observations=True`` closes the cost-model loop (ROADMAP): when
+    *both* candidate plans have measured ms/image under their exact plan
+    signature (fed by ``SearchPlan.observe`` from the serving session and
+    benchmarks), the measured means rank the layouts instead of the shape
+    model. With fewer than two measured candidates the shape model decides
+    — a single measurement cannot be compared against a modelled cost.
+
+    Caveat: a plan signature keys on the *resolved budgets*, which embed
+    the index/query shapes only when the budgets were derived by this
+    function. Explicitly pinned budgets (e.g. a CLI ``--q-cap``) produce
+    the same signature at any corpus size, so measurements can bleed
+    across shapes; fitting a parametric model over shapes is the ROADMAP
+    follow-on.
     """
     if probes > n_leaves:
         raise ValueError(f"{probes=} must be <= {n_leaves=}")
@@ -294,6 +309,19 @@ def plan(
         return qr.resolved()
     if layout != "auto":
         raise ValueError(f"unknown layout {layout!r}")
+    if use_observations:
+        measured = {
+            p.layout: _OBSERVATIONS.get(_plan_signature(p)) for p in (pm, qr)
+        }
+        if all(measured.values()):
+            mean = lambda o: o["total_ms"] / max(1, o["count"])  # noqa: E731
+            # tie goes to the paper-faithful baseline, like the shape model
+            pick = (
+                pm
+                if mean(measured["point_major"]) <= mean(measured["query_routed"])
+                else qr
+            )
+            return pick.resolved()
     cost = {
         p.layout: _scan_cost(p, shard_rows=shard_rows, n_shards=n_shards,
                              q_rows=q_rows, k=k)

@@ -9,10 +9,15 @@ core. This module keeps the historical entry points stable:
     with their original signatures (configs and hillclimb cells call these);
   * ``pad_lookup`` — lookup padding (now sentinel-named);
   * ``batch_search`` — the eager convenience wrapper, which gained
-    ``layout="auto"`` (plan-heuristic pick) and multi-probe ``probes=T``.
+    ``layout="auto"`` (plan-heuristic pick) and multi-probe ``probes=T``;
+  * ``search_with_lookup`` — one executor run over a *pre-built* lookup
+    table. The segment-based :class:`repro.index.Index` shares a single
+    lookup build across all its segments and calls this per segment.
 """
 
 from __future__ import annotations
+
+from functools import lru_cache
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +29,64 @@ from repro.core.index_build import DistributedIndex
 from repro.core.lookup import LookupTable, build_lookup
 from repro.core.tree import VocabTree
 from repro.distributed.meshutil import data_axis_size, round_up
+
+# one shared jitted lookup build: repeated eager searches (and the
+# per-segment Index.search path) reuse the compiled program instead of
+# re-lowering per call
+jit_build_lookup = jax.jit(build_lookup, static_argnames=("probes",))
+
+
+@lru_cache(maxsize=128)
+def _cached_executor(mesh, plan: SearchPlan, n_leaves: int, shard_rows: int,
+                     q_total: int):
+    """Jitted executor cache keyed by everything that shapes the program.
+
+    Segment searches hit the same (plan, shapes) repeatedly — once per
+    search call per segment — and must not recompile each time.
+    """
+    return jax.jit(make_executor(
+        mesh, plan, n_leaves=n_leaves, shard_rows=shard_rows, q_total=q_total
+    ))
+
+
+def lookup_q_total(p: SearchPlan, n_queries: int, n_shards: int) -> int:
+    """Padded lookup-row count an executor for ``p`` needs.
+
+    Query-routed rows must land on the ``(q_tile * n_shards)`` routing grid
+    *and* stay a multiple of ``probes`` for the probe-group merge;
+    point-major only needs the slab budget covered.
+    """
+    q_rows = n_queries * p.probes
+    if p.layout == "query_routed":
+        return round_up(q_rows, p.q_tile * n_shards * p.probes)
+    return round_up(max(q_rows, p.q_cap), p.probes)
+
+
+def search_with_lookup(
+    index: DistributedIndex,
+    lookup: LookupTable,
+    plan: SearchPlan,
+    mesh: Mesh,
+    *,
+    n_queries: int,
+) -> SearchResult:
+    """Run one resolved plan's executor over a pre-built lookup table.
+
+    ``lookup`` is the unpadded ``n_queries * probes``-row table from
+    :func:`~repro.core.lookup.build_lookup`; it is padded here to the
+    executor's row count. Results are trimmed back to ``n_queries`` rows.
+    """
+    n_shards = data_axis_size(mesh)
+    shard_rows = index.rows // n_shards
+    q_total = lookup_q_total(plan, n_queries, n_shards)
+    fn = _cached_executor(mesh, plan, index.n_leaves, shard_rows, q_total)
+    res = fn(index, pad_lookup(lookup, q_total))
+    return SearchResult(
+        ids=res.ids[:n_queries],
+        dists=res.dists[:n_queries],
+        pairs=res.pairs,
+        q_cap_overflow=res.q_cap_overflow,
+    )
 
 
 def batch_search_fn(
@@ -91,16 +154,17 @@ def batch_search(
     impl: str = "xla",
     p_cap: int | None = None,
     q_tile: int | None = None,
+    use_observations: bool = False,
 ) -> SearchResult:
     """Eager convenience wrapper: plan, build lookup, pad, jit, run, trim.
 
     ``layout`` is one of ``point_major`` (paper-faithful wave scan),
     ``query_routed`` (beyond-paper shuffle), or ``auto`` (the ``plan()``
-    cost model picks). ``probes=T`` visits each query's T nearest leaves —
-    the multi-probe recall lever (docs/engine.md).
+    cost model picks; ``use_observations=True`` lets measured ms/image
+    override the shape model). ``probes=T`` visits each query's T nearest
+    leaves — the multi-probe recall lever (docs/engine.md).
     """
     n_shards = data_axis_size(mesh)
-    shard_rows = index.rows // n_shards
     q = queries.shape[0]
     p = make_plan(
         rows=index.rows,
@@ -115,26 +179,7 @@ def batch_search(
         q_cap=q_cap,
         q_tile=q_tile,
         p_cap=p_cap,
+        use_observations=use_observations,
     )
-    lookup = jax.jit(build_lookup, static_argnames=("probes",))(
-        tree, queries, probes=probes
-    )
-    q_rows = q * probes
-    if p.layout == "query_routed":
-        # rows must land on the (q_tile * n_shards) routing grid *and* stay
-        # a multiple of probes for the probe-group merge
-        q_total = round_up(q_rows, p.q_tile * n_shards * probes)
-    else:
-        q_total = round_up(max(q_rows, p.q_cap), probes)
-    lookup = pad_lookup(lookup, q_total)
-    fn = make_executor(
-        mesh, p, n_leaves=index.n_leaves, shard_rows=shard_rows,
-        q_total=q_total,
-    )
-    res = jax.jit(fn)(index, lookup)
-    return SearchResult(
-        ids=res.ids[:q],
-        dists=res.dists[:q],
-        pairs=res.pairs,
-        q_cap_overflow=res.q_cap_overflow,
-    )
+    lookup = jit_build_lookup(tree, queries, probes=probes)
+    return search_with_lookup(index, lookup, p, mesh, n_queries=q)

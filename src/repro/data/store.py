@@ -128,13 +128,18 @@ class VirtualStore:
 def _read_rows(store, rows: np.ndarray) -> np.ndarray:
     """Gather arbitrary global rows, touching each containing block once.
 
-    The serving trace replay uses this to materialise query vectors for a
-    request's image without holding the corpus resident: a trace references
-    descriptor row ids, and only the blocks those rows live in are read
-    (or regenerated, for a virtual store).
+    The serving trace replay and the index lifecycle rely on its edge-case
+    contract: rows may arrive in any order (with duplicates), may span the
+    final partial block, and an empty selection returns an empty ``(0,
+    dim)`` gather; the output row ``i`` is always ``store`` row
+    ``rows[i]``, regardless of gather order.
     """
-    rows = np.asarray(rows, np.int64)
-    if rows.size and (rows.min() < 0 or rows.max() >= store.n_rows):
+    rows = np.atleast_1d(np.asarray(rows, np.int64))
+    if rows.ndim != 1:
+        raise ValueError(f"rows must be 1-D; got shape {rows.shape}")
+    if rows.size == 0:
+        return np.empty((0, store.dim), np.float32)
+    if rows.min() < 0 or rows.max() >= store.n_rows:
         raise IndexError(
             f"row ids must be in [0, {store.n_rows}); got "
             f"[{rows.min()}, {rows.max()}]"

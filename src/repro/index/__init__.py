@@ -1,0 +1,17 @@
+"""Segment-based index lifecycle: create / open / append / commit /
+delete / compact / search.
+
+The single public facade over index building, persistence and search —
+``launch/index.py`` and ``launch/serve.py`` are thin CLIs over it, the
+serving :class:`~repro.serving.SearchSession` is constructed from it, and
+the historical ``serving.persist.save_index``/``load_index`` pair are
+deprecation shims around it. See docs/index_lifecycle.md.
+"""
+
+from repro.index.lifecycle import (  # noqa: F401
+    Index,
+    has_index,
+    has_legacy_index,
+)
+from repro.index.manifest import Manifest  # noqa: F401
+from repro.index.segment import Segment  # noqa: F401

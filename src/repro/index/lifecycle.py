@@ -1,0 +1,691 @@
+"""The segment-based index lifecycle facade (paper §2.2–2.3 as an API).
+
+The paper's collection *grows between runs*: 30B descriptors are indexed in
+grid-sized batches, and every search job runs against whatever index files
+exist so far. :class:`Index` is that workflow as one object:
+
+  ``Index.create(tree, dir)``   new index bound to a vocabulary tree
+  ``Index.open(dir)``           restore the last committed state
+  ``idx.append(vecs, ids)``     wave-based assignment (``build_index_fn``
+                                under the eager wrapper) into a new
+                                immutable, durably-written *segment*
+  ``idx.commit()``              atomic manifest bump — the only operation
+                                that makes appends/deletes visible to a
+                                later ``open`` (crash-safe, idempotent)
+  ``idx.delete(ids)``           tombstones (masked at search, dropped at
+                                compaction)
+  ``idx.compact()``             merge all segments into one, dropping
+                                tombstoned rows; commits atomically
+  ``idx.search(queries, ...)``  engine executors per segment over one
+                                shared lookup build, merged across segments
+
+Search over N segments is *bit-identical* to a one-shot ``build_index`` +
+``batch_search`` over the concatenated rows (and after ``compact()`` the
+index arrays themselves match a from-scratch rebuild): per-pair distances
+depend only on the (point, query) vectors, tombstone masking reuses the
+pipeline's own padding semantics, and the cross-segment merge applies the
+same ascending-distance fold the executors use internally.
+
+A handle sees its own uncommitted writes (staged segments and staged
+tombstones); a fresh ``open`` sees only the last committed manifest.
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import SearchPlan, plan as make_plan
+from repro.core.engine.executors import SearchResult
+from repro.core.index_build import DistributedIndex, build_index
+from repro.core.search import jit_build_lookup, search_with_lookup
+from repro.core.tree import VocabTree
+from repro.distributed.checkpoint import CheckpointManager
+from repro.distributed.meshutil import data_axis_size, local_mesh
+from repro.index import manifest as manifest_lib
+from repro.index.manifest import Manifest
+from repro.index.segment import Segment, masked_view, next_seq, segment_name
+
+
+# the pre-segment serving.persist format (one monolithic checkpoint);
+# detected only to fail/warn actionably — there is no in-place migration
+LEGACY_CKPT_SUBDIR = "index_ckpt"
+
+
+def has_legacy_index(directory: str) -> bool:
+    return bool(directory) and os.path.isdir(
+        os.path.join(directory, LEGACY_CKPT_SUBDIR)
+    )
+
+
+def has_index(directory: str) -> bool:
+    """True when ``directory`` holds at least one committed manifest."""
+    return bool(directory) and manifest_lib.latest(directory) is not None
+
+
+def _save_tree(directory: str, tree: VocabTree, meta: dict) -> None:
+    mgr = CheckpointManager(
+        os.path.join(directory, manifest_lib.TREE_SUBDIR), keep=1
+    )
+    mgr.save(0, {"tree": tree}, extra=meta)
+
+
+def _load_tree(directory: str, mesh) -> tuple[VocabTree, dict]:
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    mgr = CheckpointManager(
+        os.path.join(directory, manifest_lib.TREE_SUBDIR), keep=1
+    )
+    step = mgr.latest_step()
+    if step is None:
+        raise FileNotFoundError(f"no index tree checkpoint under {directory}")
+    meta = mgr.read_manifest(step)["extra"]
+    rep = NamedSharding(mesh, P())
+    n_levels = int(meta["n_levels"])
+    skeleton = {"tree": VocabTree(levels=tuple(0.0 for _ in range(n_levels)))}
+    shardings = {
+        "tree": VocabTree(levels=tuple(rep for _ in range(n_levels)))
+    }
+    out, _ = mgr.restore(skeleton, step, shardings=shardings)
+    return out["tree"], meta
+
+
+class Index:
+    """Segment-based distributed index with a durable lifecycle."""
+
+    def __init__(
+        self,
+        directory: str | None,
+        tree: VocabTree,
+        mesh=None,
+        *,
+        segments: Sequence[Segment] = (),
+        tombstones: np.ndarray | None = None,
+        version: int = 0,
+        next_id: int = 0,
+        meta: dict | None = None,
+        wire_dtype=jnp.float32,
+    ):
+        self.directory = directory
+        self.tree = tree
+        self._mesh = mesh
+        self.wire_dtype = wire_dtype
+        self._committed: list[Segment] = list(segments)
+        self._staged: list[Segment] = []
+        self._tombstones = (
+            np.sort(np.asarray(tombstones, np.int64))
+            if tombstones is not None and len(tombstones)
+            else np.empty((0,), np.int64)
+        )
+        self._tombstones_dirty = False
+        self._version = version
+        self._next_id = int(next_id)
+        self._user_meta = dict(meta or {})
+        self._meta_dirty = False
+        self._views: tuple[DistributedIndex, ...] | None = None
+        self._mem_seq = 0  # segment naming for ephemeral (dir-less) indexes
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def create(
+        cls,
+        tree: VocabTree,
+        directory: str | None = None,
+        *,
+        mesh=None,
+        wire_dtype=jnp.float32,
+        extra: dict | None = None,
+        overwrite: bool = False,
+    ) -> "Index":
+        """New empty index bound to ``tree``.
+
+        With a ``directory`` the tree checkpoint and an empty manifest are
+        written immediately, so even an index that crashes before its first
+        commit reopens cleanly. ``directory=None`` gives an *ephemeral*
+        index (same API, nothing on disk) — the adapter the legacy
+        in-memory paths wrap themselves in. ``overwrite=True`` clears a
+        previous index's artifacts (manifests, segments, tree, tombstones)
+        but leaves unrelated files — e.g. a ``corpus/`` store — alone.
+        """
+        idx = cls(directory, tree, mesh, wire_dtype=wire_dtype, meta=extra)
+        if directory:
+            if has_index(directory) and not overwrite:
+                raise FileExistsError(
+                    f"{directory} already holds an index; use Index.open "
+                    "or create(..., overwrite=True)"
+                )
+            if overwrite and os.path.isdir(directory):
+                for v in manifest_lib.list_versions(directory):
+                    os.remove(manifest_lib.manifest_path(directory, v))
+                for sub in (
+                    manifest_lib.SEGMENTS_SUBDIR,
+                    manifest_lib.TOMBSTONES_SUBDIR,
+                    manifest_lib.TREE_SUBDIR,
+                ):
+                    shutil.rmtree(os.path.join(directory, sub),
+                                  ignore_errors=True)
+            os.makedirs(directory, exist_ok=True)
+            _save_tree(directory, tree, idx._tree_meta())
+            manifest_lib.write(directory, idx._manifest())
+        return idx
+
+    @classmethod
+    def open(cls, directory: str, mesh=None) -> "Index":
+        """Restore the last *committed* state. Orphan segments from an
+        interrupted append (no manifest references them) are ignored."""
+        m = manifest_lib.latest(directory)
+        if m is None:
+            if has_legacy_index(directory):
+                raise FileNotFoundError(
+                    f"{directory} holds a pre-segment-format index "
+                    f"({LEGACY_CKPT_SUBDIR}/), which this version no longer "
+                    "reads — rebuild it (e.g. serve --rebuild, or "
+                    "Index.create + append + commit)"
+                )
+            raise FileNotFoundError(f"no index manifest under {directory}")
+        mesh = mesh if mesh is not None else local_mesh()
+        tree, tree_meta = _load_tree(directory, mesh)
+        seg_dir = os.path.join(directory, manifest_lib.SEGMENTS_SUBDIR)
+        segments = [Segment.load(seg_dir, name, mesh) for name in m.segments]
+        want = data_axis_size(mesh)
+        for seg in segments:
+            if seg.n_shards != want:
+                raise ValueError(
+                    f"index segment {seg.name} was built for "
+                    f"{seg.n_shards} shards; current mesh has {want} — "
+                    "rebuild the index for this mesh"
+                )
+        wire = jnp.dtype(tree_meta.get("wire_dtype", "float32"))
+        return cls(
+            directory,
+            tree,
+            mesh,
+            segments=segments,
+            tombstones=manifest_lib.read_tombstones(directory, m.tombstones),
+            version=m.version,
+            next_id=m.next_id,
+            meta=m.meta,
+            wire_dtype=wire,
+        )
+
+    @classmethod
+    def from_built(
+        cls,
+        built: DistributedIndex,
+        tree: VocabTree,
+        *,
+        mesh=None,
+        extra: dict | None = None,
+    ) -> "Index":
+        """Ephemeral single-segment wrapper around an already-built
+        ``DistributedIndex`` — the legacy-constructor adapter."""
+        idx = cls.create(tree, None, mesh=mesh, extra=extra)
+        idx.append_built(built)
+        idx.commit()
+        return idx
+
+    # -- basic accessors ----------------------------------------------------
+    @property
+    def mesh(self):
+        if self._mesh is None:
+            self._mesh = local_mesh()
+        return self._mesh
+
+    @property
+    def n_leaves(self) -> int:
+        return self.tree.n_leaves
+
+    @property
+    def dim(self) -> int:
+        return self.tree.dim
+
+    @property
+    def version(self) -> int:
+        return self._version
+
+    @property
+    def next_id(self) -> int:
+        """Next auto-assigned descriptor id (the id-space high-water mark)."""
+        return self._next_id
+
+    @property
+    def segments(self) -> tuple[Segment, ...]:
+        """Committed + staged segments, in append order."""
+        return tuple(self._committed) + tuple(self._staged)
+
+    @property
+    def n_segments(self) -> int:
+        return len(self._committed) + len(self._staged)
+
+    @property
+    def staged_segments(self) -> tuple[str, ...]:
+        return tuple(s.name for s in self._staged)
+
+    @property
+    def tombstones(self) -> np.ndarray:
+        return self._tombstones.copy()
+
+    @property
+    def rows(self) -> int:
+        """Live (searchable) descriptor rows: valid minus tombstoned."""
+        return sum(s.valid_rows for s in self.segments) - len(self._tombstones)
+
+    @property
+    def meta(self) -> dict:
+        """User extra merged with the derived structure/stats keys the old
+        ``persist.load_index`` manifest carried."""
+        out = dict(self._user_meta)
+        out.update(self._tree_meta())
+        out.update(
+            rows=sum(s.rows for s in self.segments),
+            valid_rows=sum(s.valid_rows for s in self.segments),
+            live_rows=self.rows,
+            n_shards=data_axis_size(self.mesh),
+            n_segments=self.n_segments,
+            n_tombstones=int(len(self._tombstones)),
+            next_id=self._next_id,
+            version=self._version,
+        )
+        return out
+
+    def stats(self) -> dict:
+        return dict(
+            self.meta,
+            segments=[s.stats() for s in self.segments],
+            staged=list(self.staged_segments),
+        )
+
+    def _tree_meta(self) -> dict:
+        return {
+            "n_leaves": int(self.tree.n_leaves),
+            "n_levels": len(self.tree.levels),
+            "fanouts": [int(f) for f in self.tree.fanouts],
+            "dim": int(self.tree.dim),
+            "wire_dtype": str(jnp.dtype(self.wire_dtype)),
+        }
+
+    def _manifest(
+        self,
+        tombstones_rel: str | None = None,
+        *,
+        version: int | None = None,
+        segments: Sequence[Segment] | None = None,
+    ) -> Manifest:
+        segs = self._committed if segments is None else segments
+        return Manifest(
+            version=self._version if version is None else version,
+            segments=[s.name for s in segs],
+            tombstones=tombstones_rel,
+            next_id=self._next_id,
+            meta=self._user_meta,
+        )
+
+    # -- write path ---------------------------------------------------------
+    def _segments_dir(self) -> str:
+        return os.path.join(self.directory, manifest_lib.SEGMENTS_SUBDIR)
+
+    def _next_name(self) -> str:
+        if self.directory:
+            return segment_name(next_seq(self._segments_dir()))
+        self._mem_seq += 1
+        return segment_name(self._mem_seq)
+
+    def _existing_ids(self, within: np.ndarray | None = None) -> np.ndarray:
+        """Indexed descriptor ids, pruned to segments whose [min_id,
+        max_id] range can overlap ``within`` — membership probes (delete,
+        collision checks) skip segments that cannot possibly match."""
+        segs = self.segments
+        if within is not None and within.size:
+            segs = [s for s in segs if s.overlaps(within)]
+        parts = [s.host_ids() for s in segs]
+        if not parts:
+            return np.empty((0,), np.int64)
+        ids = np.concatenate(parts)
+        return ids[ids >= 0]
+
+    def append(
+        self,
+        vecs,
+        ids=None,
+        *,
+        wave_rows: int | None = None,
+        capacity_factor: float = 2.0,
+    ) -> str:
+        """Assign + route + cluster-sort ``vecs`` into a new immutable
+        segment (staged; durable after :meth:`commit`).
+
+        Assignment runs in waves through ``build_index_fn`` exactly like a
+        one-shot build, so an index grown by appends is the same index a
+        monolithic job would have produced. ``ids`` default to the next
+        contiguous range of the global id space; explicit ids must be
+        non-negative and fresh.
+        """
+        vecs = np.asarray(vecs, np.float32)
+        if vecs.ndim != 2 or vecs.shape[1] != self.dim:
+            raise ValueError(
+                f"append expects (n, {self.dim}) rows; got {vecs.shape}"
+            )
+        n = vecs.shape[0]
+        if n == 0:
+            raise ValueError("append of zero rows")
+        if ids is None:
+            ids = np.arange(self._next_id, self._next_id + n, dtype=np.int64)
+        else:
+            ids = np.asarray(ids, np.int64)
+            if ids.shape != (n,):
+                raise ValueError(f"ids shape {ids.shape} != ({n},)")
+            if ids.size and ids.min() < 0:
+                raise ValueError("descriptor ids must be non-negative")
+            if len(np.unique(ids)) != n:
+                raise ValueError("duplicate ids within the appended batch")
+            if ids.min() < self._next_id and np.isin(
+                ids, self._existing_ids(within=ids)
+            ).any():
+                raise ValueError("appended ids collide with indexed ids")
+        if int(ids.max()) > np.iinfo(np.int32).max:
+            # the engine carries ids as int32; a wrapped id would silently
+            # become padding (-1 family) and the row would vanish
+            raise ValueError(
+                f"descriptor id {int(ids.max())} exceeds int32 — the id "
+                "space is full; compact() after deletes or re-id the corpus"
+            )
+        built = build_index(
+            jnp.asarray(vecs),
+            self.tree,
+            self.mesh,
+            ids=jnp.asarray(ids.astype(np.int32)),
+            wave_rows=wave_rows,
+            capacity_factor=capacity_factor,
+            wire_dtype=self.wire_dtype,
+        )
+        jax.block_until_ready(built.vecs)
+        name = self.append_built(built)
+        return name
+
+    def append_built(self, built: DistributedIndex, *, name=None) -> str:
+        """Adopt an already-built ``DistributedIndex`` as a staged segment
+        (the ``save_index`` shim and the legacy session path use this)."""
+        if int(built.n_leaves) != self.n_leaves:
+            raise ValueError(
+                f"built index has {built.n_leaves} leaves; tree has "
+                f"{self.n_leaves}"
+            )
+        if self.segments and built.offsets.shape[0] != self.segments[0].n_shards:
+            raise ValueError(
+                f"built index has {built.offsets.shape[0]} shards; index "
+                f"segments have {self.segments[0].n_shards}"
+            )
+        seg = Segment.from_built(name or self._next_name(), built)
+        if self.directory:
+            seg.save(self._segments_dir())  # durable *before* it is staged
+        self._staged.append(seg)
+        self._next_id = max(self._next_id, seg.max_id + 1)
+        self._views = None
+        return seg.name
+
+    def update_meta(self, **kw) -> None:
+        """Stage user-metadata updates (e.g. an ingest cursor); durable at
+        the next :meth:`commit` alongside whatever else is staged."""
+        self._user_meta.update(kw)
+        self._meta_dirty = True
+
+    def delete(self, ids) -> int:
+        """Tombstone descriptor ids (staged; durable after :meth:`commit`).
+
+        Only ids actually present in the index (and not already deleted)
+        are recorded; returns how many were newly tombstoned. Tombstoned
+        rows stop matching immediately for this handle and are physically
+        dropped at the next :meth:`compact`.
+        """
+        ids = np.unique(np.asarray(ids, np.int64))
+        ids = ids[~np.isin(ids, self._tombstones)]
+        if ids.size:
+            ids = ids[np.isin(ids, self._existing_ids(within=ids))]
+        if ids.size == 0:
+            return 0
+        self._tombstones = np.sort(np.concatenate([self._tombstones, ids]))
+        self._tombstones_dirty = True
+        self._views = None
+        return int(ids.size)
+
+    def commit(self) -> int:
+        """Publish staged segments + tombstones: one atomic manifest bump.
+
+        Idempotent — committing with nothing staged returns the current
+        version without writing. A crash *before* the manifest rename
+        leaves the previous committed state fully intact (staged segment
+        checkpoints become ignorable orphans); a crash *after* it leaves
+        the new state fully committed. There is no in-between.
+        """
+        if not (self._staged or self._tombstones_dirty or self._meta_dirty):
+            return self._version
+        # durable writes FIRST, memory state only after they succeed — a
+        # failed write leaves the handle still-staged, so a retried
+        # commit() re-attempts the publication instead of no-opping
+        version = self._version + 1
+        segments = self._committed + self._staged
+        if self.directory:
+            rel = None
+            if len(self._tombstones):
+                rel = manifest_lib.write_tombstones(
+                    self.directory, version, self._tombstones
+                )
+            manifest_lib.write(
+                self.directory,
+                self._manifest(rel, version=version, segments=segments),
+            )
+        self._version = version
+        self._committed = segments
+        self._staged = []
+        self._tombstones_dirty = False
+        self._meta_dirty = False
+        return version
+
+    def compact(self) -> str | None:
+        """Merge every segment into one, dropping tombstoned rows.
+
+        Surviving rows are re-sorted by descriptor id before the rebuild,
+        so the compacted segment is the index a from-scratch
+        ``build_index`` over the remaining corpus (in original append
+        order) would produce — arrays and all. Commits atomically; old
+        segment checkpoints are garbage-collected only after the manifest
+        bump. Returns the new segment's name (``None`` for an index with
+        no live rows)."""
+        old = self.segments
+        keep_v, keep_i = [], []
+        for seg in old:
+            ids = np.asarray(seg.index.ids).astype(np.int64)
+            live = ids >= 0
+            if self._tombstones.size:
+                live &= ~np.isin(ids, self._tombstones)
+            keep_v.append(np.asarray(seg.index.vecs)[live])
+            keep_i.append(ids[live])
+        all_v = np.concatenate(keep_v) if keep_v else np.empty((0, self.dim))
+        all_i = (
+            np.concatenate(keep_i) if keep_i else np.empty((0,), np.int64)
+        )
+        order = np.argsort(all_i, kind="stable")
+        # build + durably publish first; the handle's state is only
+        # replaced once the new manifest exists, so a failed rebuild
+        # leaves segments AND tombstones exactly as they were
+        if all_i.size == 0:
+            new_committed = []
+        else:
+            built = build_index(
+                jnp.asarray(all_v[order], jnp.float32),
+                self.tree,
+                self.mesh,
+                ids=jnp.asarray(all_i[order].astype(np.int32)),
+                wire_dtype=self.wire_dtype,
+            )
+            jax.block_until_ready(built.vecs)
+            seg = Segment.from_built(self._next_name(), built)
+            if self.directory:
+                seg.save(self._segments_dir())
+            new_committed = [seg]
+        version = self._version + 1
+        if self.directory:
+            manifest_lib.write(
+                self.directory,
+                self._manifest(None, version=version,
+                               segments=new_committed),
+            )
+        self._committed = new_committed
+        self._staged = []
+        self._tombstones = np.empty((0,), np.int64)
+        self._tombstones_dirty = False
+        self._meta_dirty = False
+        self._version = version
+        self._views = None
+        if self.directory:
+            self._gc_segments(old)
+        return new_committed[0].name if new_committed else None
+
+    def _gc_segments(self, old: Sequence[Segment]) -> None:
+        for seg in old:
+            shutil.rmtree(
+                os.path.join(self._segments_dir(), seg.name),
+                ignore_errors=True,
+            )
+
+    # -- read path ----------------------------------------------------------
+    def read_rows(self, ids) -> np.ndarray:
+        """Host gather of stored descriptor vectors by id — the corpus
+        rows live inside the segments, so anything that consumes a
+        ``read_rows``/``dim`` block store (e.g. the serving trace
+        generator) can read straight from the index; a grown ``--index-
+        dir`` needs no separate ``corpus/`` store. Probes each
+        range-overlapping segment through its cached id index — no
+        resident concatenated corpus copy is built.
+
+        Tombstoned ids read as missing *immediately* (not only after the
+        compaction that physically drops them), so the result never
+        depends on compaction timing."""
+        ids = np.atleast_1d(np.asarray(ids, np.int64))
+        if ids.size and ids.min() < 0:
+            # never let a requested -1 match a padding row's -1 id
+            raise IndexError(f"descriptor ids must be >= 0; got {ids.min()}")
+        out = np.empty((ids.size, self.dim), np.float32)
+        found = np.zeros(ids.size, bool)
+        dead = (
+            np.isin(ids, self._tombstones) if self._tombstones.size
+            else np.zeros(ids.size, bool)
+        )
+        if ids.size:
+            for seg in self.segments:
+                if found.all() or not seg.overlaps(ids):
+                    continue
+                sorted_ids, order = seg.id_index()
+                pos = np.searchsorted(sorted_ids, ids)
+                hit = (
+                    ~found
+                    & (pos < sorted_ids.size)
+                    & (sorted_ids[np.minimum(pos, sorted_ids.size - 1)]
+                       == ids)
+                )
+                if hit.any():
+                    out[hit] = seg.host_vecs()[order[pos[hit]]]
+                    found |= hit
+        found &= ~dead
+        if not found.all():
+            missing = ids[~found]
+            raise IndexError(
+                f"descriptor ids not in the index (absent or deleted): "
+                f"{missing[:8].tolist()}"
+                + ("..." if missing.size > 8 else "")
+            )
+        return out
+
+    def segment_views(self) -> tuple[DistributedIndex, ...]:
+        """Per-segment indexes with tombstones masked (cached until the
+        next append/delete/compact)."""
+        if self._views is None:
+            self._views = tuple(
+                masked_view(s, self._tombstones) for s in self.segments
+            )
+        return self._views
+
+    def search(
+        self,
+        queries,
+        k: int = 10,
+        *,
+        plan: SearchPlan | None = None,
+        layout: str = "auto",
+        probes: int = 1,
+        impl: str = "xla",
+        block_rows: int | None = None,
+        q_cap: int | None = None,
+        q_tile: int | None = None,
+        p_cap: int | None = None,
+        use_observations: bool = False,
+    ) -> SearchResult:
+        """k-NN over every live row: one shared lookup build, one executor
+        run per segment, one ascending-distance merge across segments.
+
+        ``plan`` may carry a :class:`SearchPlan` template whose fields
+        (layout, k, probes, impl, budgets) override the keyword arguments;
+        budgets are still re-resolved per segment, since tile sizes must
+        divide each segment's shard rows.
+        """
+        if plan is not None:
+            layout, k, probes, impl = plan.layout, plan.k, plan.probes, plan.impl
+            block_rows = plan.block_rows if block_rows is None else block_rows
+            q_cap = plan.q_cap if q_cap is None else q_cap
+            q_tile = plan.q_tile if q_tile is None else q_tile
+            p_cap = plan.p_cap if p_cap is None else p_cap
+        queries = jnp.asarray(queries, jnp.float32)
+        q = queries.shape[0]
+        views = self.segment_views()
+        if not views:
+            return SearchResult(
+                ids=jnp.full((q, k), -1, jnp.int32),
+                dists=jnp.full((q, k), jnp.inf, jnp.float32),
+                pairs=jnp.zeros((), jnp.float32),
+                q_cap_overflow=jnp.zeros((), jnp.int32),
+            )
+        n_shards = data_axis_size(self.mesh)
+        lookup = jit_build_lookup(self.tree, queries, probes=probes)
+        per = []
+        for view in views:
+            p = make_plan(
+                rows=view.rows,
+                n_leaves=self.n_leaves,
+                n_queries=q,
+                n_shards=n_shards,
+                k=k,
+                probes=probes,
+                layout=layout,
+                impl=impl,
+                block_rows=block_rows,
+                q_cap=q_cap,
+                q_tile=q_tile,
+                p_cap=p_cap,
+                use_observations=use_observations,
+            )
+            per.append(
+                search_with_lookup(view, lookup, p, self.mesh, n_queries=q)
+            )
+        if len(per) == 1:
+            return per[0]
+        return _merge_results(per, k)
+
+
+def _merge_results(per: Sequence[SearchResult], k: int) -> SearchResult:
+    """Fold per-segment k-NN tables into one — the same ascending-distance
+    merge the executors apply across shards (stable on ties, so
+    segment-major order mirrors the one-shot table's candidate order)."""
+    all_i = np.concatenate([np.asarray(r.ids) for r in per], axis=1)
+    all_d = np.concatenate([np.asarray(r.dists) for r in per], axis=1)
+    sel = np.argsort(all_d, axis=1, kind="stable")[:, :k]
+    return SearchResult(
+        ids=jnp.asarray(np.take_along_axis(all_i, sel, axis=1)),
+        dists=jnp.asarray(np.take_along_axis(all_d, sel, axis=1)),
+        pairs=sum(r.pairs for r in per),
+        q_cap_overflow=sum(r.q_cap_overflow for r in per),
+    )

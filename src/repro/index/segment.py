@@ -1,0 +1,220 @@
+"""Immutable index segments.
+
+A segment is one cluster-sorted :class:`~repro.core.index_build.
+DistributedIndex` — the output of one ``append`` wave batch (or of a
+compaction) — persisted as a single CheckpointManager checkpoint
+(mesh-free on disk, crc-checked, atomic). Segments are written once and
+never mutated; deletions are expressed as tombstones in the manifest and
+applied as an id mask at search time (a masked row behaves exactly like the
+pipeline's own padding rows: routed, scanned, never matched).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import re
+
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.index_build import DistributedIndex
+from repro.distributed.checkpoint import CheckpointManager
+from repro.distributed.meshutil import batch_axes
+
+_SEGMENT_RE = re.compile(r"^seg_(\d{6})$")
+
+
+def segment_name(seq: int) -> str:
+    return f"seg_{seq:06d}"
+
+
+def next_seq(segments_dir: str) -> int:
+    """1 + the highest segment sequence number present on disk — committed
+    or orphaned. Orphans (crash between append and commit) keep their name
+    reserved so a retried append never collides with them."""
+    if not os.path.isdir(segments_dir):
+        return 1
+    seqs = [
+        int(m.group(1))
+        for name in os.listdir(segments_dir)
+        if (m := _SEGMENT_RE.match(name))
+    ]
+    return max(seqs, default=0) + 1
+
+
+def _index_shardings(mesh: Mesh):
+    ax = batch_axes(mesh)
+    rows = NamedSharding(mesh, P(ax, None))
+    flat = NamedSharding(mesh, P(ax))
+    rep = NamedSharding(mesh, P())
+    return {
+        "index": DistributedIndex(
+            vecs=rows, ids=flat, leaves=flat, offsets=rows, n_valid=flat,
+            overflow=rep,
+        )
+    }
+
+
+@dataclasses.dataclass
+class Segment:
+    """One immutable segment plus its static stats."""
+
+    name: str
+    index: DistributedIndex
+    rows: int  # padded row count (index.rows)
+    valid_rows: int  # rows with a real descriptor id
+    min_id: int  # -1 when empty
+    max_id: int  # -1 when empty
+    _ids_np: object = dataclasses.field(default=None, repr=False,
+                                        compare=False)
+    _id_index: object = dataclasses.field(default=None, repr=False,
+                                          compare=False)
+    _vecs_np: object = dataclasses.field(default=None, repr=False,
+                                         compare=False)
+
+    def host_ids(self) -> np.ndarray:
+        """Host copy of the segment's id column (cached — segments are
+        immutable). ``-1`` padding rows included, callers filter."""
+        if self._ids_np is None:
+            self._ids_np = np.asarray(self.index.ids).astype(np.int64)
+        return self._ids_np
+
+    def id_index(self) -> tuple[np.ndarray, np.ndarray]:
+        """Cached ``(sorted_ids, row_order)`` for id->row probes. Padding
+        ``-1`` ids sort first and never match a probed (non-negative) id."""
+        if self._id_index is None:
+            ids = self.host_ids()
+            order = np.argsort(ids, kind="stable")
+            self._id_index = (ids[order], order)
+        return self._id_index
+
+    def host_vecs(self) -> np.ndarray:
+        """Host copy of the stored vectors (cached — on an accelerator
+        backend the device-to-host transfer must not repeat per read)."""
+        if self._vecs_np is None:
+            self._vecs_np = np.asarray(self.index.vecs, np.float32)
+        return self._vecs_np
+
+    def overlaps(self, ids: np.ndarray) -> bool:
+        """Can any of ``ids`` (non-empty) live in this segment?"""
+        return (
+            self.valid_rows > 0
+            and int(ids.min()) <= self.max_id
+            and int(ids.max()) >= self.min_id
+        )
+
+    @classmethod
+    def from_built(cls, name: str, index: DistributedIndex) -> "Segment":
+        ids = np.asarray(index.ids)
+        real = ids[ids >= 0]
+        return cls(
+            name=name,
+            index=index,
+            rows=int(index.rows),
+            valid_rows=int(real.size),
+            min_id=int(real.min()) if real.size else -1,
+            max_id=int(real.max()) if real.size else -1,
+        )
+
+    @property
+    def n_shards(self) -> int:
+        return int(self.index.offsets.shape[0])
+
+    def stats(self) -> dict:
+        return {
+            "name": self.name,
+            "rows": self.rows,
+            "valid_rows": self.valid_rows,
+            "min_id": self.min_id,
+            "max_id": self.max_id,
+            "n_shards": self.n_shards,
+        }
+
+    # -- persistence --------------------------------------------------------
+    def save(self, segments_dir: str) -> str:
+        mgr = CheckpointManager(os.path.join(segments_dir, self.name), keep=1)
+        return mgr.save(
+            0,
+            {"index": self.index},
+            extra=dict(
+                self.stats(),
+                n_leaves=int(self.index.n_leaves),
+                dim=int(self.index.vecs.shape[-1]),
+            ),
+        )
+
+    @classmethod
+    def load(cls, segments_dir: str, name: str, mesh: Mesh) -> "Segment":
+        mgr = CheckpointManager(os.path.join(segments_dir, name), keep=1)
+        step = mgr.latest_step()
+        if step is None:
+            raise FileNotFoundError(
+                f"segment {name} has no complete checkpoint under "
+                f"{segments_dir}"
+            )
+        meta = mgr.read_manifest(step)["extra"]
+        skeleton = {
+            "index": DistributedIndex(
+                vecs=0.0, ids=0, leaves=0, offsets=0, n_valid=0, overflow=0,
+                n_leaves=int(meta["n_leaves"]),
+            )
+        }
+        tree_out, _ = mgr.restore(skeleton, step,
+                                  shardings=_index_shardings(mesh))
+        index = tree_out["index"]
+        index = DistributedIndex(
+            vecs=index.vecs,
+            ids=jnp.asarray(index.ids, jnp.int32),
+            leaves=jnp.asarray(index.leaves, jnp.int32),
+            offsets=jnp.asarray(index.offsets, jnp.int32),
+            n_valid=jnp.asarray(index.n_valid, jnp.int32),
+            overflow=jnp.asarray(index.overflow, jnp.int32),
+            n_leaves=int(meta["n_leaves"]),
+        )
+        return cls(
+            name=name,
+            index=index,
+            rows=int(meta["rows"]),
+            valid_rows=int(meta["valid_rows"]),
+            min_id=int(meta.get("min_id", -1)),
+            max_id=int(meta.get("max_id", -1)),
+        )
+
+
+# Tombstoned rows keep their leaf (CSR offsets stay valid) but get this
+# magnitude written into every vector lane: the partial distance
+# ||p||^2 - 2 p.q becomes ~1e30f — finite (no inf/nan propagation into the
+# fused scan) yet astronomically above any real candidate, so a dead row
+# can never displace a live neighbour from a tile's top-k. Its id is -1, so
+# even when it *is* selected (a leaf with fewer than k live rows) scan_tile
+# masks it to INVALID_ID/inf — exactly a padding row's fate.
+TOMBSTONE_VEC = 1e15
+
+
+def masked_view(segment: Segment, tombstones: np.ndarray) -> DistributedIndex:
+    """The segment's index with tombstoned rows masked out of every scan.
+
+    Bit-identical to rebuilding without the dead rows: live rows'
+    distances are untouched, dead rows sort behind every live candidate,
+    and a selected dead row degenerates to the ``-1``/``inf`` slot an
+    absent row would have produced.
+    """
+    if tombstones.size == 0 or segment.valid_rows == 0:
+        return segment.index
+    lo = np.searchsorted(tombstones, segment.min_id)
+    hi = np.searchsorted(tombstones, segment.max_id, side="right")
+    if lo == hi:
+        return segment.index  # no tombstone inside this segment's id range
+    ids = segment.index.ids
+    vecs = segment.index.vecs
+    ts = jnp.asarray(tombstones, jnp.int32)
+    pos = jnp.searchsorted(ts, ids)
+    hit = (pos < ts.shape[0]) & (ts[jnp.clip(pos, 0, ts.shape[0] - 1)] == ids)
+    return dataclasses.replace(
+        segment.index,
+        ids=jnp.where(hit, jnp.int32(-1), ids),
+        vecs=jnp.where(hit[:, None], jnp.asarray(TOMBSTONE_VEC, vecs.dtype),
+                       vecs),
+    )

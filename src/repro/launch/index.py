@@ -1,14 +1,21 @@
-"""Streaming index-creation job: the paper's Table 2 workflow end-to-end.
+"""Streaming index-creation CLI — a thin shell over ``repro.index.Index``.
 
-Drives the store's blocks through the index pipeline wave-by-wave under the
-WaveScheduler (retry + checkpoint/restart + wave statistics), exactly the
-shape of the paper's 8h27m 100-nodes x 30B-descriptor job — scaled to the
-container. Each wave is one jitted assign+route+sort step; the folded state
-is the accumulated cluster-sorted index.
+The paper's Table 2 workflow: descriptor blocks stream through wave-based
+assignment into index files, and the searchable collection keeps growing
+between runs. Each store block becomes one ``Index.append`` wave under the
+WaveScheduler (retry + wave statistics, the jobtracker analog); ``commit``
+publishes the appended segments atomically (``--commit-every`` controls
+durability granularity); ``--index-dir`` makes the grown index reopenable
+by later index/serve runs — the paper's "index once, search many, keep
+growing" loop. ``--compact`` folds all segments into one at the end.
+
+The historical flags (``--rows``/``--block-rows``/``--inject-failures``/
+``--verify-queries``/``--layout``/``--probes``) keep their meaning.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.index --rows 300000 --block-rows 50000 \
-      [--inject-failures] [--ckpt-dir /tmp/repro_index]
+      [--index-dir /tmp/idx] [--commit-every 2] [--compact] \
+      [--inject-failures] [--verify-queries 64]
 """
 
 from __future__ import annotations
@@ -22,13 +29,35 @@ import numpy as np
 
 
 def main(argv=None) -> int:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        description="streaming index creation over the segment lifecycle API"
+    )
     ap.add_argument("--rows", type=int, default=300_000)
     ap.add_argument("--dim", type=int, default=64)
     ap.add_argument("--block-rows", type=int, default=50_000)
     ap.add_argument("--fanout", type=int, nargs=2, default=(32, 32))
     ap.add_argument("--tree-sample", type=int, default=65_536)
     ap.add_argument("--inject-failures", action="store_true")
+    ap.add_argument(
+        "--index-dir", default=None,
+        help="durable index directory (create or grow); default: ephemeral",
+    )
+    ap.add_argument(
+        "--commit-every", type=int, default=0,
+        help="commit after every N appended blocks (0 = one commit at the "
+        "end)",
+    )
+    ap.add_argument(
+        "--compact", action="store_true",
+        help="merge all segments into one after the appends",
+    )
+    ap.add_argument(
+        "--wire-dtype", choices=("float32", "bfloat16"), default="float32",
+        help="routed-shuffle payload dtype for appends. NOTE: the old CLI "
+        "always used bfloat16 (build_index's default); the lifecycle "
+        "facade defaults to float32 so grown indexes stay bit-identical "
+        "to one-shot rebuilds",
+    )
     ap.add_argument(
         "--verify-queries", type=int, default=0,
         help="after indexing, search N perturbed corpus rows and report "
@@ -45,12 +74,12 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    from repro.core.index_build import build_index
-    from repro.core.tree import build_tree, tree_assign
+    from repro.core.tree import build_tree
     from repro.data.store import VirtualStore
     from repro.distributed.failure import FailureInjector
     from repro.distributed.meshutil import local_mesh
     from repro.distributed.wavescheduler import WaveScheduler
+    from repro.index import Index, has_index
 
     mesh = local_mesh()
     store = VirtualStore(
@@ -58,35 +87,72 @@ def main(argv=None) -> int:
     )
     print(f"store: {store.n_rows} rows in {store.n_blocks} blocks")
 
-    t0 = time.perf_counter()
-    tree = build_tree(
-        jnp.asarray(store.sample_for_tree(args.tree_sample)),
-        tuple(args.fanout),
-        key=jax.random.PRNGKey(args.seed),
-    )
-    jax.block_until_ready(tree.levels[-1])
-    print(f"tree: {tree.n_leaves} leaves ({time.perf_counter() - t0:.2f}s)")
+    if args.index_dir and has_index(args.index_dir):
+        t0 = time.perf_counter()
+        idx = Index.open(args.index_dir, mesh=mesh)
+        print(
+            f"index: opened {args.index_dir} v{idx.version} "
+            f"({idx.n_segments} segments, {idx.rows} rows) in "
+            f"{time.perf_counter() - t0:.2f}s — appending"
+        )
+        if jnp.dtype(args.wire_dtype) != jnp.dtype(idx.wire_dtype):
+            print(
+                f"warning: --wire-dtype {args.wire_dtype} ignored — the "
+                f"index was created with {jnp.dtype(idx.wire_dtype)} and "
+                "appends keep the creation-time dtype"
+            )
+        tree = idx.tree
+    else:
+        t0 = time.perf_counter()
+        tree = build_tree(
+            jnp.asarray(store.sample_for_tree(args.tree_sample)),
+            tuple(args.fanout),
+            key=jax.random.PRNGKey(args.seed),
+        )
+        jax.block_until_ready(tree.levels[-1])
+        print(f"tree: {tree.n_leaves} leaves "
+              f"({time.perf_counter() - t0:.2f}s)")
+        idx = Index.create(tree, args.index_dir, mesh=mesh,
+                           wire_dtype=jnp.dtype(args.wire_dtype),
+                           extra={"corpus_seed": args.seed})
+
+    # --- resumable ingest: a crashed --commit-every run must not re-append
+    # its already-committed blocks on rerun. The cursor (store signature +
+    # next block + base id) rides in the index meta and is bumped in the
+    # same manifest as each commit, so it can never disagree with the data.
+    sig = {"seed": args.seed, "rows": args.rows, "dim": args.dim,
+           "block_rows": args.block_rows}
+    cursor = idx.meta.get("ingest") or {}
+    if cursor.get("sig") == sig and cursor.get("next_block", 0) > 0:
+        start_block = int(cursor["next_block"])
+        base_id = int(cursor["base_id"])
+        print(f"ingest: resuming this store at block {start_block}/"
+              f"{store.n_blocks} (base id {base_id})")
+    else:
+        start_block = 0
+        base_id = idx.next_id  # appended block ids stay globally unique
+    appended: dict[int, dict] = {}
 
     def wave_fn(block_id: int):
-        block = store.read_block(block_id)
-        idx = build_index(
-            jnp.asarray(block.vecs),
-            tree,
-            mesh,
-            ids=jnp.asarray(block.ids.astype(np.int32)),
-        )
-        # pull the per-wave partial index to host (the paper's reducers
-        # write index files to HDFS; ours append to the host-side store)
-        return {
-            "vecs": np.asarray(idx.vecs),
-            "ids": np.asarray(idx.ids),
-            "leaves": np.asarray(idx.leaves),
-            "overflow": int(idx.overflow),
-        }
+        # idempotent under WaveScheduler retries: a wave that failed
+        # *after* its append staged durably (e.g. mid-commit IO error)
+        # must not re-append the same ids on the retry
+        if block_id not in appended:
+            block = store.read_block(block_id)
+            name = idx.append(block.vecs, ids=base_id + block.ids)
+            seg = idx.segments[-1]
+            appended[block_id] = {"name": name, "rows": seg.valid_rows,
+                                  "overflow": int(seg.index.overflow)}
+        if args.commit_every and (block_id + 1) % args.commit_every == 0:
+            idx.update_meta(ingest={"sig": sig, "next_block": block_id + 1,
+                                    "base_id": base_id})
+            idx.commit()
+        return appended[block_id]
 
     def fold(state, wave_out):
-        state = state or {"parts": [], "overflow": 0}
-        state["parts"].append(wave_out)
+        state = state or {"segments": [], "rows": 0, "overflow": 0}
+        state["segments"].append(wave_out["name"])
+        state["rows"] += wave_out["rows"]
         state["overflow"] += wave_out["overflow"]
         return state
 
@@ -95,16 +161,23 @@ def main(argv=None) -> int:
     )
     sched = WaveScheduler(wave_fn, fold, failure_injector=injector, max_retries=2)
     t0 = time.perf_counter()
-    result = sched.run(range(store.n_blocks))
+    result = sched.run(range(store.n_blocks), start_at=start_block)
+    done = {"sig": sig, "next_block": result.completed, "base_id": base_id}
+    if idx.meta.get("ingest") != done:
+        idx.update_meta(ingest=done)
+    version = idx.commit()
     dt = time.perf_counter() - t0
 
+    waves_run = store.n_blocks - start_block
     ok = [r for r in result.records if r.ok]
     failed = [r for r in result.records if not r.ok]
-    durations = sorted(r.duration_s for r in ok)
+    durations = sorted(r.duration_s for r in ok) or [0.0]
     print(
-        f"index job: {result.completed}/{store.n_blocks} waves in {dt:.2f}s; "
-        f"{len(failed)} failed attempts (retried), "
-        f"route overflow {result.state['overflow']}"
+        f"index job: {result.completed - start_block}/{waves_run} append "
+        f"waves in {dt:.2f}s; {len(failed)} failed attempts (retried), "
+        f"route overflow {result.state['overflow'] if result.state else 0}; "
+        f"committed v{version} ({idx.n_segments} segments, {idx.rows} live "
+        "rows)"
     )
     print(
         "wave stats: avg {:.2f}s min {:.2f}s max {:.2f}s median {:.2f}s "
@@ -115,31 +188,38 @@ def main(argv=None) -> int:
             durations[len(durations) // 2],
         )
     )
-    n_indexed = sum((p["ids"] >= 0).sum() for p in result.state["parts"])
-    assert n_indexed == store.n_rows, (n_indexed, store.n_rows)
-    print(f"indexed {n_indexed} descriptors == corpus size OK")
+    n_indexed = result.state["rows"] if result.state else 0
+    expected = store.n_rows - min(start_block * args.block_rows, store.n_rows)
+    assert n_indexed == expected, (n_indexed, expected)
+    print(f"indexed {n_indexed} descriptors == remaining corpus size OK")
+
+    if args.compact:
+        t0 = time.perf_counter()
+        name = idx.compact()
+        print(f"compacted -> {name} (v{idx.version}, {idx.rows} rows) in "
+              f"{time.perf_counter() - t0:.2f}s")
 
     if args.verify_queries:
-        # verification search: rebuild one jittable index over the corpus
-        # and check perturbed corpus rows find themselves under the
-        # requested execution plan (layout/probes knobs)
-        from repro.core.search import batch_search
-
+        # verification search straight off the lifecycle facade: perturbed
+        # corpus rows must find themselves under the requested plan
         rng = np.random.default_rng(args.seed + 7)
-        all_vecs = np.concatenate(
-            [store.read_block(b).vecs for b in range(store.n_blocks)]
-        )
-        index = build_index(jnp.asarray(all_vecs), tree, mesh)
-        rows = rng.choice(store.n_rows, args.verify_queries, replace=False)
-        queries = jnp.asarray(
-            all_vecs[rows]
+        rows = np.sort(rng.choice(store.n_rows, args.verify_queries,
+                                  replace=False))
+        queries = (
+            store.read_rows(rows)
             + rng.standard_normal((len(rows), args.dim)).astype(np.float32)
         )
-        res = batch_search(
-            index, tree, queries, k=1, mesh=mesh, layout=args.layout,
-            probes=args.probes,
-        )
-        recall = float((np.array(res.ids[:, 0]) == rows).mean())
+        res = idx.search(queries, k=1, layout=args.layout, probes=args.probes)
+        got = np.array(res.ids[:, 0])
+        hit = got == base_id + rows
+        # a grown index may hold exact copies of the planted row (e.g. the
+        # same seeded store appended twice): a returned neighbour at least
+        # as close as the planted row is a find, not a miss (2.0 absolute
+        # slack: fp32 ||p||^2-2pq+||q||^2 vs the (p-q)^2 oracle, as in
+        # tests/test_index_search.py)
+        planted_d = ((store.read_rows(rows) - queries) ** 2).sum(1)
+        hit |= np.array(res.dists[:, 0]) <= planted_d + 2.0
+        recall = float(hit.mean())
         print(
             f"verify: layout={args.layout} probes={args.probes} "
             f"recall@1 {recall:.3f} pairs {float(res.pairs):.3g} "

@@ -2,10 +2,12 @@
 
 The paper's Exp #5 measures batch-search throughput (~210 ms/image at 12k-
 image batches); this launcher runs the same engine as a *service*: the
-index is loaded-or-built once (``--index-dir`` persists it, so
-index-once/serve-many works across invocations), a ladder of batch-size
-buckets is compiled at warmup, and a trace-driven request stream is played
-through the dynamic micro-batcher — reporting the latency distribution
+index is loaded-or-built once through the segment lifecycle facade
+(``--index-dir`` holds a committed ``repro.index.Index``, so
+index-once/serve-many works across invocations — including indexes grown
+by ``repro.launch.index`` appends), a ladder of batch-size buckets is
+compiled at warmup, and a trace-driven request stream is played through
+the dynamic micro-batcher — reporting the latency distribution
 (p50/p95/p99), engine ms/image, cache hit rate, and the steady-state
 recompile count (the serving invariant: 0 after warmup).
 
@@ -116,7 +118,10 @@ def main(argv=None) -> int:
         t0 = time.perf_counter()
         vecs = jnp.asarray(vecs_np)
         tree = build_tree(vecs, tuple(args.fanout), key=jax.random.PRNGKey(1))
-        index = build_index(vecs, tree, mesh)
+        # float32 wire, matching the lifecycle facade's recorded default —
+        # a later `launch.index --index-dir` append then grows this index
+        # with the same dtype instead of silently mixing bf16/f32 segments
+        index = build_index(vecs, tree, mesh, wire_dtype=jnp.float32)
         jax.block_until_ready(index.vecs)
         print(f"index: built {int(index.n_valid.sum())} rows "
               f"({tree.n_leaves} leaves) in {time.perf_counter() - t0:.2f}s "
@@ -142,12 +147,17 @@ def main(argv=None) -> int:
         **session_kw,
     )
     if meta.get("restored"):
+        live = int(meta.get("live_rows", meta.get("valid_rows",
+                                                  meta["rows"])))
         print(f"index: restored from {args.index_dir} in "
               f"{time.perf_counter() - t0:.2f}s "
-              f"({meta.get('valid_rows', meta['rows'])} rows, "
-              f"{meta['n_leaves']} leaves)")
+              f"(v{meta.get('version', '?')}, "
+              f"{meta.get('n_segments', 1)} segments, "
+              f"{live} rows, {meta['n_leaves']} leaves)")
         dpi = int(meta.get("desc_per_image", dpi))
-        n_images = int(meta.get("images", args.images))
+        # an index grown by repro.launch.index carries no image geometry;
+        # treat its contiguous id space as images of dpi rows each
+        n_images = int(meta.get("images", 0)) or max(1, live // dpi)
     else:
         n_images = args.images
     dim = int(meta.get("dim", args.dim))
@@ -165,7 +175,21 @@ def main(argv=None) -> int:
     # ---- workload ---------------------------------------------------------
     corpus = corpus_vecs
     if corpus is None and args.index_dir:
-        corpus = persist.load_corpus(args.index_dir)
+        import os
+
+        if os.path.isdir(persist.corpus_dir(args.index_dir)):
+            corpus = persist.load_corpus(args.index_dir)
+        else:
+            # no corpus/ store (index grown by repro.launch.index): the
+            # descriptor rows live in the segments — read them by id
+            corpus = session.index
+            live = int(meta.get("live_rows", 0))
+            if live and live != int(meta.get("next_id", live)):
+                print(
+                    "warning: the id space has gaps (deletes); trace "
+                    "requests that touch a missing descriptor id will "
+                    "fail — restrict with --images/--desc-per-image"
+                )
     gen = TraceLoadGenerator(corpus, dpi, noise=args.noise,
                              seed=args.trace_seed)
     mode = args.trace or "fixed"

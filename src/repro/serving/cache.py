@@ -54,7 +54,15 @@ class HotLeafCache:
                      leaves: np.ndarray, n_leaves: int) -> None:
         """Host copies of the index rows + a leaf -> rows map (one global
         sort; padding rows carry out-of-range leaves and fall off the
-        end)."""
+        end).
+
+        Re-attaching (a serving session refresh after the index grew or
+        rows were deleted) drops every admitted slab and memo: a stale
+        slab would keep serving pre-delete rows the engine now masks.
+        """
+        self._slabs.clear()
+        self._freq.clear()
+        self._memo.clear()
         self._vecs = np.asarray(vecs, np.float32)
         self._ids = np.asarray(ids)
         lv = np.asarray(leaves).astype(np.int64)

@@ -1,60 +1,41 @@
-"""Index persistence: index-once / serve-many.
+"""Index persistence — deprecation shims over :mod:`repro.index`.
 
-The paper builds its index in one Hadoop job and then runs *many* search
-jobs against the stored index files; our CLI used to rebuild the index on
-every invocation. This module round-trips the built artifacts through
-:class:`~repro.distributed.checkpoint.CheckpointManager` (mesh-free on
-disk, crc-checked, atomic) so a serving process loads in seconds:
+The historical index-once/serve-many pair (``save_index``/``load_index``)
+predates the segment-based lifecycle: it persisted exactly one monolithic
+``DistributedIndex``. The canonical API is now :class:`repro.index.Index`
+(``create``/``open``/``append``/``commit``/``compact``), whose on-disk
+format — versioned manifests over immutable segment checkpoints — is what
+these shims read and write:
 
-  ``<dir>/index_ckpt/``  tree + DistributedIndex leaves (one checkpoint)
-  ``<dir>/corpus/``      DescriptorStore of the corpus rows (the trace
-                         replay reads query images from it block-by-block)
+  * ``save_index(dir, index, tree)`` ≡ ``Index.create(tree, dir,
+    overwrite=True)`` + ``append_built(index)`` + ``commit()``;
+  * ``load_index(dir, mesh)`` ≡ ``Index.open(dir, mesh)`` restricted to a
+    single-segment, tombstone-free index (anything richer has no faithful
+    single-``DistributedIndex`` representation — open the facade instead).
 
-The checkpoint ``extra`` carries the static structure (fanouts, n_leaves,
-corpus geometry) needed to rebuild the pytree skeleton and the shardings
-for the current mesh. The on-disk format is mesh-free, but a built index is
-*semantically* tied to its shard count (rows are cluster-sorted per shard,
-offsets are per-shard CSR) — ``load_index`` checks the mesh matches and
-fails loudly rather than serving a silently mis-sharded index.
+Both emit ``DeprecationWarning``. The corpus-side helpers
+(``save_corpus``/``load_corpus``) are not deprecated: the trace replay
+still reads query images from a DescriptorStore block-by-block.
 """
 
 from __future__ import annotations
 
 import os
+import warnings
 
-import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.core.index_build import DistributedIndex
 from repro.core.tree import VocabTree
-from repro.distributed.checkpoint import CheckpointManager
-from repro.distributed.meshutil import batch_axes
 
 CORPUS_SUBDIR = "corpus"
-CKPT_SUBDIR = "index_ckpt"
-
-
-def _ckpt(directory: str) -> CheckpointManager:
-    return CheckpointManager(os.path.join(directory, CKPT_SUBDIR), keep=1)
 
 
 def has_index(directory: str) -> bool:
-    d = os.path.join(directory, CKPT_SUBDIR)
-    return os.path.isdir(d) and CheckpointManager(d).latest_step() is not None
+    from repro.index import has_index as _has
 
-
-def _index_shardings(mesh: Mesh, n_levels: int):
-    ax = batch_axes(mesh)
-    rows = NamedSharding(mesh, P(ax, None))
-    flat = NamedSharding(mesh, P(ax))
-    rep = NamedSharding(mesh, P())
-    index = DistributedIndex(
-        vecs=rows, ids=flat, leaves=flat, offsets=rows, n_valid=flat,
-        overflow=rep,
-    )
-    tree = VocabTree(levels=tuple(rep for _ in range(n_levels)))
-    return {"index": index, "tree": tree}
+    return _has(directory)
 
 
 def save_index(
@@ -64,62 +45,43 @@ def save_index(
     *,
     extra: dict | None = None,
 ) -> str:
-    """Persist (index, tree) + structure metadata; atomic, crc-checked."""
-    meta = dict(extra or {})
-    meta.update(
-        n_leaves=int(index.n_leaves),
-        n_levels=len(tree.levels),
-        fanouts=[int(f) for f in tree.fanouts],
-        rows=int(index.rows),
-        valid_rows=int(np.asarray(index.n_valid).sum()),
-        dim=int(index.vecs.shape[-1]),
-        n_shards=int(index.offsets.shape[0]),
+    """Deprecated: persist one built index as a single committed segment."""
+    warnings.warn(
+        "serving.persist.save_index is deprecated; use repro.index.Index"
+        ".create(...).append_built(...)/commit()",
+        DeprecationWarning,
+        stacklevel=2,
     )
-    return _ckpt(directory).save(0, {"index": index, "tree": tree},
-                                 extra=meta)
+    from repro.index import Index
+
+    idx = Index.create(tree, directory, extra=extra, overwrite=True)
+    idx.append_built(index)
+    idx.commit()
+    return directory
 
 
 def load_index(
     directory: str, mesh: Mesh
 ) -> tuple[DistributedIndex, VocabTree, dict]:
-    """Restore (index, tree, meta) laid out for ``mesh``."""
-    mgr = _ckpt(directory)
-    step = mgr.latest_step()
-    if step is None:
-        raise FileNotFoundError(f"no index checkpoint under {directory}")
-    # peek at the manifest for the pytree skeleton (leaf values are ignored
-    # by restore; only structure and paths matter)
-    meta = mgr.read_manifest(step)["extra"]
-    from repro.distributed.meshutil import data_axis_size
+    """Deprecated: restore ``(index, tree, meta)`` from a one-segment
+    index. Raises for grown (multi-segment or tombstoned) indexes — those
+    only exist through the facade; open them with ``Index.open``."""
+    warnings.warn(
+        "serving.persist.load_index is deprecated; use "
+        "repro.index.Index.open",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    from repro.index import Index
 
-    want_shards = int(meta.get("n_shards", 0))
-    if want_shards and want_shards != data_axis_size(mesh):
+    idx = Index.open(directory, mesh=mesh)
+    if idx.n_segments != 1 or len(idx.tombstones):
         raise ValueError(
-            f"index was built for {want_shards} shards; current mesh has "
-            f"{data_axis_size(mesh)} — rebuild the index for this mesh"
+            f"{directory} holds {idx.n_segments} segments and "
+            f"{len(idx.tombstones)} tombstones — not representable as one "
+            "DistributedIndex; use repro.index.Index.open"
         )
-    skeleton = {
-        "index": DistributedIndex(
-            vecs=0.0, ids=0, leaves=0, offsets=0, n_valid=0, overflow=0,
-            n_leaves=int(meta["n_leaves"]),
-        ),
-        "tree": VocabTree(levels=tuple(0.0 for _ in range(meta["n_levels"]))),
-    }
-    tree_out, _ = mgr.restore(
-        skeleton, step, shardings=_index_shardings(mesh, meta["n_levels"])
-    )
-    index, tree = tree_out["index"], tree_out["tree"]
-    # restore() returns arrays; re-wrap the static field
-    index = DistributedIndex(
-        vecs=index.vecs,
-        ids=jnp.asarray(index.ids, jnp.int32),
-        leaves=jnp.asarray(index.leaves, jnp.int32),
-        offsets=jnp.asarray(index.offsets, jnp.int32),
-        n_valid=jnp.asarray(index.n_valid, jnp.int32),
-        overflow=jnp.asarray(index.overflow, jnp.int32),
-        n_leaves=int(meta["n_leaves"]),
-    )
-    return index, tree, meta
+    return idx.segments[0].index, idx.tree, idx.meta
 
 
 def corpus_dir(directory: str) -> str:

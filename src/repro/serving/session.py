@@ -6,9 +6,15 @@ on an XLA backend the extra failure mode is recompilation — every new query
 batch shape lowers a new program, which at serving latencies is the
 difference between 5 ms and 5 s. The session closes that hole:
 
-  * **load-or-build** — index + tree round-trip through
-    ``serving.persist`` (checkpoint + DescriptorStore), so a process
-    restart costs a restore, not an index build;
+  * **Index-backed** — a session is constructed from a segment-based
+    :class:`repro.index.Index` (the legacy ``(DistributedIndex, tree)``
+    pair still works and is wrapped in an ephemeral single-segment
+    facade). Each bucket rung compiles ONE fused program that builds the
+    lookup once and runs every segment's executor over it, merging the
+    per-segment k-NN tables on device — so serving a grown, multi-segment
+    index keeps the zero-recompile and bit-identity invariants;
+  * **load-or-build** — ``Index.open`` when a committed manifest exists,
+    else build + commit (index-once/serve-many across restarts);
   * **bucketed executors** — a small ladder of padded batch-size buckets
     (``engine.bucket_ladder``), one fused jitted pipeline per rung
     (probe routing -> fixed-shape lookup -> executor). Requests snap up to
@@ -40,10 +46,12 @@ from repro.core.engine import (
     plan as make_plan,
     snap_to_bucket,
 )
+from repro.core.engine.executors import SearchResult, pad_lookup
 from repro.core.index_build import DistributedIndex
 from repro.core.lookup import build_lookup_bucketed
+from repro.core.search import lookup_q_total
 from repro.core.tree import VocabTree
-from repro.distributed.meshutil import data_axis_size, local_mesh, round_up
+from repro.distributed.meshutil import data_axis_size, local_mesh
 from repro.serving.cache import HotLeafCache
 from repro.serving.metrics import ServingMetrics
 
@@ -56,21 +64,22 @@ def _jit_cache_size(fn) -> int:
 
 @dataclasses.dataclass
 class _BucketRuntime:
-    """One warmed rung: plan + fused jitted pipeline at a fixed shape."""
+    """One warmed rung: per-segment plans + one fused jitted pipeline."""
 
     bucket: int  # query-row capacity of this rung
-    plan: SearchPlan
-    q_total: int  # padded lookup rows the executor was built for
-    fn: object  # jitted (index, tree, queries, n_valid) -> (result, leaves)
+    plan: SearchPlan  # primary plan (largest segment) — observe()/reporting
+    plans: tuple  # one resolved plan per segment
+    q_total: int  # largest per-segment padded lookup row count
+    fn: object  # jitted (segments, tree, queries, n_valid) -> (result, leaves)
 
 
 class SearchSession:
-    """Long-lived search service over one (index, tree, mesh)."""
+    """Long-lived search service over one :class:`repro.index.Index`."""
 
     def __init__(
         self,
-        index: DistributedIndex,
-        tree: VocabTree,
+        index,
+        tree: VocabTree | None = None,
         mesh=None,
         *,
         k: int = 10,
@@ -83,9 +92,26 @@ class SearchSession:
         cache_leaves: int = 0,
         cache_admit_after: int = 2,
     ):
-        self.mesh = mesh if mesh is not None else local_mesh()
-        self.index = index
-        self.tree = tree
+        from repro.index import Index
+
+        if isinstance(index, Index):
+            self.index = index
+            self.mesh = mesh if mesh is not None else index.mesh
+            self.tree = index.tree
+        else:
+            # legacy constructor: a raw DistributedIndex + its tree becomes
+            # an ephemeral single-segment facade
+            if not isinstance(index, DistributedIndex) or tree is None:
+                raise TypeError(
+                    "SearchSession takes a repro.index.Index, or the legacy "
+                    "(DistributedIndex, tree) pair"
+                )
+            self.mesh = mesh if mesh is not None else local_mesh()
+            self.index = Index.from_built(index, tree, mesh=self.mesh)
+            self.tree = tree
+        self._segments = self.index.segment_views()
+        if not self._segments:
+            raise ValueError("cannot serve an index with no segments")
         self.k = int(k)
         self.layout = layout
         self.probes = int(probes)
@@ -97,13 +123,24 @@ class SearchSession:
         )
         self.metrics = ServingMetrics()
         self.cache = HotLeafCache(cache_leaves, admit_after=cache_admit_after)
-        if self.cache.capacity > 0:
-            self.cache.attach_index(
-                np.asarray(index.vecs), np.asarray(index.ids),
-                np.asarray(index.leaves), index.n_leaves,
-            )
+        self._attach_cache()
         self._runtimes = {b: self._make_runtime(b) for b in self.buckets}
         self._warmed_compiles: int | None = None
+
+    def _attach_cache(self) -> None:
+        if self.cache.capacity <= 0:
+            return
+        vv, ii, ll = [], [], []
+        for view in self._segments:
+            ids = np.asarray(view.ids)
+            live = ids >= 0  # skip padding and tombstoned rows
+            vv.append(np.asarray(view.vecs)[live])
+            ii.append(ids[live])
+            ll.append(np.asarray(view.leaves)[live])
+        self.cache.attach_index(
+            np.concatenate(vv), np.concatenate(ii), np.concatenate(ll),
+            self.index.n_leaves,
+        )
 
     # -- construction -------------------------------------------------------
     @classmethod
@@ -116,58 +153,107 @@ class SearchSession:
         rebuild: bool = False,
         **session_kw,
     ) -> tuple["SearchSession", dict]:
-        """Index-once / serve-many: restore from ``index_dir`` when a
-        checkpoint exists, else call ``build_fn() -> (index, tree, extra)``
-        and persist the result (when ``index_dir`` is given).
+        """Index-once / serve-many: ``Index.open`` when ``index_dir`` holds
+        a committed manifest, else call ``build_fn() -> (index, tree,
+        extra)`` and commit the result there (when ``index_dir`` is given).
 
-        Returns ``(session, meta)`` where ``meta`` is the checkpoint extra
+        Returns ``(session, meta)`` where ``meta`` is the index metadata
         (corpus geometry etc.) on restore, or ``build_fn``'s extra.
         """
-        from repro.serving import persist
+        import warnings
+
+        from repro.index import Index, has_index, has_legacy_index
 
         mesh = mesh if mesh is not None else local_mesh()
-        if index_dir and not rebuild and persist.has_index(index_dir):
-            index, tree, meta = persist.load_index(index_dir, mesh)
-            meta = dict(meta, restored=True)
-        else:
-            index, tree, extra = build_fn()
+        idx = None
+        if index_dir and not rebuild and has_index(index_dir):
+            opened = Index.open(index_dir, mesh=mesh)
+            if opened.n_segments:
+                idx, meta = opened, dict(opened.meta, restored=True)
+            # else: a crash between create and the first commit left a
+            # committed-empty index — rebuild instead of serving nothing
+        if idx is None:
+            if index_dir and not has_index(index_dir) and has_legacy_index(
+                index_dir
+            ):
+                warnings.warn(
+                    f"{index_dir} holds a pre-segment-format index "
+                    "(index_ckpt/), which this version no longer reads; "
+                    "rebuilding it in the segment format",
+                    stacklevel=2,
+                )
+            built, tree, extra = build_fn()
+            idx = Index.create(
+                tree, index_dir or None, mesh=mesh, extra=extra,
+                overwrite=True,
+            )
+            idx.append_built(built)
+            idx.commit()
             meta = dict(extra or {}, restored=False)
-            if index_dir:
-                persist.save_index(index_dir, index, tree, extra=extra)
-        return cls(index, tree, mesh, **session_kw), meta
+        return cls(idx, mesh=mesh, **session_kw), meta
+
+    def refresh(self) -> None:
+        """Re-snapshot the index's segments/tombstones (after append/
+        delete/compact on the underlying Index) and rebuild the bucket
+        pipelines. New shapes compile at the next :meth:`warmup`."""
+        self._segments = self.index.segment_views()
+        self._attach_cache()
+        self._runtimes = {b: self._make_runtime(b) for b in self.buckets}
+        self._warmed_compiles = None
 
     def _make_runtime(self, bucket: int) -> _BucketRuntime:
         n_shards = data_axis_size(self.mesh)
-        shard_rows = self.index.rows // n_shards
-        p = make_plan(
-            rows=self.index.rows,
-            n_leaves=self.index.n_leaves,
-            n_queries=bucket,
-            n_shards=n_shards,
-            k=self.k,
-            probes=self.probes,
-            layout=self.layout,
-            impl=self.impl,
-        )
-        q_rows = bucket * self.probes
-        if p.layout == "query_routed":
-            q_total = round_up(q_rows, p.q_tile * n_shards * self.probes)
-        else:
-            q_total = round_up(max(q_rows, p.q_cap), self.probes)
-        exec_fn = make_executor(
-            self.mesh, p, n_leaves=self.index.n_leaves,
-            shard_rows=shard_rows, q_total=q_total,
-        )
-        probes = self.probes
-
-        def fused(index, tree, queries, n_valid):
-            lookup, leaves = build_lookup_bucketed(
-                tree, queries, n_valid, probes=probes, q_total=q_total
+        k, probes = self.k, self.probes
+        q_rows = bucket * probes
+        plans, q_totals, execs = [], [], []
+        for view in self._segments:
+            p = make_plan(
+                rows=view.rows,
+                n_leaves=self.index.n_leaves,
+                n_queries=bucket,
+                n_shards=n_shards,
+                k=k,
+                probes=probes,
+                layout=self.layout,
+                impl=self.impl,
             )
-            return exec_fn(index, lookup), leaves
+            q_total = lookup_q_total(p, bucket, n_shards)
+            execs.append(make_executor(
+                self.mesh, p, n_leaves=self.index.n_leaves,
+                shard_rows=view.rows // n_shards, q_total=q_total,
+            ))
+            plans.append(p)
+            q_totals.append(q_total)
+        primary = max(range(len(plans)), key=lambda i: self._segments[i].rows)
+
+        def fused(segments, tree, queries, n_valid):
+            # ONE lookup build (probe routing + leaf sort) shared by every
+            # segment; per-segment executors only see tail padding on top
+            lookup, leaves = build_lookup_bucketed(
+                tree, queries, n_valid, probes=probes, q_total=q_rows
+            )
+            outs = [
+                fn(seg, pad_lookup(lookup, qt))
+                for seg, fn, qt in zip(segments, execs, q_totals)
+            ]
+            if len(outs) == 1:
+                return outs[0], leaves
+            # cross-segment merge: same ascending-distance fold the
+            # executors use across shards (ties keep segment-major order)
+            all_d = jnp.concatenate([r.dists[:bucket] for r in outs], axis=1)
+            all_i = jnp.concatenate([r.ids[:bucket] for r in outs], axis=1)
+            neg, sel = jax.lax.top_k(-all_d, k)
+            merged = SearchResult(
+                ids=jnp.take_along_axis(all_i, sel, axis=1),
+                dists=-neg,
+                pairs=sum(r.pairs for r in outs),
+                q_cap_overflow=sum(r.q_cap_overflow for r in outs),
+            )
+            return merged, leaves
 
         return _BucketRuntime(
-            bucket=bucket, plan=p, q_total=q_total, fn=jax.jit(fused)
+            bucket=bucket, plan=plans[primary], plans=tuple(plans),
+            q_total=max(q_totals), fn=jax.jit(fused),
         )
 
     # -- compile accounting -------------------------------------------------
@@ -186,11 +272,11 @@ class SearchSession:
     def warmup(self) -> float:
         """Compile every bucket rung once (dummy batch) — steady-state
         requests then only ever replay warmed programs."""
-        d = self.index.vecs.shape[-1]
+        d = self.index.dim
         t0 = time.perf_counter()
         for rt in self._runtimes.values():
             dummy = jnp.zeros((rt.bucket, d), jnp.float32)
-            res, leaves = rt.fn(self.index, self.tree, dummy, np.int32(0))
+            res, leaves = rt.fn(self._segments, self.tree, dummy, np.int32(0))
             jax.block_until_ready((res.ids, leaves))
         dt_ms = (time.perf_counter() - t0) * 1e3
         self.metrics.warmup_ms += dt_ms
@@ -222,7 +308,7 @@ class SearchSession:
         buf[:n] = queries
         t0 = time.perf_counter()
         res, leaves = rt.fn(
-            self.index, self.tree, jnp.asarray(buf), np.int32(n)
+            self._segments, self.tree, jnp.asarray(buf), np.int32(n)
         )
         jax.block_until_ready((res.ids, res.dists, leaves))
         dt = time.perf_counter() - t0
@@ -289,6 +375,7 @@ class SearchSession:
                 "q_cap": rt.plan.q_cap,
                 "q_tile": rt.plan.q_tile,
                 "p_cap": rt.plan.p_cap,
+                "segments": len(rt.plans),
             }
             for rt in self._runtimes.values()
         ]

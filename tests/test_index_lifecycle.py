@@ -1,0 +1,499 @@
+"""Segment lifecycle API: append/commit/delete/compact exactness against
+one-shot builds, manifest crash-safety, and the legacy persistence shims."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.index_build import build_index
+from repro.core.search import batch_search
+from repro.core.tree import build_tree
+from repro.data import synth
+from repro.distributed.meshutil import local_mesh
+from repro.index import Index, has_index
+from repro.index import manifest as manifest_lib
+
+DIM = 24
+N = 3000
+SPLIT = 1300
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    vecs_np, _ = synth.sample_descriptors(N, DIM, seed=0, n_centers=50)
+    tree = build_tree(jnp.asarray(vecs_np), (8, 4), key=jax.random.PRNGKey(1))
+    mesh = local_mesh()
+    oneshot = build_index(jnp.asarray(vecs_np), tree, mesh,
+                          wire_dtype=jnp.float32)
+    q_np = vecs_np[:80] + np.random.default_rng(2).standard_normal(
+        (80, DIM)
+    ).astype(np.float32)
+    return vecs_np, tree, mesh, oneshot, q_np
+
+
+def _grow(corpus, directory):
+    """create -> append x2 -> commit: the canonical grown index."""
+    vecs_np, tree, mesh, _, _ = corpus
+    idx = Index.create(tree, directory, mesh=mesh)
+    idx.append(vecs_np[:SPLIT])
+    idx.append(vecs_np[SPLIT:])
+    idx.commit()
+    return idx
+
+
+# ---------------------------------------------------------------------------
+# the acceptance invariant: N segments == one-shot build, bit for bit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("layout", ["point_major", "query_routed"])
+def test_append_search_bit_identical_to_oneshot(corpus, tmp_path, layout):
+    vecs_np, tree, mesh, oneshot, q_np = corpus
+    idx = _grow(corpus, str(tmp_path / "idx"))
+    assert idx.n_segments == 2 and idx.rows == N
+    for probes in (1, 2):
+        res = idx.search(q_np, k=5, layout=layout, probes=probes, q_cap=512)
+        ref = batch_search(oneshot, tree, jnp.asarray(q_np), k=5, mesh=mesh,
+                           layout=layout, probes=probes, q_cap=512)
+        assert int(res.q_cap_overflow) == 0 == int(ref.q_cap_overflow)
+        np.testing.assert_array_equal(np.asarray(res.ids),
+                                      np.asarray(ref.ids))
+        np.testing.assert_array_equal(np.asarray(res.dists),
+                                      np.asarray(ref.dists))
+
+
+def test_open_restores_committed_state(corpus, tmp_path):
+    vecs_np, tree, mesh, oneshot, q_np = corpus
+    d = str(tmp_path / "idx")
+    _grow(corpus, d)
+    idx = Index.open(d, mesh=mesh)
+    assert idx.n_segments == 2 and idx.rows == N and idx.version == 1
+    res = idx.search(q_np, k=5, layout="point_major", q_cap=512)
+    ref = batch_search(oneshot, tree, jnp.asarray(q_np), k=5, mesh=mesh,
+                       q_cap=512)
+    np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(ref.ids))
+
+
+def test_compact_matches_oneshot_arrays(corpus, tmp_path):
+    """After compact() the segment is the one-shot index — arrays and all,
+    not just search results."""
+    vecs_np, tree, mesh, oneshot, q_np = corpus
+    idx = _grow(corpus, str(tmp_path / "idx"))
+    before = idx.search(q_np, k=5, layout="point_major", q_cap=512)
+    name = idx.compact()
+    assert idx.n_segments == 1 and idx.rows == N
+    seg = idx.segments[0]
+    assert seg.name == name
+    for a, b in (
+        (seg.index.vecs, oneshot.vecs), (seg.index.ids, oneshot.ids),
+        (seg.index.leaves, oneshot.leaves),
+        (seg.index.offsets, oneshot.offsets),
+        (seg.index.n_valid, oneshot.n_valid),
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    after = idx.search(q_np, k=5, layout="point_major", q_cap=512)
+    np.testing.assert_array_equal(np.asarray(before.ids),
+                                  np.asarray(after.ids))
+    np.testing.assert_array_equal(np.asarray(before.dists),
+                                  np.asarray(after.dists))
+    # old segment checkpoints were garbage-collected after the bump
+    seg_dir = tmp_path / "idx" / manifest_lib.SEGMENTS_SUBDIR
+    assert sorted(os.listdir(seg_dir)) == [name]
+
+
+@pytest.mark.parametrize("layout", ["point_major", "query_routed"])
+def test_delete_matches_rebuild_without_rows(corpus, tmp_path, layout):
+    vecs_np, tree, mesh, _, q_np = corpus
+    idx = _grow(corpus, str(tmp_path / "idx"))
+    dead = np.concatenate([np.arange(7), [SPLIT - 1, SPLIT, N - 1]])
+    assert idx.delete(dead) == len(dead)
+    assert idx.delete(dead) == 0  # idempotent: already tombstoned
+    assert idx.delete([10**6]) == 0  # absent ids are not recorded
+    assert idx.rows == N - len(dead)
+    keep = ~np.isin(np.arange(N), dead)
+    rebuilt = build_index(
+        jnp.asarray(vecs_np[keep]), tree, mesh,
+        ids=jnp.asarray(np.flatnonzero(keep).astype(np.int32)),
+        wire_dtype=jnp.float32,
+    )
+    ref = batch_search(rebuilt, tree, jnp.asarray(q_np), k=5, mesh=mesh,
+                       layout=layout, q_cap=512)
+    res = idx.search(q_np, k=5, layout=layout, q_cap=512)
+    np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(ref.ids))
+    np.testing.assert_array_equal(np.asarray(res.dists),
+                                  np.asarray(ref.dists))
+    # compaction drops the tombstones physically, results unchanged
+    idx.commit()
+    idx.compact()
+    assert idx.rows == N - len(dead) and len(idx.tombstones) == 0
+    res2 = idx.search(q_np, k=5, layout=layout, q_cap=512)
+    np.testing.assert_array_equal(np.asarray(res2.ids), np.asarray(ref.ids))
+
+
+# ---------------------------------------------------------------------------
+# crash-safety: visibility is exactly the last committed manifest
+# ---------------------------------------------------------------------------
+
+
+def test_crash_between_append_and_commit_is_invisible(corpus, tmp_path):
+    vecs_np, tree, mesh, _, q_np = corpus
+    d = str(tmp_path / "idx")
+    idx = Index.create(tree, d, mesh=mesh)
+    idx.append(vecs_np[:SPLIT])
+    v1 = idx.commit()
+    # "crash": a second handle appends durably but never commits
+    dying = Index.open(d, mesh=mesh)
+    orphan = dying.append(vecs_np[SPLIT:])
+    del dying
+    seg_dir = os.path.join(d, manifest_lib.SEGMENTS_SUBDIR)
+    assert orphan in os.listdir(seg_dir)  # bytes on disk...
+    reopened = Index.open(d, mesh=mesh)
+    assert reopened.version == v1
+    assert reopened.n_segments == 1  # ...but invisible without a manifest
+    assert reopened.rows == SPLIT
+    # a retried append never collides with the orphan's reserved name
+    retried = reopened.append(vecs_np[SPLIT:])
+    assert retried != orphan
+    reopened.commit()
+    final = Index.open(d, mesh=mesh)
+    assert final.n_segments == 2 and final.rows == N
+
+
+def test_failed_commit_stays_staged_and_retries(corpus, tmp_path, monkeypatch):
+    """A commit whose manifest write fails must leave the handle staged so
+    a retried commit() re-attempts publication instead of no-opping."""
+    vecs_np, tree, mesh, _, _ = corpus
+    d = str(tmp_path / "idx")
+    idx = Index.create(tree, d, mesh=mesh)
+    idx.append(vecs_np[:SPLIT])
+
+    def boom(*a, **kw):
+        raise OSError("disk full")
+
+    monkeypatch.setattr(manifest_lib, "write", boom)
+    with pytest.raises(OSError):
+        idx.commit()
+    monkeypatch.undo()
+    assert idx.version == 0 and idx.staged_segments  # still staged
+    v = idx.commit()  # the retry actually publishes
+    assert v == 1
+    assert Index.open(d, mesh=mesh).rows == SPLIT
+
+
+def test_failed_compact_preserves_tombstones(corpus, tmp_path, monkeypatch):
+    """An exception during the compaction rebuild must not resurrect
+    deleted rows — segments and tombstones stay exactly as committed."""
+    import repro.index.lifecycle as lifecycle_mod
+
+    vecs_np, tree, mesh, _, q_np = corpus
+    idx = _grow(corpus, str(tmp_path / "idx"))
+    idx.delete(np.arange(5))
+    idx.commit()
+
+    def boom(*a, **kw):
+        raise RuntimeError("device OOM")
+
+    monkeypatch.setattr(lifecycle_mod, "build_index", boom)
+    with pytest.raises(RuntimeError):
+        idx.compact()
+    monkeypatch.undo()
+    assert len(idx.tombstones) == 5 and idx.n_segments == 2
+    ids = np.asarray(idx.search(q_np[:8], k=5, q_cap=512).ids)
+    assert not np.isin(ids, np.arange(5)).any()  # still deleted
+    idx.compact()  # and the retry succeeds
+    assert idx.rows == N - 5
+
+
+def test_concurrent_commit_loses_loudly_not_silently(corpus, tmp_path):
+    """Two handles racing to publish the same next manifest version: the
+    loser gets FileExistsError instead of silently overwriting the
+    winner's manifest (which would orphan its committed segments)."""
+    vecs_np, tree, mesh, _, _ = corpus
+    d = str(tmp_path / "idx")
+    Index.create(tree, d, mesh=mesh)
+    a = Index.open(d, mesh=mesh)
+    b = Index.open(d, mesh=mesh)
+    a.append(vecs_np[:100])
+    b.append(vecs_np[100:200])
+    assert a.commit() == 1
+    with pytest.raises(FileExistsError, match="committed concurrently"):
+        b.commit()
+    # the winner's data is intact; the loser stays staged for a reopen
+    assert Index.open(d, mesh=mesh).rows == 100
+    assert b.staged_segments
+
+
+def test_launch_index_rerun_resumes_not_duplicates(tmp_path, monkeypatch):
+    """Re-running a --commit-every job over the same store resumes from
+    the ingest cursor instead of appending every block again."""
+    from repro.launch import index as index_cli
+
+    d = str(tmp_path / "resume")
+    args = ["--rows", "4000", "--dim", "16", "--block-rows", "1000",
+            "--fanout", "4", "4", "--tree-sample", "1024",
+            "--commit-every", "1", "--index-dir", d]
+    # crash the first run after 2 committed blocks
+    from repro.distributed import wavescheduler as ws
+
+    real_run = ws.WaveScheduler.run
+
+    def crash_after_two(self, waves, **kw):
+        return real_run(self, list(waves)[:2], **kw)
+
+    monkeypatch.setattr(ws.WaveScheduler, "run", crash_after_two)
+    with pytest.raises(AssertionError):  # job dies before finishing
+        index_cli.main(args)
+    monkeypatch.undo()
+    assert Index.open(d).rows == 2000  # blocks 0-1 committed
+    assert index_cli.main(args) == 0  # rerun resumes at block 2
+    idx = Index.open(d)
+    assert idx.rows == 4000  # nothing duplicated
+    ids = np.sort(np.concatenate(
+        [s.host_ids()[s.host_ids() >= 0] for s in idx.segments]
+    ))
+    np.testing.assert_array_equal(ids, np.arange(4000))
+
+
+def test_tombstone_publication_is_exclusive(tmp_path):
+    """The loser of a commit race must not clobber the winner's published
+    tombstone file; only a same-handle retry (identical bytes) passes."""
+    d = str(tmp_path)
+    rel = manifest_lib.write_tombstones(d, 2, np.array([1, 2]))
+    assert manifest_lib.write_tombstones(d, 2, np.array([1, 2])) == rel
+    with pytest.raises(FileExistsError, match="different contents"):
+        manifest_lib.write_tombstones(d, 2, np.array([3]))
+    np.testing.assert_array_equal(
+        manifest_lib.read_tombstones(d, rel), [1, 2]
+    )
+
+
+def test_legacy_format_dir_fails_actionably(corpus, tmp_path):
+    vecs_np, tree, mesh, _, _ = corpus
+    d = tmp_path / "legacy"
+    (d / "index_ckpt").mkdir(parents=True)
+    assert not has_index(str(d))
+    with pytest.raises(FileNotFoundError, match="pre-segment-format"):
+        Index.open(str(d), mesh=mesh)
+
+
+def test_double_commit_is_idempotent(corpus, tmp_path):
+    d = str(tmp_path / "idx")
+    idx = _grow(corpus, d)
+    v = idx.version
+    files = sorted(os.listdir(d))
+    assert idx.commit() == v
+    assert idx.commit() == v
+    assert sorted(os.listdir(d)) == files  # no new manifest written
+    assert manifest_lib.list_versions(d) == [0, v]
+
+
+def test_create_open_guards(corpus, tmp_path):
+    vecs_np, tree, mesh, _, q_np = corpus
+    d = str(tmp_path / "idx")
+    assert not has_index(d)
+    idx = Index.create(tree, d, mesh=mesh)
+    assert has_index(d)
+    with pytest.raises(FileExistsError):
+        Index.create(tree, d, mesh=mesh)
+    with pytest.raises(FileNotFoundError):
+        Index.open(str(tmp_path / "nope"), mesh=mesh)
+    # an empty index searches to no-neighbour sentinels
+    res = idx.search(q_np[:4], k=3)
+    assert (np.asarray(res.ids) == -1).all()
+    assert np.isinf(np.asarray(res.dists)).all()
+
+
+def test_append_id_validation(corpus, tmp_path):
+    vecs_np, tree, mesh, _, _ = corpus
+    idx = Index.create(tree, None, mesh=mesh)
+    idx.append(vecs_np[:100])  # auto ids 0..99
+    with pytest.raises(ValueError, match="collide"):
+        idx.append(vecs_np[100:200], ids=np.arange(50, 150))
+    with pytest.raises(ValueError, match="duplicate"):
+        idx.append(vecs_np[100:200], ids=np.zeros(100, np.int64) + 500)
+    with pytest.raises(ValueError, match="non-negative"):
+        idx.append(vecs_np[100:200], ids=np.arange(-1, 99))
+    idx.append(vecs_np[100:200])  # auto ids continue at 100
+    assert idx.next_id == 200
+
+
+# ---------------------------------------------------------------------------
+# legacy shims: persist.save_index/load_index keep working (deprecated)
+# ---------------------------------------------------------------------------
+
+
+def test_persist_shims_roundtrip_and_refuse_grown(corpus, tmp_path):
+    from repro.serving import persist
+
+    vecs_np, tree, mesh, oneshot, _ = corpus
+    d = str(tmp_path / "shim")
+    with pytest.warns(DeprecationWarning):
+        persist.save_index(d, oneshot, tree, extra={"images": 9})
+    with pytest.warns(DeprecationWarning):
+        r_index, r_tree, meta = persist.load_index(d, mesh)
+    assert meta["images"] == 9 and meta["n_leaves"] == oneshot.n_leaves
+    np.testing.assert_array_equal(np.asarray(r_index.ids),
+                                  np.asarray(oneshot.ids))
+    # a grown index has no single-DistributedIndex representation
+    grown = str(tmp_path / "grown")
+    _grow(corpus, grown)
+    with pytest.warns(DeprecationWarning), pytest.raises(ValueError):
+        persist.load_index(grown, mesh)
+
+
+# ---------------------------------------------------------------------------
+# serving a grown index: SearchSession from an Index
+# ---------------------------------------------------------------------------
+
+
+def test_session_over_grown_index_matches_facade_search(corpus, tmp_path):
+    from repro.serving import SearchSession
+
+    vecs_np, tree, mesh, _, q_np = corpus
+    idx = _grow(corpus, str(tmp_path / "idx"))
+    s = SearchSession(idx, k=5, layout="point_major", probes=2,
+                      buckets=(32, 96))
+    warmed_ms = s.warmup()
+    assert warmed_ms > 0 and s.recompiles() == len(s.buckets)
+    for n in (1, 31, 50, 96):
+        ids, dists = s.search(q_np[:n])
+        rt = s._runtimes[96 if n > 32 else 32]
+        # same per-segment plan budgets the session compiled with
+        direct = idx.search(
+            q_np[:n], k=5, layout="point_major", probes=2,
+            block_rows=rt.plan.block_rows, q_cap=rt.plan.q_cap,
+        )
+        np.testing.assert_array_equal(ids, np.asarray(direct.ids))
+        np.testing.assert_array_equal(dists, np.asarray(direct.dists))
+    assert s.steady_state_recompiles() == 0
+    # deletes flow into serving after a refresh + rewarm
+    idx.delete(np.arange(5))
+    s.refresh()
+    s.warmup()
+    ids, _ = s.search(q_np[:8])
+    assert not np.isin(ids, np.arange(5)).any()
+    assert s.steady_state_recompiles() == 0
+
+
+def test_load_or_build_rebuilds_over_crashed_empty_index(corpus, tmp_path):
+    """A crash between Index.create and the first commit leaves a
+    committed-empty index; load_or_build must fall back to building, not
+    serve (or crash on) an index with no segments."""
+    from repro.serving import SearchSession
+
+    vecs_np, tree, mesh, oneshot, _ = corpus
+    d = str(tmp_path / "crashed")
+    Index.create(tree, d, mesh=mesh)  # "crash" before any append/commit
+    assert has_index(d)
+    calls = []
+
+    def build_fn():
+        calls.append(1)
+        return oneshot, tree, {"images": 1}
+
+    s, meta = SearchSession.load_or_build(d, build_fn=build_fn, mesh=mesh,
+                                          k=3, buckets=(32,))
+    assert calls == [1] and meta["restored"] is False
+    assert Index.open(d, mesh=mesh).n_segments == 1
+    # and the repaired index restores normally afterwards
+    s2, meta2 = SearchSession.load_or_build(d, build_fn=build_fn, mesh=mesh,
+                                            k=3, buckets=(32,))
+    assert calls == [1] and meta2["restored"] is True
+
+
+def test_refresh_drops_stale_cache_slabs(corpus, tmp_path):
+    """A hot-leaf cache slab admitted before a delete must not keep
+    serving the deleted row after session.refresh()."""
+    from repro.serving import SearchSession
+
+    vecs_np, tree, mesh, _, q_np = corpus
+    idx = _grow(corpus, str(tmp_path / "idx"))
+    s = SearchSession(idx, k=3, layout="point_major", buckets=(32,),
+                      cache_leaves=tree.n_leaves, cache_admit_after=1)
+    s.warmup()
+    q = q_np[:8]
+    s.search(q)  # admit + memoise
+    hit = s.cache.try_serve(q, 3)
+    assert hit is not None  # repeat is cache-servable
+    victim = int(hit[0][0, 0])
+    assert victim >= 0
+    idx.delete([victim])
+    s.refresh()
+    s.warmup()
+    assert s.cache.try_serve(q, 3) is None  # stale slabs dropped
+    s.search(q)  # re-admit post-delete
+    hit2 = s.cache.try_serve(q, 3)
+    assert hit2 is not None and victim not in hit2[0]
+
+
+def test_session_legacy_pair_still_constructs(corpus):
+    from repro.serving import SearchSession
+
+    vecs_np, tree, mesh, oneshot, q_np = corpus
+    s = SearchSession(oneshot, tree, mesh, k=3, layout="point_major",
+                      buckets=(32,))
+    s.warmup()
+    ids, _ = s.search(q_np[:8])
+    ref = batch_search(oneshot, tree, jnp.asarray(q_np[:8]), k=3, mesh=mesh,
+                       layout="point_major",
+                       block_rows=s._runtimes[32].plan.block_rows,
+                       q_cap=s._runtimes[32].plan.q_cap)
+    np.testing.assert_array_equal(ids, np.asarray(ref.ids))
+    with pytest.raises(TypeError):
+        SearchSession(oneshot)  # legacy pair without its tree
+
+
+# ---------------------------------------------------------------------------
+# launch/index.py: historical flags keep working over the facade
+# ---------------------------------------------------------------------------
+
+
+def test_launch_index_cli_legacy_flags(tmp_path):
+    from repro.launch import index as index_cli
+
+    rc = index_cli.main([
+        "--rows", "4000", "--dim", "16", "--block-rows", "1000",
+        "--fanout", "4", "4", "--tree-sample", "1024",
+        "--inject-failures", "--verify-queries", "16", "--probes", "2",
+        "--index-dir", str(tmp_path / "cli"), "--compact",
+    ])
+    assert rc == 0
+    idx = Index.open(str(tmp_path / "cli"))
+    assert idx.rows == 4000 and idx.n_segments == 1
+
+
+def test_grow_then_serve_roundtrip(tmp_path):
+    """An --index-dir grown by repro.launch.index (no corpus/ store) is
+    servable: the trace generator reads query rows from the segments."""
+    from repro.launch import index as index_cli, serve as serve_cli
+
+    d = str(tmp_path / "grown")
+    assert index_cli.main([
+        "--rows", "4000", "--dim", "16", "--block-rows", "2000",
+        "--fanout", "4", "4", "--tree-sample", "1024", "--index-dir", d,
+    ]) == 0
+    rc = serve_cli.main([
+        "--index-dir", d, "--dim", "16", "--desc-per-image", "20",
+        "--trace", "uniform", "--requests", "20", "--buckets", "64",
+        "--no-recall",
+    ])
+    assert rc == 0
+
+
+def test_read_rows_by_descriptor_id(corpus, tmp_path):
+    vecs_np, tree, mesh, _, _ = corpus
+    idx = _grow(corpus, str(tmp_path / "idx"))
+    rows = np.array([2999, 0, 1300, 1299, 0])  # cross-segment, dups, order
+    got = idx.read_rows(rows)
+    np.testing.assert_array_equal(got, vecs_np[rows])
+    with pytest.raises(IndexError, match="not in the index"):
+        idx.read_rows([N + 5])
+    # tombstoned ids read as missing immediately, not only after compact
+    idx.delete([1300])
+    with pytest.raises(IndexError, match="absent or deleted"):
+        idx.read_rows(rows)
+    with pytest.raises(ValueError, match="int32"):
+        idx.append(vecs_np[:4], ids=np.array([N, N + 1, N + 2, 2**31]))

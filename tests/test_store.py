@@ -68,3 +68,27 @@ def test_read_rows_bounds(tmp_path):
     with pytest.raises(IndexError):
         st.read_rows(np.array([-1]))
     assert st.read_rows(np.array([], dtype=np.int64)).shape == (0, 4)
+    assert st.read_rows([]).shape == (0, 4)  # empty python list too
+    with pytest.raises(ValueError):
+        st.read_rows(np.zeros((2, 2), np.int64))  # 2-D selections rejected
+
+
+def test_read_rows_out_of_order_duplicates_and_tail(tmp_path):
+    """The contract segment search and trace replay rely on: out-of-order
+    and duplicated selections gather positionally (out[i] == vecs[rows[i]])
+    even when the selection criss-crosses the final partial block."""
+    vecs = np.arange(250 * 4, dtype=np.float32).reshape(250, 4)
+    st = DescriptorStore.create(str(tmp_path / "s"), vecs, block_rows=64)
+    rows = np.array([249, 0, 192, 63, 249, 64, 0, 191, 248])  # dups + tail
+    np.testing.assert_array_equal(st.read_rows(rows), vecs[rows])
+    # python-list and int32 selections behave identically
+    np.testing.assert_array_equal(st.read_rows(list(rows)), vecs[rows])
+    np.testing.assert_array_equal(
+        st.read_rows(rows.astype(np.int32)), vecs[rows]
+    )
+    # a scalar row id is promoted to a single-row gather
+    np.testing.assert_array_equal(st.read_rows(249), vecs[[249]])
+    # virtual stores share the same gather contract
+    vst = VirtualStore(250, 4, block_rows=64, seed=3)
+    all_vecs = np.concatenate([b.vecs for b in vst.blocks()])
+    np.testing.assert_array_equal(vst.read_rows(rows), all_vecs[rows])
