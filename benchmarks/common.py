@@ -1,12 +1,42 @@
-"""Shared benchmark utilities: timing, corpus setup, CSV rows."""
+"""Shared benchmark utilities: timing, corpus setup, CSV rows, and the
+JSON artifact header (git rev + shard plan) that makes ``benchmarks/out``
+trajectories comparable across PRs."""
 
 from __future__ import annotations
 
+import os
+import subprocess
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+def git_rev() -> str:
+    """Short git revision of the repo this benchmark ran from (or
+    ``"unknown"`` outside a checkout)."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        )
+        return out.stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def bench_header(shard_plan=None, **extra) -> dict:
+    """Header stamped on every ``benchmarks/out`` JSON artifact.
+
+    Records the git rev and the shard plan under which the numbers were
+    taken (``None`` = unsharded), so ms/image trajectories stay
+    comparable across PRs and shard topologies.
+    """
+    h = {"git_rev": git_rev(), "shard_plan": shard_plan}
+    h.update(extra)
+    return h
 
 
 def timeit(fn, *args, warmup: int = 1, iters: int = 3):

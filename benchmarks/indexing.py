@@ -22,7 +22,7 @@ import time
 
 import jax.numpy as jnp
 
-from benchmarks.common import Corpus, row, timeit
+from benchmarks.common import Corpus, bench_header, row, timeit
 
 
 def run():
@@ -99,7 +99,8 @@ def run_incremental(
         jnp.asarray(store.sample_for_tree(min(65_536, store.n_rows))),
         tuple(fanouts), key=jax.random.PRNGKey(seed),
     )
-    payload = {"segments": [], "rows_per_segment": rows_per_segment,
+    payload = {"header": bench_header(), "segments": [],
+               "rows_per_segment": rows_per_segment,
                "dim": dim, "n_segments": segments}
     with tempfile.TemporaryDirectory() as d:
         idx = Index.create(tree, d, mesh=mesh)

@@ -59,7 +59,12 @@ def smoke() -> int:
     if rc != 0:
         return rc
     print("# smoke: serving session (2 buckets, zipf trace)", file=sys.stderr)
-    return serving_bench.smoke()
+    rc = serving_bench.smoke()
+    if rc != 0:
+        return rc
+    print("# smoke: sharded scatter-gather (bit-identity at shards 1/2/3)",
+          file=sys.stderr)
+    return serving_bench.sharded_smoke()
 
 
 def main() -> None:

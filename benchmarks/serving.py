@@ -19,7 +19,7 @@ import json
 import math
 import os
 
-from benchmarks.common import Corpus, row
+from benchmarks.common import Corpus, bench_header, row
 
 
 def _session(c, *, buckets, cache_leaves=0, cache_admit=2, probes=1):
@@ -72,6 +72,7 @@ def run():
             "cache": session.cache.stats(),
             "plans": session.plan_summary(),
         }
+    payload["header"] = bench_header()
     payload["plan_observations"] = observations()
     out_dir = os.environ.get("REPRO_BENCH_OUT", "benchmarks/out")
     os.makedirs(out_dir, exist_ok=True)
@@ -79,6 +80,104 @@ def run():
     with open(path, "w") as f:
         json.dump(payload, f, indent=1)
     out_rows.append(row("serving_json", 0.0, f"wrote={path}"))
+    return out_rows
+
+
+def shard_sweep(
+    shard_counts=(1, 2, 4),
+    *,
+    segments: int = 4,
+    strategy: str = "balanced",
+    n_queries: int = 2048,
+    batch_rows: int = 1024,
+    desc_per_image: int = 24,
+    corpus: Corpus | None = None,
+    json_path: str | None = None,
+    check_identity: bool = True,
+) -> list[str]:
+    """Scatter-gather scaling: engine ms/image vs. shard count.
+
+    The same corpus is appended as ``segments`` segments of one Index,
+    then served through a :class:`~repro.serving.ShardedSearchSession` at
+    each shard count — one JSON entry (and one CSV row) per count, all
+    stamped with the shard plan and git rev so trajectories are
+    comparable across PRs. Every dispatch feeds the per-plan ms/image
+    observations (the ``plan()`` cost-model calibration data), and the
+    sweep asserts each count's results are bit-identical to the first
+    (the scatter-gather exactness gate, on by default).
+    """
+    import numpy as np
+
+    from repro.core.engine import observations
+    from repro.index import Index
+    from repro.serving import ShardedSearchSession
+
+    c = corpus or Corpus()
+    idx = Index.create(c.tree, None, mesh=c.mesh)
+    # segment sizes on a round boundary: build_index pads each segment to
+    # ~2x its rows, and a prime-ish padded count leaves plan() no usable
+    # block_rows divisor (loud ValueError) — same corpus either way
+    n = len(c.vecs_np)
+    step = max(1000, n // segments // 1000 * 1000)
+    bounds = [min(i * step, n) for i in range(1, segments)] + [n]
+    for lo, hi in zip([0] + bounds[:-1], bounds):
+        if hi > lo:
+            idx.append(c.vecs_np[lo:hi])
+    idx.commit()
+    q, _ = c.queries(n_queries)
+    q = np.asarray(q)
+    out_rows, entries, ref = [], [], None
+    for n in shard_counts:
+        session = ShardedSearchSession(
+            idx, shards=n, shard_strategy=strategy, k=10, layout="auto",
+            buckets=(batch_rows,),
+        )
+        session.warmup()
+        got_i, got_d = [], []
+        for s in range(0, len(q), batch_rows):
+            chunk = q[s: s + batch_rows]
+            ids, dists = session.search(
+                chunk, n_images=max(1, len(chunk) // desc_per_image)
+            )
+            got_i.append(ids)
+            got_d.append(dists)
+        if check_identity:
+            if ref is None:
+                ref = (np.concatenate(got_i), np.concatenate(got_d))
+            else:
+                np.testing.assert_array_equal(np.concatenate(got_i), ref[0])
+                np.testing.assert_array_equal(np.concatenate(got_d), ref[1])
+        m = session.metrics
+        recomp = session.steady_state_recompiles()
+        assert recomp == 0, f"shards={n}: {recomp} steady-state recompiles"
+        entries.append({
+            "shards": n,
+            "plan": session.shard_plan.to_json(),
+            "ms_per_image": m.ms_per_image,
+            "engine_ms": m.engine_ms,
+            "engine_batches": m.engine_batches,
+            "query_rows": m.query_rows,
+        })
+        out_rows.append(row(
+            f"serving_shards_{n}", m.engine_ms / 1e3 / m.engine_batches,
+            f"ms_per_image={m.ms_per_image:.2f} "
+            f"plan={session.shard_plan.describe().replace(' ', '_')} "
+            f"identical={'checked' if check_identity else 'unchecked'}",
+        ))
+    out_dir = os.environ.get("REPRO_BENCH_OUT", "benchmarks/out")
+    path = json_path or os.path.join(out_dir, "serving_shards.json")
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    payload = {
+        "header": bench_header(
+            shard_plan={"strategy": strategy, "counts": list(shard_counts),
+                        "segments": segments},
+        ),
+        "sweep": entries,
+        "plan_observations": observations(),
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    out_rows.append(row("serving_shards_json", 0.0, f"wrote={path}"))
     return out_rows
 
 
@@ -104,3 +203,95 @@ def smoke() -> int:
         f"cache hit {session.cache.hit_rate:.2f}, recompiles 0",
     )
     return 0
+
+
+def sharded_smoke() -> int:
+    """Scatter-gather gate. Asserts (a) a `ShardedSearchSession` returns
+    ids+dists bit-identical to the unsharded `SearchSession` over the
+    same index, (b) a small shard sweep (counts 1/2/3 over a 3-segment
+    index) is per-count bit-identical and recompile-free (assertions
+    inside :func:`shard_sweep`), and (c) the sweep's JSON artifact
+    carries one row per shard count plus the git-rev/shard-plan header."""
+    import tempfile
+
+    import numpy as np
+
+    from repro.index import Index
+    from repro.serving import SearchSession, ShardedSearchSession
+
+    c = Corpus(rows=20_000, dim=32, fanouts=(16, 16))
+    idx = Index.create(c.tree, None, mesh=c.mesh)
+    idx.append(c.vecs_np[:12_000])
+    idx.append(c.vecs_np[12_000:])
+    idx.commit()
+    q, _ = c.queries(256)
+    q = np.asarray(q)
+    ref = SearchSession(idx, k=10, probes=2, buckets=(256,))
+    ref.warmup()
+    for shards in (2, 3):
+        s = ShardedSearchSession(idx, shards=shards, k=10, probes=2,
+                                 buckets=(256,))
+        s.warmup()
+        for n in (1, 100, 256):
+            ids, dists = s.search(q[:n])
+            ref_ids, ref_dists = ref.search(q[:n])
+            np.testing.assert_array_equal(ids, ref_ids)
+            np.testing.assert_array_equal(dists, ref_dists)
+        assert s.steady_state_recompiles() == 0
+
+    counts = (1, 2, 3)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "serving_shards.json")
+        shard_sweep(
+            counts, segments=3, n_queries=512, batch_rows=256,
+            corpus=c, json_path=path,
+        )
+        with open(path) as f:
+            payload = json.load(f)
+    assert [e["shards"] for e in payload["sweep"]] == list(counts), payload
+    assert payload["header"]["git_rev"], payload["header"]
+    assert payload["header"]["shard_plan"]["strategy"] == "balanced"
+    ms = ", ".join(
+        f"x{e['shards']}={e['ms_per_image']:.2f}" for e in payload["sweep"]
+    )
+    print("# sharded smoke: session == sharded session (shards 2/3, "
+          f"256 queries, k=10); sweep bit-identical at 1/2/3; ms/image {ms}")
+    return 0
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the serving-session smoke gate")
+    ap.add_argument("--sharded-smoke", action="store_true",
+                    help="run the scatter-gather bit-identity gate")
+    ap.add_argument("--shard-sweep", action="store_true",
+                    help="ms/image vs shard count -> "
+                         "benchmarks/out/serving_shards.json")
+    ap.add_argument("--shards", type=int, nargs="+", default=(1, 2, 4),
+                    help="shard counts to sweep")
+    ap.add_argument("--segments", type=int, default=4,
+                    help="segments the sweep corpus is appended as")
+    ap.add_argument("--strategy", choices=("round_robin", "balanced"),
+                    default="balanced")
+    ap.add_argument("--json", default=None, help="JSON output path")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        return smoke()
+    if args.sharded_smoke:
+        return sharded_smoke()
+    print("name,us_per_call,derived")
+    if args.shard_sweep:
+        rows = shard_sweep(tuple(args.shards), segments=args.segments,
+                           strategy=args.strategy, json_path=args.json)
+    else:
+        rows = run()
+    for r in rows:
+        print(r)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,177 @@
+#!/usr/bin/env python
+"""Docs CI gate: cross-links must resolve, bash snippets must be real.
+
+Run from the repo root (scripts/smoke.sh does):
+
+    python scripts/check_docs.py
+
+Checks every ``docs/*.md`` plus ``README.md`` for
+
+  * markdown links ``[text](path)`` whose non-URL target does not exist
+    (resolved against the file's directory, then the repo root);
+  * path-like inline references (``docs/engine.md``, ``scripts/smoke.sh``,
+    ``src/repro/...py``) that do not exist from the repo root;
+  * fenced shell snippets: every ``python -m <module>`` must resolve to a
+    real module (repo modules via ``src``/repo root, external ones via
+    ``importlib``), every ``--flag`` passed to a repo module must appear
+    literally in that module's source (argparse flags are declared as
+    string literals), and every repo-path token must exist.
+
+Exits 1 when any check fails (0 = docs are sound).
+"""
+
+from __future__ import annotations
+
+import importlib.util
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+PATH_REF = re.compile(
+    r"\b((?:docs|scripts|benchmarks|examples|tests|src)/"
+    r"[A-Za-z0-9_./-]*[A-Za-z0-9_-]\.(?:md|py|sh))\b"
+)
+FENCE = re.compile(r"^```")
+
+
+def doc_files() -> list[str]:
+    out = [
+        os.path.join(REPO, "docs", n)
+        for n in sorted(os.listdir(os.path.join(REPO, "docs")))
+        if n.endswith(".md")
+    ]
+    readme = os.path.join(REPO, "README.md")
+    if os.path.exists(readme):
+        out.append(readme)
+    return out
+
+
+def module_source(mod: str) -> str | None:
+    """Path of a ``python -m``-able module if it lives in this repo."""
+    rel = mod.replace(".", os.sep)
+    for cand in (
+        os.path.join(REPO, "src", rel + ".py"),
+        os.path.join(REPO, "src", rel, "__main__.py"),
+        os.path.join(REPO, "src", rel, "__init__.py"),
+        os.path.join(REPO, rel + ".py"),
+        os.path.join(REPO, rel, "__main__.py"),
+        os.path.join(REPO, rel, "__init__.py"),
+    ):
+        if os.path.exists(cand):
+            return cand
+    return None
+
+
+def iter_fenced_lines(text: str):
+    """Logical lines inside fenced blocks, backslash-continuations joined."""
+    in_fence = False
+    pending = ""
+    for raw in text.splitlines():
+        if FENCE.match(raw.strip()):
+            in_fence = not in_fence
+            pending = ""
+            continue
+        if not in_fence:
+            continue
+        line = raw.rstrip()
+        if line.endswith("\\"):
+            pending += line[:-1] + " "
+            continue
+        yield (pending + line).strip()
+        pending = ""
+
+
+def check_snippet_line(line: str, where: str, errors: list[str]) -> None:
+    line = line.split("#", 1)[0].strip()  # trailing comments
+    if not line:
+        return
+    tokens = line.split()
+    # path-like tokens must exist (relative, known extension, not a URL)
+    for t in tokens:
+        t = t.strip("\"'`,;")
+        if (
+            "/" in t
+            and not t.startswith(("/", "http:", "https:", "$"))
+            and t.split("/", 1)[0]
+            in ("docs", "scripts", "benchmarks", "examples", "tests", "src")
+            and re.search(r"\.(?:py|sh|md)$", t)
+            and not os.path.exists(os.path.join(REPO, t))
+        ):
+            errors.append(f"{where}: snippet references missing file {t!r}")
+    # python -m <module> [--flags]
+    if "-m" not in tokens:
+        return
+    mod = tokens[tokens.index("-m") + 1] if tokens.index("-m") + 1 < len(
+        tokens
+    ) else None
+    if not mod or not re.fullmatch(r"[A-Za-z_][A-Za-z0-9_.]*", mod):
+        return
+    src = module_source(mod)
+    if src is None:
+        sys.path.insert(0, os.path.join(REPO, "src"))
+        sys.path.insert(0, REPO)
+        try:
+            found = importlib.util.find_spec(mod) is not None
+        except (ImportError, ValueError):
+            found = False
+        finally:
+            sys.path = sys.path[2:]
+        if not found:
+            errors.append(f"{where}: snippet runs unknown module {mod!r}")
+        return
+    source = open(src).read()
+    for t in tokens[tokens.index("-m") + 2:]:
+        if not t.startswith("--"):
+            continue
+        flag = t.split("=", 1)[0].strip("\"'`,;")
+        if flag == "--":
+            continue
+        # match the argparse declaration's *quoted* literal: a bare
+        # substring test would let prefix typos ("--shard" for
+        # "--shards") ride through on longer flags that contain them
+        if f'"{flag}"' not in source and f"'{flag}'" not in source:
+            errors.append(
+                f"{where}: snippet passes {flag!r} which {mod} "
+                f"({os.path.relpath(src, REPO)}) does not define"
+            )
+
+
+def check_file(path: str, errors: list[str]) -> None:
+    rel = os.path.relpath(path, REPO)
+    text = open(path).read()
+    for m in MD_LINK.finditer(text):
+        target = m.group(1).split("#", 1)[0]
+        if not target or target.startswith(("http:", "https:", "mailto:")):
+            continue
+        if not (
+            os.path.exists(os.path.join(os.path.dirname(path), target))
+            or os.path.exists(os.path.join(REPO, target))
+        ):
+            errors.append(f"{rel}: broken link -> {target!r}")
+    for m in PATH_REF.finditer(text):
+        if not os.path.exists(os.path.join(REPO, m.group(1))):
+            errors.append(f"{rel}: stale path reference {m.group(1)!r}")
+    for line in iter_fenced_lines(text):
+        check_snippet_line(line, rel, errors)
+
+
+def main() -> int:
+    errors: list[str] = []
+    files = doc_files()
+    for path in files:
+        check_file(path, errors)
+    for e in errors:
+        print(f"check_docs: {e}", file=sys.stderr)
+    print(
+        f"check_docs: {len(files)} files, "
+        f"{len(errors)} problem{'s' if len(errors) != 1 else ''}"
+    )
+    # never the raw count: 256 failures would wrap to exit status 0
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -262,10 +262,31 @@ def plan(
 ) -> SearchPlan:
     """Resolve a full :class:`SearchPlan` from shapes.
 
+    Args:
+      rows: padded index rows (``DistributedIndex.rows``) of the index
+        (or segment view) the plan will scan.
+      n_leaves: vocabulary-tree leaf count.
+      n_queries: query rows per batch (pre-probe-expansion).
+      n_shards: device row-shards (``meshutil.data_axis_size``).
+      k: neighbours returned per query; ``probes``: multi-probe width.
+      layout: ``"point_major"``, ``"query_routed"``, or ``"auto"``.
+      impl: l2topk kernel implementation (``"xla"``/``"pallas"``/``"auto"``).
+      wire_dtype: routed-shuffle payload dtype.
+      block_rows/q_cap/q_tile/p_cap: pin a budget instead of deriving it;
+        ``query_capacity_factor``: routing headroom for hot shards.
+      use_observations: prefer measured ms/image over the shape model
+        (see below).
+
+    Returns:
+      A fully resolved (budgeted) :class:`SearchPlan`.
+
+    Raises:
+      ValueError: ``probes > n_leaves``; an unknown ``layout``; or
+        ``layout="query_routed"`` when ``n_leaves`` does not divide over
+        the shards (leaf ownership is a contiguous range per shard).
+
     ``layout="auto"`` budgets *both* layouts and keeps the one with the
-    lower modelled scan cost; ``query_routed`` additionally requires
-    ``n_leaves`` to divide evenly over the shards (leaf ownership is a
-    contiguous range per shard).
+    lower modelled scan cost.
 
     ``use_observations=True`` closes the cost-model loop (ROADMAP): when
     *both* candidate plans have measured ms/image under their exact plan

@@ -114,11 +114,22 @@ def build_lookup(
     """Assign queries to their ``probes`` nearest leaves and build the CSR
     table (jit-able; ``probes`` static).
 
-    With multi-probe, each query expands into ``probes`` rows (same vector,
-    one row per probed leaf). ``qids`` then hold *flat merge slots*
-    ``query_id * probes + probe_rank`` — a permutation of
-    ``arange(Q * probes)`` — which the engine executors scatter into and
-    fold back to one k-row per query at merge time.
+    Args:
+      tree: the vocabulary :class:`~repro.core.tree.VocabTree`.
+      queries: ``(Q, d)`` query descriptors (any float dtype; routing
+        arithmetic is f32).
+      probes: leaves visited per query (multi-probe width T, static).
+
+    Returns:
+      A :class:`LookupTable` of ``Q * probes`` rows, leaf-sorted with CSR
+      offsets. With multi-probe, each query expands into ``probes`` rows
+      (same vector, one row per probed leaf); ``qids`` then hold *flat
+      merge slots* ``query_id * probes + probe_rank`` — a permutation of
+      ``arange(Q * probes)`` — which the engine executors scatter into
+      and fold back to one k-row per query at merge time.
+
+    Raises:
+      ValueError: ``probes < 1`` or ``probes > tree.n_leaves``.
     """
     if probes < 1:
         raise ValueError(f"{probes=} must be >= 1")

@@ -68,3 +68,30 @@ def data_axis_size(mesh: Mesh) -> int:
 
 def round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
+
+
+def shard_submeshes(mesh: Mesh, n_shards: int) -> tuple[Mesh, ...]:
+    """Per-shard meshes for scatter-gather serving (one entry per shard).
+
+    When the mesh's devices split evenly over ``n_shards`` (and there is
+    more than one device), each shard gets its own disjoint device group —
+    shard scans then run on separate hardware. Otherwise every shard
+    shares ``mesh`` unchanged: the sequential-but-isolated fallback, where
+    shard scans run one after another on the same devices with identical
+    numerics (the bit-identity tests run in this regime).
+    """
+    if n_shards < 1:
+        raise ValueError(f"{n_shards=} must be >= 1")
+    if n_shards == 1:
+        return (mesh,)
+    devs = mesh.devices  # shaped (axis0, axis1, ...) in axis_names order
+    rows = devs.shape[0]
+    per = rows // n_shards
+    if per < 1 or rows % n_shards or devs.size == 1:
+        return (mesh,) * n_shards
+    # slice along the leading (batch) axis only: every other axis — e.g.
+    # a model axis — keeps its devices and its meaning inside each shard
+    return tuple(
+        Mesh(devs[s * per:(s + 1) * per], mesh.axis_names)
+        for s in range(n_shards)
+    )

@@ -15,3 +15,4 @@ from repro.index.lifecycle import (  # noqa: F401
 )
 from repro.index.manifest import Manifest  # noqa: F401
 from repro.index.segment import Segment  # noqa: F401
+from repro.index.sharding import ShardedIndex, ShardPlan  # noqa: F401

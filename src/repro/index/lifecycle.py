@@ -50,6 +50,7 @@ from repro.distributed.meshutil import data_axis_size, local_mesh
 from repro.index import manifest as manifest_lib
 from repro.index.manifest import Manifest
 from repro.index.segment import Segment, masked_view, next_seq, segment_name
+from repro.index.sharding import ShardPlan
 
 
 # the pre-segment serving.persist format (one monolithic checkpoint);
@@ -110,6 +111,7 @@ class Index:
         next_id: int = 0,
         meta: dict | None = None,
         wire_dtype=jnp.float32,
+        shard_plan: ShardPlan | None = None,
     ):
         self.directory = directory
         self.tree = tree
@@ -117,6 +119,8 @@ class Index:
         self.wire_dtype = wire_dtype
         self._committed: list[Segment] = list(segments)
         self._staged: list[Segment] = []
+        self._shard_plan = shard_plan
+        self._shard_plan_dirty = False
         self._tombstones = (
             np.sort(np.asarray(tombstones, np.int64))
             if tombstones is not None and len(tombstones)
@@ -144,13 +148,28 @@ class Index:
     ) -> "Index":
         """New empty index bound to ``tree``.
 
-        With a ``directory`` the tree checkpoint and an empty manifest are
-        written immediately, so even an index that crashes before its first
-        commit reopens cleanly. ``directory=None`` gives an *ephemeral*
-        index (same API, nothing on disk) — the adapter the legacy
-        in-memory paths wrap themselves in. ``overwrite=True`` clears a
-        previous index's artifacts (manifests, segments, tree, tombstones)
-        but leaves unrelated files — e.g. a ``corpus/`` store — alone.
+        Args:
+          tree: the vocabulary :class:`~repro.core.tree.VocabTree` every
+            later append/search routes through.
+          directory: durable home of the index; ``None`` gives an
+            *ephemeral* index (same API, nothing on disk) — the adapter
+            the legacy in-memory paths wrap themselves in.
+          mesh: device mesh (default: ``meshutil.local_mesh()``).
+          wire_dtype: routed-shuffle payload dtype for appends (float32
+            keeps grown indexes bit-identical to one-shot rebuilds).
+          extra: user metadata carried in every manifest.
+          overwrite: clear a previous index's artifacts (manifests,
+            segments, tree, tombstones) — unrelated files (e.g. a
+            ``corpus/`` store) are left alone.
+
+        Returns:
+          The new handle. With a ``directory``, the tree checkpoint and
+          an empty manifest are written immediately, so even an index
+          that crashes before its first commit reopens cleanly.
+
+        Raises:
+          FileExistsError: ``directory`` already holds an index and
+            ``overwrite`` is False.
         """
         idx = cls(directory, tree, mesh, wire_dtype=wire_dtype, meta=extra)
         if directory:
@@ -176,8 +195,25 @@ class Index:
 
     @classmethod
     def open(cls, directory: str, mesh=None) -> "Index":
-        """Restore the last *committed* state. Orphan segments from an
-        interrupted append (no manifest references them) are ignored."""
+        """Restore the last *committed* state from ``directory``.
+
+        Args:
+          directory: an index home previously written by :meth:`create` +
+            :meth:`commit`.
+          mesh: device mesh to place segments on (default: local mesh).
+
+        Returns:
+          An :class:`Index` at the highest complete manifest version —
+          orphan segments from an interrupted append (no manifest
+          references them) are ignored.
+
+        Raises:
+          FileNotFoundError: no committed manifest (including the
+            pre-segment legacy ``index_ckpt/`` format, reported
+            actionably).
+          ValueError: the committed segments were built for a different
+            device-shard count than ``mesh`` provides.
+        """
         m = manifest_lib.latest(directory)
         if m is None:
             if has_legacy_index(directory):
@@ -211,6 +247,9 @@ class Index:
             next_id=m.next_id,
             meta=m.meta,
             wire_dtype=wire,
+            shard_plan=(
+                ShardPlan.from_json(m.shard_plan) if m.shard_plan else None
+            ),
         )
 
     @classmethod
@@ -271,6 +310,30 @@ class Index:
         return self._tombstones.copy()
 
     @property
+    def shard_plan(self) -> ShardPlan | None:
+        """The scatter-gather :class:`~repro.index.sharding.ShardPlan`
+        bound to this index (persisted in the manifest), or ``None``."""
+        return self._shard_plan
+
+    def set_shard_plan(self, plan: ShardPlan | None) -> None:
+        """Stage a shard plan (or clear with ``None``); durable in the
+        manifest at the next :meth:`commit`.
+
+        Raises ``ValueError`` when ``plan`` does not assign exactly this
+        index's current segments — derive one with
+        ``ShardPlan.for_index(index, n_shards, strategy)``.
+        """
+        if plan is not None and not plan.covers(
+            [s.name for s in self.segments]
+        ):
+            raise ValueError(
+                "shard plan does not cover the index's current segments; "
+                "derive one with ShardPlan.for_index"
+            )
+        self._shard_plan = plan
+        self._shard_plan_dirty = True
+
+    @property
     def rows(self) -> int:
         """Live (searchable) descriptor rows: valid minus tombstoned."""
         return sum(s.valid_rows for s in self.segments) - len(self._tombstones)
@@ -315,6 +378,7 @@ class Index:
         *,
         version: int | None = None,
         segments: Sequence[Segment] | None = None,
+        shard_plan: ShardPlan | None = None,
     ) -> Manifest:
         segs = self._committed if segments is None else segments
         return Manifest(
@@ -323,7 +387,27 @@ class Index:
             tombstones=tombstones_rel,
             next_id=self._next_id,
             meta=self._user_meta,
+            shard_plan=shard_plan.to_json() if shard_plan else None,
         )
+
+    def _plan_for(self, segments: Sequence[Segment]) -> ShardPlan | None:
+        """The bound shard plan updated to ``segments``: unchanged when it
+        still covers them, re-derived (same strategy, same shard count)
+        after an append/compact changed the segment set. Explicit plans
+        cannot follow a changed set and are dropped."""
+        p = self._shard_plan
+        if p is None:
+            return None
+        names = [s.name for s in segments]
+        if p.covers(names):
+            return p
+        if p.strategy == "round_robin":
+            return ShardPlan.round_robin(names, p.n_shards)
+        if p.strategy == "balanced":
+            return ShardPlan.balanced(
+                names, [s.valid_rows for s in segments], p.n_shards
+            )
+        return None
 
     # -- write path ---------------------------------------------------------
     def _segments_dir(self) -> str:
@@ -361,9 +445,21 @@ class Index:
 
         Assignment runs in waves through ``build_index_fn`` exactly like a
         one-shot build, so an index grown by appends is the same index a
-        monolithic job would have produced. ``ids`` default to the next
-        contiguous range of the global id space; explicit ids must be
-        non-negative and fresh.
+        monolithic job would have produced.
+
+        Args:
+          vecs: ``(n, dim)`` descriptor rows (cast to float32).
+          ids: explicit non-negative descriptor ids; default is the next
+            contiguous range of the global id space.
+          wave_rows: assignment wave size (default: auto-snapped).
+          capacity_factor: routing headroom for skewed leaves.
+
+        Returns:
+          The staged segment's name.
+
+        Raises:
+          ValueError: wrong shape, zero rows, negative/duplicate/
+            colliding ids, or an id past the int32 id space.
         """
         vecs = np.asarray(vecs, np.float32)
         if vecs.ndim != 2 or vecs.shape[1] != self.dim:
@@ -437,10 +533,14 @@ class Index:
     def delete(self, ids) -> int:
         """Tombstone descriptor ids (staged; durable after :meth:`commit`).
 
-        Only ids actually present in the index (and not already deleted)
-        are recorded; returns how many were newly tombstoned. Tombstoned
-        rows stop matching immediately for this handle and are physically
-        dropped at the next :meth:`compact`.
+        Args:
+          ids: descriptor ids to delete; absent or already-deleted ids
+            are ignored (idempotent).
+
+        Returns:
+          How many ids were *newly* tombstoned. Tombstoned rows stop
+          matching immediately for this handle and are physically
+          dropped at the next :meth:`compact`.
         """
         ids = np.unique(np.asarray(ids, np.int64))
         ids = ids[~np.isin(ids, self._tombstones)]
@@ -454,21 +554,35 @@ class Index:
         return int(ids.size)
 
     def commit(self) -> int:
-        """Publish staged segments + tombstones: one atomic manifest bump.
+        """Publish staged segments + tombstones + metadata + shard plan:
+        one atomic manifest bump.
 
         Idempotent — committing with nothing staged returns the current
         version without writing. A crash *before* the manifest rename
         leaves the previous committed state fully intact (staged segment
         checkpoints become ignorable orphans); a crash *after* it leaves
-        the new state fully committed. There is no in-between.
+        the new state fully committed. There is no in-between. A bound
+        shard plan that no longer covers the staged segment set is
+        re-derived (same strategy) in the same bump.
+
+        Returns:
+          The committed manifest version.
+
+        Raises:
+          FileExistsError: another handle committed this version
+            concurrently (exclusive publication) — reopen and retry.
+          OSError: the durable write failed; the handle stays staged so
+            a retried ``commit()`` re-attempts publication.
         """
-        if not (self._staged or self._tombstones_dirty or self._meta_dirty):
+        if not (self._staged or self._tombstones_dirty or self._meta_dirty
+                or self._shard_plan_dirty):
             return self._version
         # durable writes FIRST, memory state only after they succeed — a
         # failed write leaves the handle still-staged, so a retried
         # commit() re-attempts the publication instead of no-opping
         version = self._version + 1
         segments = self._committed + self._staged
+        plan = self._plan_for(segments)
         if self.directory:
             rel = None
             if len(self._tombstones):
@@ -477,13 +591,16 @@ class Index:
                 )
             manifest_lib.write(
                 self.directory,
-                self._manifest(rel, version=version, segments=segments),
+                self._manifest(rel, version=version, segments=segments,
+                               shard_plan=plan),
             )
         self._version = version
         self._committed = segments
         self._staged = []
+        self._shard_plan = plan
         self._tombstones_dirty = False
         self._meta_dirty = False
+        self._shard_plan_dirty = False
         return version
 
     def compact(self) -> str | None:
@@ -494,8 +611,18 @@ class Index:
         ``build_index`` over the remaining corpus (in original append
         order) would produce — arrays and all. Commits atomically; old
         segment checkpoints are garbage-collected only after the manifest
-        bump. Returns the new segment's name (``None`` for an index with
-        no live rows)."""
+        bump; a bound derivable shard plan is re-derived over the single
+        new segment (explicit plans are dropped).
+
+        Returns:
+          The new segment's name, or ``None`` for an index with no live
+          rows.
+
+        Raises:
+          FileExistsError: a concurrent commit won the version race.
+          Exception: a failed rebuild/write propagates with segments AND
+            tombstones exactly as committed (no resurrection, no loss).
+        """
         old = self.segments
         keep_v, keep_i = [], []
         for seg in old:
@@ -529,14 +656,17 @@ class Index:
                 seg.save(self._segments_dir())
             new_committed = [seg]
         version = self._version + 1
+        plan = self._plan_for(new_committed)
         if self.directory:
             manifest_lib.write(
                 self.directory,
                 self._manifest(None, version=version,
-                               segments=new_committed),
+                               segments=new_committed, shard_plan=plan),
             )
         self._committed = new_committed
         self._staged = []
+        self._shard_plan = plan
+        self._shard_plan_dirty = False
         self._tombstones = np.empty((0,), np.int64)
         self._tombstones_dirty = False
         self._meta_dirty = False
@@ -628,10 +758,26 @@ class Index:
         """k-NN over every live row: one shared lookup build, one executor
         run per segment, one ascending-distance merge across segments.
 
-        ``plan`` may carry a :class:`SearchPlan` template whose fields
-        (layout, k, probes, impl, budgets) override the keyword arguments;
-        budgets are still re-resolved per segment, since tile sizes must
-        divide each segment's shard rows.
+        Args:
+          queries: ``(q, dim)`` query rows (cast to float32).
+          k: neighbours per query.
+          plan: optional :class:`SearchPlan` template whose fields
+            (layout, k, probes, impl, budgets) override the keyword
+            arguments; budgets are still re-resolved per segment, since
+            tile sizes must divide each segment's shard rows.
+          layout/probes/impl/block_rows/q_cap/q_tile/p_cap/
+            use_observations: per-call plan knobs, as in
+            :func:`repro.core.engine.plan`.
+
+        Returns:
+          A :class:`SearchResult`: ``(q, k)`` ids (``-1`` where fewer
+          than ``k`` live rows matched) and squared-L2 dists (``inf``
+          there), plus exact pairs/overflow counters. Bit-identical to a
+          one-shot build+search over the concatenated live rows.
+
+        Raises:
+          ValueError: invalid plan knobs (see
+            :func:`repro.core.engine.plan`).
         """
         if plan is not None:
             layout, k, probes, impl = plan.layout, plan.k, plan.probes, plan.impl

@@ -38,6 +38,9 @@ class Manifest:
     tombstones: str | None  # relative path of the tombstone .npy, if any
     next_id: int  # id allocator high-water mark
     meta: dict  # user extra + static structure (fanouts, dim, ...)
+    # serialized repro.index.sharding.ShardPlan (scatter-gather serving);
+    # absent on pre-sharding manifests, so from_json defaults it
+    shard_plan: dict | None = None
 
     def to_json(self) -> dict:
         return {
@@ -47,6 +50,7 @@ class Manifest:
             "tombstones": self.tombstones,
             "next_id": int(self.next_id),
             "meta": dict(self.meta),
+            "shard_plan": self.shard_plan,
         }
 
     @classmethod
@@ -57,6 +61,7 @@ class Manifest:
             tombstones=d.get("tombstones"),
             next_id=int(d.get("next_id", 0)),
             meta=dict(d.get("meta", {})),
+            shard_plan=d.get("shard_plan"),
         )
 
 

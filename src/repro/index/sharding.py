@@ -1,0 +1,403 @@
+"""Sharded scatter-gather search: partition an :class:`Index` across shards.
+
+The paper's scalability story (§2.4, Fig 5) is distributed search: the 30B-
+descriptor collection is split into partitions, map tasks scan partitions
+independently, and a reduce step fuses per-partition candidate lists into
+the final top-k. :class:`ShardPlan` + :class:`ShardedIndex` are that
+workflow over the segment lifecycle: an explicit, manifest-persisted
+mapping of the index's immutable segments onto N shards, and a
+scatter-gather ``search`` that scans each shard's segments independently
+and merges the per-shard candidates.
+
+Exactness. The gather merge is **bit-identical** to the unsharded
+``Index.search`` because every candidate carries its *global merge slot*
+``segment_ordinal * k + position``: the unsharded merge is a stable
+ascending-distance sort over the segment-ordered concatenation, i.e. a
+total order by ``(distance, slot)``. Each shard keeps its local top-k
+under that same total order (shard-local segment lists preserve global
+append order, so a stable local sort *is* slot order), and the top-k of a
+union of per-shard top-k lists under a total order equals the top-k of all
+candidates. Ties — exact duplicate vectors included — therefore resolve
+identically at any shard count.
+
+Parallelism. Per-shard scans reuse the engine's jit-cached executors
+(:func:`repro.core.search.search_with_lookup`); the lookup table is built
+once and broadcast to every shard (the paper ships it to every map task
+via HDFS). With enough devices, :func:`repro.distributed.meshutil.
+shard_submeshes` gives each shard its own device group so shard scans run
+on disjoint hardware; on one device every shard shares the mesh and runs
+sequentially-but-isolated — same results, summed wall time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import SearchPlan, plan as make_plan
+from repro.core.engine.executors import SearchResult
+from repro.core.search import jit_build_lookup, search_with_lookup
+from repro.distributed.meshutil import data_axis_size, shard_submeshes
+
+STRATEGIES = ("round_robin", "balanced", "explicit")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardPlan:
+    """Explicit mapping of segment names onto shards.
+
+    ``assignment[s]`` lists the segment names owned by shard ``s``, each in
+    global append order (the order the index's manifest lists them) — the
+    invariant the bit-identical merge relies on. Plans are value objects:
+    derive one with :meth:`round_robin` / :meth:`balanced` /
+    :meth:`explicit` (or :meth:`for_index`), persist it via
+    ``Index.set_shard_plan`` + ``commit`` and it comes back from
+    ``Index.open``.
+    """
+
+    n_shards: int
+    strategy: str  # "round_robin" | "balanced" | "explicit"
+    assignment: tuple[tuple[str, ...], ...]  # per shard, global order
+
+    def __post_init__(self):
+        if self.n_shards < 1:
+            raise ValueError(f"{self.n_shards=} must be >= 1")
+        if self.strategy not in STRATEGIES:
+            raise ValueError(
+                f"unknown shard strategy {self.strategy!r}; want {STRATEGIES}"
+            )
+        if len(self.assignment) != self.n_shards:
+            raise ValueError(
+                f"assignment has {len(self.assignment)} shards; plan says "
+                f"{self.n_shards}"
+            )
+        flat = [name for shard in self.assignment for name in shard]
+        if len(set(flat)) != len(flat):
+            raise ValueError("shard plan assigns a segment twice")
+
+    # -- derivation ---------------------------------------------------------
+    @classmethod
+    def round_robin(cls, segment_names: Sequence[str],
+                    n_shards: int) -> "ShardPlan":
+        """Segment ``i`` goes to shard ``i % n_shards`` — the paper's
+        partition-by-arrival default; even counts, arbitrary sizes."""
+        names = list(segment_names)
+        return cls(
+            n_shards=n_shards,
+            strategy="round_robin",
+            assignment=tuple(
+                tuple(names[s::n_shards]) for s in range(n_shards)
+            ),
+        )
+
+    @classmethod
+    def balanced(cls, segment_names: Sequence[str], sizes: Sequence[int],
+                 n_shards: int) -> "ShardPlan":
+        """Size-balanced greedy (LPT): biggest segment first onto the
+        least-loaded shard, so shard scan times stay even when segment
+        sizes are skewed (many small appends + one compacted giant)."""
+        names = list(segment_names)
+        if len(sizes) != len(names):
+            raise ValueError(f"{len(sizes)} sizes for {len(names)} segments")
+        order = sorted(range(len(names)), key=lambda i: (-int(sizes[i]), i))
+        loads = [0] * n_shards
+        owner: dict[int, int] = {}
+        for i in order:
+            s = min(range(n_shards), key=lambda j: (loads[j], j))
+            owner[i] = s
+            loads[s] += int(sizes[i])
+        return cls(
+            n_shards=n_shards,
+            strategy="balanced",
+            # global (append) order within each shard, not LPT pick order
+            assignment=tuple(
+                tuple(names[i] for i in range(len(names)) if owner[i] == s)
+                for s in range(n_shards)
+            ),
+        )
+
+    @classmethod
+    def explicit(cls, assignment: Sequence[Sequence[str]]) -> "ShardPlan":
+        """Pin segments to shards by hand (operator override)."""
+        return cls(
+            n_shards=len(assignment),
+            strategy="explicit",
+            assignment=tuple(tuple(s) for s in assignment),
+        )
+
+    @classmethod
+    def for_index(cls, index, n_shards: int,
+                  strategy: str = "round_robin") -> "ShardPlan":
+        """Derive a plan over ``index``'s current segments (committed +
+        staged, in append order).
+
+        Raises ``ValueError`` for an unknown or non-derivable strategy
+        (``explicit`` plans cannot be derived — build one with
+        :meth:`explicit`).
+        """
+        segs = index.segments
+        if strategy == "round_robin":
+            return cls.round_robin([s.name for s in segs], n_shards)
+        if strategy == "balanced":
+            return cls.balanced(
+                [s.name for s in segs], [s.valid_rows for s in segs], n_shards
+            )
+        raise ValueError(
+            f"cannot derive a {strategy!r} plan; want one of "
+            "('round_robin', 'balanced')"
+        )
+
+    # -- queries ------------------------------------------------------------
+    def shard_of(self, segment_name: str) -> int:
+        for s, names in enumerate(self.assignment):
+            if segment_name in names:
+                return s
+        raise KeyError(f"segment {segment_name!r} not in shard plan")
+
+    def covers(self, segment_names: Sequence[str]) -> bool:
+        """True when the plan assigns exactly the given segment set (the
+        staleness check: an append/compact since the plan was made means a
+        re-derive is needed)."""
+        flat = {n for shard in self.assignment for n in shard}
+        return flat == set(segment_names)
+
+    def rederived(self, index) -> "ShardPlan":
+        """The same strategy re-applied to ``index``'s current segments —
+        how a persisted plan follows appends and compactions. Explicit
+        plans cannot be re-derived and raise ``ValueError``."""
+        return self.for_index(index, self.n_shards, self.strategy)
+
+    # -- persistence --------------------------------------------------------
+    def to_json(self) -> dict:
+        return {
+            "n_shards": self.n_shards,
+            "strategy": self.strategy,
+            "assignment": [list(s) for s in self.assignment],
+        }
+
+    @classmethod
+    def from_json(cls, d: dict) -> "ShardPlan":
+        return cls(
+            n_shards=int(d["n_shards"]),
+            strategy=d["strategy"],
+            assignment=tuple(tuple(s) for s in d["assignment"]),
+        )
+
+    def describe(self) -> str:
+        sizes = "/".join(str(len(s)) for s in self.assignment)
+        return f"{self.strategy} x{self.n_shards} (segments {sizes})"
+
+
+# ---------------------------------------------------------------------------
+# merge helpers — shared by ShardedIndex (host path) and the sharded
+# serving session's gather. A *slot* is a candidate's position in the
+# unsharded segment-ordered concatenation: segment_ordinal * k + column.
+# ---------------------------------------------------------------------------
+
+
+def shard_local_partial(
+    per_segment: Sequence[SearchResult], ordinals: Sequence[int], k: int
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Fold one shard's per-segment k-NN tables into its local top-k.
+
+    ``ordinals`` are the segments' global append positions (ascending, so
+    the concatenated slot row is strictly increasing and a *stable* sort by
+    distance is exactly the ``(distance, slot)`` total order). Returns
+    ``(ids, dists, slots)`` of shape ``(q, k)`` each.
+    """
+    ids = np.concatenate([np.asarray(r.ids) for r in per_segment], axis=1)
+    dists = np.concatenate([np.asarray(r.dists) for r in per_segment], axis=1)
+    q = ids.shape[0]
+    slots = np.concatenate(
+        [np.arange(g * k, g * k + k, dtype=np.int64) for g in ordinals]
+    )
+    slots = np.broadcast_to(slots, (q, slots.size))
+    sel = np.argsort(dists, axis=1, kind="stable")[:, :k]
+    return (
+        np.take_along_axis(ids, sel, axis=1),
+        np.take_along_axis(dists, sel, axis=1),
+        np.take_along_axis(slots, sel, axis=1),
+    )
+
+
+def gather_merge(
+    partials: Sequence[tuple[np.ndarray, np.ndarray, np.ndarray]], k: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Fuse per-shard ``(ids, dists, slots)`` partials into the global
+    top-k, ordered by ``(distance, slot)`` — bit-identical to the unsharded
+    stable merge over the segment-ordered concatenation."""
+    ids = np.concatenate([p[0] for p in partials], axis=1)
+    dists = np.concatenate([p[1] for p in partials], axis=1)
+    slots = np.concatenate([p[2] for p in partials], axis=1)
+    # primary key dists, ties by global slot (np.lexsort: last key wins)
+    sel = np.lexsort((slots, dists), axis=1)[:, :k]
+    return (
+        np.take_along_axis(ids, sel, axis=1),
+        np.take_along_axis(dists, sel, axis=1),
+    )
+
+
+class ShardedIndex:
+    """Scatter-gather search view over an :class:`Index` and a
+    :class:`ShardPlan`.
+
+    Wraps — never copies — the underlying index: segments stay where the
+    lifecycle put them, tombstones are applied by the same masked views,
+    and the plan only decides which shard scans which segment. Construct
+    with an explicit ``plan``, or give ``n_shards`` (+ ``strategy``) to
+    derive one; a persisted plan on the index is picked up when neither is
+    given.
+    """
+
+    def __init__(
+        self,
+        index,
+        plan: ShardPlan | None = None,
+        *,
+        n_shards: int | None = None,
+        strategy: str = "round_robin",
+    ):
+        self.index = index
+        if plan is None:
+            if n_shards is not None:
+                plan = ShardPlan.for_index(index, n_shards, strategy)
+            elif getattr(index, "shard_plan", None) is not None:
+                plan = index.shard_plan
+            else:
+                raise ValueError(
+                    "need a ShardPlan, n_shards, or an index with a "
+                    "persisted shard plan"
+                )
+        if not plan.covers([s.name for s in index.segments]):
+            raise ValueError(
+                "shard plan does not cover the index's current segments "
+                f"({plan.describe()} vs {index.n_segments} segments); "
+                "re-derive with plan.rederived(index)"
+            )
+        self.plan = plan
+        self._meshes = shard_submeshes(index.mesh, plan.n_shards)
+
+    @property
+    def n_shards(self) -> int:
+        return self.plan.n_shards
+
+    def persist_plan(self) -> None:
+        """Stage the plan into the index manifest (durable at the next
+        ``commit``)."""
+        self.index.set_shard_plan(self.plan)
+
+    def shard_views(self) -> list[list[tuple[int, object]]]:
+        """Per shard: ``(global_ordinal, masked DistributedIndex view)``
+        pairs in global append order. Views are the index's cached
+        tombstone-masked views — refreshed automatically after
+        append/delete/compact on the underlying index."""
+        by_name = {
+            s.name: (g, v)
+            for g, (s, v) in enumerate(
+                zip(self.index.segments, self.index.segment_views())
+            )
+        }
+        return [
+            [by_name[name] for name in shard] for shard in self.plan.assignment
+        ]
+
+    def stats(self) -> dict:
+        segs = {s.name: s for s in self.index.segments}
+        per = [
+            {
+                "shard": s,
+                "segments": list(names),
+                "rows": sum(segs[n].valid_rows for n in names),
+            }
+            for s, names in enumerate(self.plan.assignment)
+        ]
+        return {"plan": self.plan.to_json(), "shards": per}
+
+    def search(
+        self,
+        queries,
+        k: int = 10,
+        *,
+        plan: SearchPlan | None = None,
+        layout: str = "auto",
+        probes: int = 1,
+        impl: str = "xla",
+        block_rows: int | None = None,
+        q_cap: int | None = None,
+        q_tile: int | None = None,
+        p_cap: int | None = None,
+        use_observations: bool = False,
+    ) -> SearchResult:
+        """Scatter-gather k-NN: one shared lookup build, each shard scans
+        its segments with the engine's jit-cached executors, per-shard
+        candidates merge by ``(distance, slot)``.
+
+        Args mirror :meth:`Index.search` exactly — including the
+        ``plan`` template, whose fields override the keyword arguments.
+        Results are bit-identical to it (ids and distances, both
+        layouts, any ``probes``, tombstones respected) at every shard
+        count — see the module docstring for the slot argument.
+
+        Returns a :class:`SearchResult`; ``pairs`` / ``q_cap_overflow``
+        are summed across shards. Raises ``ValueError`` via ``plan()``
+        for invalid layout/probes combinations.
+        """
+        if plan is not None:
+            layout, k, probes, impl = (
+                plan.layout, plan.k, plan.probes, plan.impl,
+            )
+            block_rows = plan.block_rows if block_rows is None else block_rows
+            q_cap = plan.q_cap if q_cap is None else q_cap
+            q_tile = plan.q_tile if q_tile is None else q_tile
+            p_cap = plan.p_cap if p_cap is None else p_cap
+        queries = jnp.asarray(queries, jnp.float32)
+        q = queries.shape[0]
+        views = self.shard_views()
+        if not any(views):
+            return SearchResult(
+                ids=jnp.full((q, k), -1, jnp.int32),
+                dists=jnp.full((q, k), jnp.inf, jnp.float32),
+                pairs=jnp.zeros((), jnp.float32),
+                q_cap_overflow=jnp.zeros((), jnp.int32),
+            )
+        lookup = jit_build_lookup(self.index.tree, queries, probes=probes)
+        partials = []
+        pairs = overflow = 0
+        for shard, mesh in zip(views, self._meshes):
+            if not shard:
+                continue  # more shards than segments: an empty scatter leg
+            n_shards = data_axis_size(mesh)
+            per_seg, ordinals = [], []
+            for g, view in shard:
+                p = make_plan(
+                    rows=view.rows,
+                    n_leaves=self.index.n_leaves,
+                    n_queries=q,
+                    n_shards=n_shards,
+                    k=k,
+                    probes=probes,
+                    layout=layout,
+                    impl=impl,
+                    block_rows=block_rows,
+                    q_cap=q_cap,
+                    q_tile=q_tile,
+                    p_cap=p_cap,
+                    use_observations=use_observations,
+                )
+                per_seg.append(
+                    search_with_lookup(view, lookup, p, mesh, n_queries=q)
+                )
+                ordinals.append(g)
+            partials.append(shard_local_partial(per_seg, ordinals, k))
+            pairs = pairs + sum(r.pairs for r in per_seg)
+            overflow = overflow + sum(r.q_cap_overflow for r in per_seg)
+        ids, dists = gather_merge(partials, k)
+        return SearchResult(
+            ids=jnp.asarray(ids),
+            dists=jnp.asarray(dists),
+            pairs=pairs,
+            q_cap_overflow=overflow,
+        )

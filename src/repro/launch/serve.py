@@ -76,6 +76,16 @@ def main(argv=None) -> int:
                     help="hot-leaf cache capacity in leaves (0 = off)")
     ap.add_argument("--cache-admit", type=int, default=2,
                     help="leaf routings before a leaf is admitted")
+    ap.add_argument("--shards", type=int, default=None,
+                    help="scatter-gather serving over N index shards "
+                         "(default: the index's persisted shard plan, or "
+                         "unsharded)")
+    ap.add_argument("--shard-plan", choices=("round_robin", "balanced"),
+                    default=None,
+                    help="segment->shard assignment strategy for --shards "
+                         "(default: the index's persisted strategy, else "
+                         "round_robin; persisted in the index manifest "
+                         "when --index-dir is given)")
     # workload
     ap.add_argument("--trace", choices=("fixed", "uniform", "zipf"),
                     default=None,
@@ -104,8 +114,14 @@ def main(argv=None) -> int:
     from repro.core.tree import build_tree
     from repro.data import synth
     from repro.distributed.meshutil import local_mesh
-    from repro.serving import MicroBatcher, SearchSession, TraceLoadGenerator
+    from repro.serving import (
+        MicroBatcher,
+        SearchSession,
+        ShardedSearchSession,
+        TraceLoadGenerator,
+    )
     from repro.serving import persist
+    from repro.serving.session import load_or_build_index
 
     mesh = local_mesh()
     dpi = args.desc_per_image or max(1, args.rows // args.images)
@@ -114,10 +130,32 @@ def main(argv=None) -> int:
 
     def build_fn():
         nonlocal corpus_vecs
+        from repro.index import Index
+
         vecs_np = _build_corpus(args, dpi)
         t0 = time.perf_counter()
         vecs = jnp.asarray(vecs_np)
         tree = build_tree(vecs, tuple(args.fanout), key=jax.random.PRNGKey(1))
+        extra = {
+            "images": args.images, "desc_per_image": dpi,
+            "corpus_seed": args.seed,
+        }
+        corpus_vecs = vecs_np
+        if args.index_dir:
+            persist.save_corpus(args.index_dir, vecs_np)
+        if args.shards and args.shards > 1:
+            # one appended segment per shard so every scatter leg owns
+            # real rows (segment search is bit-identical to one-shot, so
+            # this only changes the partitioning, never the results)
+            idx = Index.create(tree, args.index_dir or None, mesh=mesh,
+                               extra=extra, overwrite=True)
+            for chunk in np.array_split(vecs_np, args.shards):
+                idx.append(chunk)
+            idx.commit()
+            print(f"index: built {idx.rows} rows ({tree.n_leaves} leaves, "
+                  f"{idx.n_segments} segments) in "
+                  f"{time.perf_counter() - t0:.2f}s")
+            return idx
         # float32 wire, matching the lifecycle facade's recorded default —
         # a later `launch.index --index-dir` append then grows this index
         # with the same dtype instead of silently mixing bf16/f32 segments
@@ -126,13 +164,7 @@ def main(argv=None) -> int:
         print(f"index: built {int(index.n_valid.sum())} rows "
               f"({tree.n_leaves} leaves) in {time.perf_counter() - t0:.2f}s "
               f"(overflow {int(index.overflow)})")
-        corpus_vecs = vecs_np
-        if args.index_dir:
-            persist.save_corpus(args.index_dir, vecs_np)
-        return index, tree, {
-            "images": args.images, "desc_per_image": dpi,
-            "corpus_seed": args.seed,
-        }
+        return index, tree, extra
 
     session_kw = dict(
         k=args.k, layout=args.layout, probes=args.probes, impl=args.impl,
@@ -142,10 +174,50 @@ def main(argv=None) -> int:
     if args.buckets:
         session_kw["buckets"] = [int(b) for b in args.buckets.split(",")]
     t0 = time.perf_counter()
-    session, meta = SearchSession.load_or_build(
+    idx, meta = load_or_build_index(
         args.index_dir, build_fn=build_fn, mesh=mesh, rebuild=args.rebuild,
-        **session_kw,
     )
+    if args.shards is not None or idx.shard_plan is not None:
+        # strategy precedence: explicit flag > the index's persisted
+        # strategy > round_robin — so `--shards N` alone never flips a
+        # persisted balanced plan back to the flag default
+        strategy = args.shard_plan or (
+            idx.shard_plan.strategy
+            if idx.shard_plan is not None
+            and idx.shard_plan.strategy != "explicit"
+            else "round_robin"
+        )
+        session = ShardedSearchSession(
+            idx, mesh=mesh, shards=args.shards,
+            shard_strategy=strategy, **session_kw,
+        )
+        shard_stats = session.per_shard_stats()["shards"]
+        empty = [s["shard"] for s in shard_stats if not s["segments"]]
+        if empty:
+            # the shard unit is a segment: a restored index with fewer
+            # segments than shards cannot spread — say so, and don't lock
+            # the degenerate topology into the manifest
+            print(
+                f"warning: {len(empty)}/{session.n_shards} shards own no "
+                f"segments (this index has {idx.n_segments}); grow it with "
+                "repro.launch.index appends, or --rebuild to re-partition "
+                "the corpus into one segment per shard"
+            )
+        # make the plan durable so later serve runs (and Index.open
+        # consumers) reuse the same scatter topology without re-deriving —
+        # only when the user explicitly asked for a real topology
+        # (--shards > 1): a serve run must not rewrite a persisted plan,
+        # or pin a pointless 1-shard plan, as a side effect
+        elif (args.index_dir and args.shards is not None and args.shards > 1
+              and session.shard_plan != idx.shard_plan):
+            idx.set_shard_plan(session.shard_plan)
+            idx.commit()
+        print(f"shards: {session.shard_plan.describe()}")
+        for s in shard_stats:
+            print(f"  shard {s['shard']}: {len(s['segments'])} segments, "
+                  f"{s['rows']} rows")
+    else:
+        session = SearchSession(idx, mesh=mesh, **session_kw)
     if meta.get("restored"):
         live = int(meta.get("live_rows", meta.get("valid_rows",
                                                   meta["rows"])))
@@ -272,6 +344,11 @@ def main(argv=None) -> int:
             "plans": session.plan_summary(),
             "plan_observations": observations(),
             "wall_s": wall,
+            "shards": (
+                session.per_shard_stats()
+                if isinstance(session, ShardedSearchSession)
+                else None
+            ),
         }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=1)

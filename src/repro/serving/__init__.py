@@ -1,14 +1,17 @@
 """Online search serving (beyond-paper: the Exp #5 batch job as a service).
 
 ``SearchSession`` (bucketed, recompile-free executors + hot-leaf cache +
-metrics), ``MicroBatcher`` (dynamic coalescing with deadline and
-backpressure), ``TraceLoadGenerator`` (uniform/Zipf replayable workloads),
-and ``persist`` (index-once/serve-many via checkpoints). See
-docs/serving.md for the architecture.
+metrics), ``ShardedSearchSession`` (scatter-gather over a
+``repro.index.ShardPlan`` — same surface, bit-identical results),
+``MicroBatcher`` (dynamic coalescing with deadline and backpressure),
+``TraceLoadGenerator`` (uniform/Zipf replayable workloads), and
+``persist`` (corpus store helpers + deprecated index shims). See
+docs/serving.md and docs/sharding.md for the architecture.
 """
 
 from repro.serving.batching import Completion, MicroBatcher  # noqa: F401
 from repro.serving.cache import HotLeafCache  # noqa: F401
 from repro.serving.metrics import LatencyStats, ServingMetrics  # noqa: F401
 from repro.serving.session import SearchSession  # noqa: F401
+from repro.serving.sharded import ShardedSearchSession  # noqa: F401
 from repro.serving.trace import Request, TraceLoadGenerator  # noqa: F401

@@ -73,8 +73,191 @@ class _BucketRuntime:
     fn: object  # jitted (segments, tree, queries, n_valid) -> (result, leaves)
 
 
+def make_bucket_runtime(
+    mesh,
+    n_leaves: int,
+    segments,
+    bucket: int,
+    *,
+    k: int,
+    probes: int,
+    layout: str,
+    impl: str,
+    ordinals=None,
+    emit_slots: bool = False,
+) -> _BucketRuntime:
+    """Build one warmed bucket rung over ``segments`` (masked views).
+
+    The fused jitted pipeline runs ONE lookup build (probe routing + leaf
+    sort) shared by every segment, then each segment's executor over it,
+    then the cross-segment ascending-distance merge on device.
+
+    ``ordinals`` are the segments' global append positions (default
+    ``0..len-1`` — the whole-index case). With ``emit_slots=True`` the
+    pipeline returns ``(result, leaves, slots)`` where ``slots[q, j] =
+    segment_ordinal * k + column`` is each candidate's position in the
+    global segment-ordered concatenation — the key the sharded
+    scatter-gather merge (:mod:`repro.index.sharding`) fuses shard
+    partials by — and the merge uses a *stable* sort so ties keep global
+    slot order at any shard count.
+    """
+    n_shards = data_axis_size(mesh)
+    if ordinals is None:
+        ordinals = tuple(range(len(segments)))
+    q_rows = bucket * probes
+    plans, q_totals, execs = [], [], []
+    for view in segments:
+        p = make_plan(
+            rows=view.rows,
+            n_leaves=n_leaves,
+            n_queries=bucket,
+            n_shards=n_shards,
+            k=k,
+            probes=probes,
+            layout=layout,
+            impl=impl,
+        )
+        q_total = lookup_q_total(p, bucket, n_shards)
+        execs.append(make_executor(
+            mesh, p, n_leaves=n_leaves,
+            shard_rows=view.rows // n_shards, q_total=q_total,
+        ))
+        plans.append(p)
+        q_totals.append(q_total)
+    primary = max(range(len(plans)), key=lambda i: segments[i].rows)
+    # each candidate's column in the global segment-ordered concatenation
+    slot_cols = jnp.concatenate([
+        jnp.arange(g * k, g * k + k, dtype=jnp.int32) for g in ordinals
+    ])
+
+    def fused(segs, tree, queries, n_valid):
+        # ONE lookup build (probe routing + leaf sort) shared by every
+        # segment; per-segment executors only see tail padding on top
+        lookup, leaves = build_lookup_bucketed(
+            tree, queries, n_valid, probes=probes, q_total=q_rows
+        )
+        outs = [
+            fn(seg, pad_lookup(lookup, qt))
+            for seg, fn, qt in zip(segs, execs, q_totals)
+        ]
+        if len(outs) == 1 and not emit_slots:
+            return outs[0], leaves
+        all_d = jnp.concatenate([r.dists[:bucket] for r in outs], axis=1)
+        all_i = jnp.concatenate([r.ids[:bucket] for r in outs], axis=1)
+        pairs = sum(r.pairs for r in outs)
+        overflow = sum(r.q_cap_overflow for r in outs)
+        if emit_slots:
+            # stable sort: ties keep concat order == ascending global slot
+            sel = jnp.argsort(all_d, axis=1, stable=True)[:, :k]
+            merged = SearchResult(
+                ids=jnp.take_along_axis(all_i, sel, axis=1),
+                dists=jnp.take_along_axis(all_d, sel, axis=1),
+                pairs=pairs,
+                q_cap_overflow=overflow,
+            )
+            return merged, leaves, slot_cols[sel]
+        # cross-segment merge: same ascending-distance fold the
+        # executors use across shards (ties keep segment-major order)
+        neg, sel = jax.lax.top_k(-all_d, k)
+        merged = SearchResult(
+            ids=jnp.take_along_axis(all_i, sel, axis=1),
+            dists=-neg,
+            pairs=pairs,
+            q_cap_overflow=overflow,
+        )
+        return merged, leaves
+
+    return _BucketRuntime(
+        bucket=bucket, plan=plans[primary], plans=tuple(plans),
+        q_total=max(q_totals), fn=jax.jit(fused),
+    )
+
+
+def attach_cache(cache: HotLeafCache, views, n_leaves: int) -> None:
+    """Point a hot-leaf cache at the live rows of ``views`` (masked
+    segment views) — padding and tombstoned rows are skipped, so a cached
+    slab can never resurrect a deleted row."""
+    if cache.capacity <= 0:
+        return
+    vv, ii, ll = [], [], []
+    for view in views:
+        ids = np.asarray(view.ids)
+        live = ids >= 0  # skip padding and tombstoned rows
+        vv.append(np.asarray(view.vecs)[live])
+        ii.append(ids[live])
+        ll.append(np.asarray(view.leaves)[live])
+    cache.attach_index(
+        np.concatenate(vv), np.concatenate(ii), np.concatenate(ll), n_leaves
+    )
+
+
+def load_or_build_index(
+    index_dir: str | None,
+    *,
+    build_fn,
+    mesh=None,
+    rebuild: bool = False,
+):
+    """Index-once / serve-many: ``Index.open`` when ``index_dir`` holds a
+    committed non-empty manifest, else ``build_fn() -> (built, tree,
+    extra)`` committed there (when a directory is given).
+
+    Returns ``(index, meta)``; ``meta["restored"]`` says which path ran.
+    Shared by :meth:`SearchSession.load_or_build` and the sharded
+    session's loader. ``build_fn`` may return either the historical
+    ``(built, tree, extra)`` triple (committed here as one segment) or an
+    already-committed :class:`~repro.index.Index` (e.g. a multi-segment
+    build shaped for sharding).
+    """
+    import warnings
+
+    from repro.index import Index, has_index, has_legacy_index
+
+    mesh = mesh if mesh is not None else local_mesh()
+    if index_dir and not rebuild and has_index(index_dir):
+        opened = Index.open(index_dir, mesh=mesh)
+        if opened.n_segments:
+            return opened, dict(opened.meta, restored=True)
+        # else: a crash between create and the first commit left a
+        # committed-empty index — rebuild instead of serving nothing
+    if index_dir and not has_index(index_dir) and has_legacy_index(index_dir):
+        warnings.warn(
+            f"{index_dir} holds a pre-segment-format index (index_ckpt/), "
+            "which this version no longer reads; rebuilding it in the "
+            "segment format",
+            stacklevel=2,
+        )
+    out = build_fn()
+    if isinstance(out, Index):
+        return out, dict(out.meta, restored=False)
+    built, tree, extra = out
+    idx = Index.create(
+        tree, index_dir or None, mesh=mesh, extra=extra, overwrite=True,
+    )
+    idx.append_built(built)
+    idx.commit()
+    return idx, dict(extra or {}, restored=False)
+
+
 class SearchSession:
-    """Long-lived search service over one :class:`repro.index.Index`."""
+    """Long-lived search service over one :class:`repro.index.Index`.
+
+    Args:
+      index: a ``repro.index.Index``, or (legacy) a raw
+        ``DistributedIndex`` with its ``tree`` as the second argument.
+      tree/mesh: only needed for the legacy pair; an ``Index`` carries
+        both.
+      k/layout/probes/impl: the serving plan knobs (see
+        :func:`repro.core.engine.plan`).
+      max_batch_rows/n_buckets/buckets: the warmed bucket ladder —
+        explicit ``buckets`` override the derived geometric ladder.
+      cache_leaves/cache_admit_after: hot-leaf cache capacity (0 = off)
+        and admission threshold.
+
+    Raises:
+      TypeError: a non-``Index`` first argument without its ``tree``.
+      ValueError: an index with no segments (nothing to serve).
+    """
 
     def __init__(
         self,
@@ -124,23 +307,17 @@ class SearchSession:
         self.metrics = ServingMetrics()
         self.cache = HotLeafCache(cache_leaves, admit_after=cache_admit_after)
         self._attach_cache()
-        self._runtimes = {b: self._make_runtime(b) for b in self.buckets}
+        self._build_runtimes()
         self._warmed_compiles: int | None = None
 
     def _attach_cache(self) -> None:
-        if self.cache.capacity <= 0:
-            return
-        vv, ii, ll = [], [], []
-        for view in self._segments:
-            ids = np.asarray(view.ids)
-            live = ids >= 0  # skip padding and tombstoned rows
-            vv.append(np.asarray(view.vecs)[live])
-            ii.append(ids[live])
-            ll.append(np.asarray(view.leaves)[live])
-        self.cache.attach_index(
-            np.concatenate(vv), np.concatenate(ii), np.concatenate(ll),
-            self.index.n_leaves,
-        )
+        attach_cache(self.cache, self._segments, self.index.n_leaves)
+
+    def _build_runtimes(self) -> None:
+        """(Re)compile-point: one runtime per warmed bucket rung. The
+        sharded session overrides this to build one rung per (shard,
+        bucket) pair instead."""
+        self._runtimes = {b: self._make_runtime(b) for b in self.buckets}
 
     # -- construction -------------------------------------------------------
     @classmethod
@@ -160,36 +337,10 @@ class SearchSession:
         Returns ``(session, meta)`` where ``meta`` is the index metadata
         (corpus geometry etc.) on restore, or ``build_fn``'s extra.
         """
-        import warnings
-
-        from repro.index import Index, has_index, has_legacy_index
-
         mesh = mesh if mesh is not None else local_mesh()
-        idx = None
-        if index_dir and not rebuild and has_index(index_dir):
-            opened = Index.open(index_dir, mesh=mesh)
-            if opened.n_segments:
-                idx, meta = opened, dict(opened.meta, restored=True)
-            # else: a crash between create and the first commit left a
-            # committed-empty index — rebuild instead of serving nothing
-        if idx is None:
-            if index_dir and not has_index(index_dir) and has_legacy_index(
-                index_dir
-            ):
-                warnings.warn(
-                    f"{index_dir} holds a pre-segment-format index "
-                    "(index_ckpt/), which this version no longer reads; "
-                    "rebuilding it in the segment format",
-                    stacklevel=2,
-                )
-            built, tree, extra = build_fn()
-            idx = Index.create(
-                tree, index_dir or None, mesh=mesh, extra=extra,
-                overwrite=True,
-            )
-            idx.append_built(built)
-            idx.commit()
-            meta = dict(extra or {}, restored=False)
+        idx, meta = load_or_build_index(
+            index_dir, build_fn=build_fn, mesh=mesh, rebuild=rebuild,
+        )
         return cls(idx, mesh=mesh, **session_kw), meta
 
     def refresh(self) -> None:
@@ -198,62 +349,13 @@ class SearchSession:
         pipelines. New shapes compile at the next :meth:`warmup`."""
         self._segments = self.index.segment_views()
         self._attach_cache()
-        self._runtimes = {b: self._make_runtime(b) for b in self.buckets}
+        self._build_runtimes()
         self._warmed_compiles = None
 
     def _make_runtime(self, bucket: int) -> _BucketRuntime:
-        n_shards = data_axis_size(self.mesh)
-        k, probes = self.k, self.probes
-        q_rows = bucket * probes
-        plans, q_totals, execs = [], [], []
-        for view in self._segments:
-            p = make_plan(
-                rows=view.rows,
-                n_leaves=self.index.n_leaves,
-                n_queries=bucket,
-                n_shards=n_shards,
-                k=k,
-                probes=probes,
-                layout=self.layout,
-                impl=self.impl,
-            )
-            q_total = lookup_q_total(p, bucket, n_shards)
-            execs.append(make_executor(
-                self.mesh, p, n_leaves=self.index.n_leaves,
-                shard_rows=view.rows // n_shards, q_total=q_total,
-            ))
-            plans.append(p)
-            q_totals.append(q_total)
-        primary = max(range(len(plans)), key=lambda i: self._segments[i].rows)
-
-        def fused(segments, tree, queries, n_valid):
-            # ONE lookup build (probe routing + leaf sort) shared by every
-            # segment; per-segment executors only see tail padding on top
-            lookup, leaves = build_lookup_bucketed(
-                tree, queries, n_valid, probes=probes, q_total=q_rows
-            )
-            outs = [
-                fn(seg, pad_lookup(lookup, qt))
-                for seg, fn, qt in zip(segments, execs, q_totals)
-            ]
-            if len(outs) == 1:
-                return outs[0], leaves
-            # cross-segment merge: same ascending-distance fold the
-            # executors use across shards (ties keep segment-major order)
-            all_d = jnp.concatenate([r.dists[:bucket] for r in outs], axis=1)
-            all_i = jnp.concatenate([r.ids[:bucket] for r in outs], axis=1)
-            neg, sel = jax.lax.top_k(-all_d, k)
-            merged = SearchResult(
-                ids=jnp.take_along_axis(all_i, sel, axis=1),
-                dists=-neg,
-                pairs=sum(r.pairs for r in outs),
-                q_cap_overflow=sum(r.q_cap_overflow for r in outs),
-            )
-            return merged, leaves
-
-        return _BucketRuntime(
-            bucket=bucket, plan=plans[primary], plans=tuple(plans),
-            q_total=max(q_totals), fn=jax.jit(fused),
+        return make_bucket_runtime(
+            self.mesh, self.index.n_leaves, self._segments, bucket,
+            k=self.k, probes=self.probes, layout=self.layout, impl=self.impl,
         )
 
     # -- compile accounting -------------------------------------------------
@@ -271,7 +373,8 @@ class SearchSession:
 
     def warmup(self) -> float:
         """Compile every bucket rung once (dummy batch) — steady-state
-        requests then only ever replay warmed programs."""
+        requests then only ever replay warmed programs. Returns the wall
+        milliseconds spent compiling (also folded into the metrics)."""
         d = self.index.dim
         t0 = time.perf_counter()
         for rt in self._runtimes.values():
@@ -331,9 +434,18 @@ class SearchSession:
     def search(
         self, queries: np.ndarray, *, n_images: int | None = None
     ) -> tuple[np.ndarray, np.ndarray]:
-        """One-shot search of ``(n, d)`` query rows (splits batches larger
-        than the top bucket). Results are bit-identical to
-        ``core.search.batch_search`` under the same plan budgets."""
+        """One-shot search of ``(n, d)`` query rows.
+
+        Args:
+          queries: ``(n, d)`` float rows; batches larger than the top
+            bucket are split across dispatches.
+          n_images: images this batch represents — feeds the ms/image
+            metric and the plan's cost-model observations when given.
+
+        Returns:
+          ``(ids, dists)`` of shape ``(n, k)`` each — bit-identical to
+          ``core.search.batch_search`` under the same plan budgets.
+        """
         queries = np.asarray(queries, np.float32)
         if len(queries) <= self.max_batch_rows:
             ids, dists, _, _ = self._execute(queries, n_images=n_images)
@@ -352,9 +464,19 @@ class SearchSession:
         return np.concatenate(out_i), np.concatenate(out_d)
 
     def serve_many(self, request_batches) -> list[tuple[np.ndarray, np.ndarray]]:
-        """Serve a coalesced micro-batch: ``request_batches`` is a list of
-        per-request ``(rows, d)`` arrays whose total fits one bucket.
-        Returns one ``(ids, dists)`` pair per request."""
+        """Serve a coalesced micro-batch in one engine dispatch.
+
+        Args:
+          request_batches: per-request ``(rows, d)`` arrays whose total
+            row count fits the largest warmed bucket.
+
+        Returns:
+          One ``(ids, dists)`` pair per request, in order.
+
+        Raises:
+          ValueError: the concatenated batch exceeds the largest bucket
+            (the micro-batcher's coalescing contract was violated).
+        """
         sizes = [len(q) for q in request_batches]
         ids, dists, _, _ = self._execute(
             np.concatenate(request_batches), n_images=len(request_batches)

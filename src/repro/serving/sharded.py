@@ -1,0 +1,255 @@
+"""Sharded scatter-gather serving: N shard ladders behind one session.
+
+The paper's search phase runs as a fleet of map tasks, each scanning its
+partition of the index, with one merge step fusing per-partition candidate
+lists (§2.4). :class:`ShardedSearchSession` is that topology as a serving
+layer over a :class:`~repro.index.ShardedIndex`:
+
+  * **scatter** — every dispatch snaps to a warmed bucket and fans the
+    padded query batch out to one fused jitted pipeline *per shard*
+    (each shard owns a full bucket ladder over its segments — compile
+    cost is ``shards x buckets`` programs, all paid at :meth:`warmup`);
+  * **gather** — per-shard partials carry global merge *slots*
+    (``segment_ordinal * k + column``), so the host-side fuse
+    (:func:`repro.index.sharding.gather_merge`) reproduces the unsharded
+    stable ascending-distance merge bit for bit — results are identical
+    to a plain :class:`~repro.serving.SearchSession` over the same index
+    at any shard count, both layouts, any probe width, tombstones
+    respected;
+  * **above the scatter** — the hot-leaf cache keys on the *pre-scatter*
+    query bytes (one cache for the whole index, consulted before any
+    shard is touched) and records routing *post-gather*; the
+    micro-batcher coalesces above the session exactly as in the
+    unsharded case — neither knows shards exist.
+
+On one device the shards share the mesh and run sequentially-but-isolated
+(same numerics, summed wall time — this is the regime the bit-identity
+tests pin down); with enough devices each shard's programs are placed on
+its own device group via ``meshutil.shard_submeshes`` and the sequential
+dispatch loop overlaps across shards (dispatch is async; the gather blocks
+once at the end).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import SearchPlan, snap_to_bucket
+from repro.index.sharding import ShardedIndex, ShardPlan, gather_merge
+from repro.serving.session import (
+    SearchSession,
+    _jit_cache_size,
+    make_bucket_runtime,
+)
+
+
+@dataclasses.dataclass
+class _ShardedRuntime:
+    """One warmed bucket rung, fanned out: one fused pipeline per shard."""
+
+    bucket: int  # query-row capacity of this rung
+    parts: tuple  # (shard_index, views, _BucketRuntime) per non-empty shard
+    plan: SearchPlan  # primary plan (largest shard) — observe()/reporting
+    plans: tuple  # every resolved per-segment plan across shards
+    q_total: int  # largest per-segment padded lookup row count
+
+
+class ShardedSearchSession(SearchSession):
+    """Scatter-gather :class:`SearchSession`: same public surface (the
+    micro-batcher, trace replay, and CLI drive either interchangeably),
+    shard-parallel execution underneath.
+
+    Construct from a ``repro.index.Index`` plus either ``shards=N`` (+
+    ``shard_strategy``), an explicit ``shard_plan``, or an index whose
+    manifest carries a persisted plan; a ``ShardedIndex`` is also
+    accepted directly. All other keywords are
+    :class:`SearchSession`'s.
+
+    Raises ``ValueError`` when no shard plan can be resolved, or when an
+    explicit plan no longer covers the index's segments after a
+    :meth:`refresh` (derivable strategies re-derive automatically).
+    """
+
+    def __init__(
+        self,
+        index,
+        tree=None,
+        mesh=None,
+        *,
+        shards: int | None = None,
+        shard_plan: ShardPlan | None = None,
+        shard_strategy: str = "round_robin",
+        **session_kw,
+    ):
+        if isinstance(index, ShardedIndex):
+            shard_plan = shard_plan or index.plan
+            index = index.index
+        self._n_shards_arg = shards
+        self._shard_plan_arg = shard_plan
+        self._strategy_arg = shard_strategy
+        super().__init__(index, tree, mesh, **session_kw)
+
+    # -- runtime construction -----------------------------------------------
+    def _resolve_plan(self) -> ShardPlan:
+        plan = self._shard_plan_arg
+        if plan is None and self._n_shards_arg is not None:
+            return ShardPlan.for_index(
+                self.index, self._n_shards_arg, self._strategy_arg
+            )
+        if plan is None:
+            plan = self.index.shard_plan
+        if plan is None:
+            raise ValueError(
+                "ShardedSearchSession needs shards=N, a shard_plan, or an "
+                "index with a persisted shard plan"
+            )
+        if not plan.covers([s.name for s in self.index.segments]):
+            plan = plan.rederived(self.index)  # raises for explicit plans
+        return plan
+
+    def _build_runtimes(self) -> None:
+        self.sharded = ShardedIndex(self.index, plan=self._resolve_plan())
+        shard_views = self.sharded.shard_views()
+        self._runtimes = {}
+        for b in self.buckets:
+            parts = []
+            for si, (shard, mesh) in enumerate(
+                zip(shard_views, self.sharded._meshes)
+            ):
+                if not shard:
+                    continue  # more shards than segments: empty scatter leg
+                rt = make_bucket_runtime(
+                    mesh, self.index.n_leaves,
+                    tuple(v for _, v in shard), b,
+                    k=self.k, probes=self.probes, layout=self.layout,
+                    impl=self.impl,
+                    ordinals=tuple(g for g, _ in shard),
+                    emit_slots=True,
+                )
+                parts.append((si, tuple(v for _, v in shard), rt))
+            primary = max(
+                range(len(parts)),
+                key=lambda i: sum(int(v.rows) for v in parts[i][1]),
+            )
+            self._runtimes[b] = _ShardedRuntime(
+                bucket=b,
+                parts=tuple(parts),
+                plan=parts[primary][2].plan,
+                plans=tuple(p for _, _, rt in parts for p in rt.plans),
+                q_total=max(rt.q_total for _, _, rt in parts),
+            )
+
+    # -- compile accounting --------------------------------------------------
+    def recompiles(self) -> int:
+        """Total jitted compilations across every (shard, bucket) program."""
+        return sum(
+            _jit_cache_size(rt.fn)
+            for rtb in self._runtimes.values()
+            for _, _, rt in rtb.parts
+        )
+
+    def warmup(self) -> float:
+        """Compile every shard's every bucket rung once (dummy batch);
+        steady state then replays warmed programs only. Returns wall ms."""
+        d = self.index.dim
+        t0 = time.perf_counter()
+        for rtb in self._runtimes.values():
+            dummy = jnp.zeros((rtb.bucket, d), jnp.float32)
+            outs = [
+                rt.fn(views, self.tree, dummy, np.int32(0))
+                for _, views, rt in rtb.parts
+            ]
+            for res, leaves, _slots in outs:
+                jax.block_until_ready((res.ids, leaves))
+        dt_ms = (time.perf_counter() - t0) * 1e3
+        self.metrics.warmup_ms += dt_ms
+        self._warmed_compiles = self.recompiles()
+        return dt_ms
+
+    # -- serve path ----------------------------------------------------------
+    def _execute(
+        self, queries: np.ndarray, *, n_images: int | None = None
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray, float]:
+        """Scatter one micro-batch to every shard, gather-merge the
+        partials. Same contract as the unsharded ``_execute``: returns
+        ``(ids, dists, probe_leaves, seconds)``, feeds metrics, the
+        (pre-scatter) hot-leaf cache, and the plan observations."""
+        n, d = queries.shape
+        if n > self.max_batch_rows:
+            raise ValueError(
+                f"batch of {n} rows exceeds largest bucket "
+                f"{self.max_batch_rows}; split it across dispatches"
+            )
+        rtb = self._runtimes[snap_to_bucket(n, self.buckets)]
+        buf = np.zeros((rtb.bucket, d), np.float32)
+        buf[:n] = queries
+        jbuf = jnp.asarray(buf)
+        nv = np.int32(n)
+        t0 = time.perf_counter()
+        # dispatch every shard first (async), block once for the gather —
+        # on disjoint device groups the scans overlap; on one device XLA
+        # runs them back to back with identical numerics
+        outs = [rt.fn(views, self.tree, jbuf, nv) for _, views, rt in rtb.parts]
+        for res, leaves, slots in outs:
+            jax.block_until_ready((res.ids, res.dists, slots, leaves))
+        dt = time.perf_counter() - t0
+        ids, dists = gather_merge(
+            [
+                (
+                    np.asarray(res.ids[:n]),
+                    np.asarray(res.dists[:n]),
+                    np.asarray(slots[:n]),
+                )
+                for res, _leaves, slots in outs
+            ],
+            self.k,
+        )
+        # every shard routes the same queries through the same tree; shard
+        # 0's probe-leaf matrix is THE routing (the broadcast analog)
+        leaves_np = np.asarray(outs[0][1][:n])
+        overflow = sum(int(res.q_cap_overflow) for res, _, _ in outs)
+        self.metrics.engine_batches += 1
+        self.metrics.engine_ms += dt * 1e3
+        self.metrics.query_rows += n
+        self.metrics.q_cap_overflow += overflow
+        if n_images:
+            self.metrics.engine_images += n_images
+            rtb.plan.observe(dt * 1e3 / n_images)
+        # a starved dispatch must not seed the cache (see SearchSession)
+        self.cache.record(queries, leaves_np, exact=overflow == 0)
+        return ids, dists, leaves_np, dt
+
+    # -- reporting ------------------------------------------------------------
+    @property
+    def n_shards(self) -> int:
+        return self.sharded.n_shards
+
+    @property
+    def shard_plan(self) -> ShardPlan:
+        return self.sharded.plan
+
+    def per_shard_stats(self) -> dict:
+        """The bound plan plus rows/segments per shard (CLI + benchmark
+        reporting)."""
+        return self.sharded.stats()
+
+    def plan_summary(self) -> list[dict]:
+        return [
+            {
+                "bucket": rtb.bucket,
+                "layout": rtb.plan.layout,
+                "q_total": rtb.q_total,
+                "block_rows": rtb.plan.block_rows,
+                "q_cap": rtb.plan.q_cap,
+                "q_tile": rtb.plan.q_tile,
+                "p_cap": rtb.plan.p_cap,
+                "segments": len(rtb.plans),
+                "shards": len(rtb.parts),
+            }
+            for rtb in self._runtimes.values()
+        ]
