@@ -4,6 +4,7 @@ trajectories comparable across PRs."""
 
 from __future__ import annotations
 
+import json
 import os
 import subprocess
 import time
@@ -88,3 +89,30 @@ class Corpus:
 
 def row(name: str, seconds: float, derived: str = "") -> str:
     return f"{name},{seconds * 1e6:.1f},{derived}"
+
+
+def write_artifact(path: str, payload: dict) -> str:
+    """Write one ``benchmarks/out`` JSON artifact (dirs created,
+    indent=1 — the one place the on-disk format lives)."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
+def fit_payload(calibration, committed_version: int) -> dict:
+    """The shared skeleton of a ``--calibrate`` JSON artifact: header
+    (stamped ``cost_model="fitted"``), the fit form quoted from its
+    single source (``engine.FIT_FORM``), the fitted per-layout
+    coefficients, and the store/commit provenance."""
+    from repro.core.engine import FIT_FORM, FittedModel
+
+    fitted = FittedModel(calibration)
+    return {
+        "header": bench_header(cost_model="fitted"),
+        "fit_form": FIT_FORM,
+        "coefficients": fitted.coefficients_json(),
+        "n_records": len(calibration),
+        "n_measurements": calibration.n_measurements(),
+        "committed_version": committed_version,
+    }

@@ -14,7 +14,6 @@ append ×2 → search → compact → search must return identical neighbours.""
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 import tempfile
@@ -22,7 +21,14 @@ import time
 
 import jax.numpy as jnp
 
-from benchmarks.common import Corpus, bench_header, row, timeit
+from benchmarks.common import (
+    Corpus,
+    bench_header,
+    fit_payload,
+    row,
+    timeit,
+    write_artifact,
+)
 
 
 def run():
@@ -90,6 +96,8 @@ def run_incremental(
     from repro.distributed.meshutil import local_mesh
     import jax
 
+    from repro.core.engine import resolve_model
+
     mesh = local_mesh()
     store = VirtualStore(
         segments * rows_per_segment, dim, block_rows=rows_per_segment,
@@ -99,7 +107,7 @@ def run_incremental(
         jnp.asarray(store.sample_for_tree(min(65_536, store.n_rows))),
         tuple(fanouts), key=jax.random.PRNGKey(seed),
     )
-    payload = {"header": bench_header(), "segments": [],
+    payload = {"segments": [],
                "rows_per_segment": rows_per_segment,
                "dim": dim, "n_segments": segments}
     with tempfile.TemporaryDirectory() as d:
@@ -124,11 +132,85 @@ def run_incremental(
         res = idx.search(q, k=10)
         jax.block_until_ready(res.ids)
         payload["search_s_over_all_segments"] = time.perf_counter() - t0
+        payload["header"] = bench_header(
+            cost_model=resolve_model("auto", idx.calibration).describe()
+        )
     if json_path:
-        os.makedirs(os.path.dirname(json_path) or ".", exist_ok=True)
-        with open(json_path, "w") as f:
-            json.dump(payload, f, indent=1)
+        write_artifact(json_path, payload)
         print(f"# incremental indexing JSON -> {json_path}", file=sys.stderr)
+    return payload
+
+
+def run_calibrate(
+    *,
+    steps: int = 3,
+    rows_per_step: int = 20_000,
+    dim: int = 32,
+    fanouts: tuple = (16, 16),
+    batch_rows: int = 256,
+    rounds: int = 2,
+    desc_per_image: int = 24,
+    json_path: str | None = None,
+    seed: int = 0,
+) -> dict:
+    """Calibrate the *rows* axis of the fitted cost model across index
+    growth.
+
+    The serving sweep (``benchmarks.serving --calibrate``) varies batch
+    size at fixed corpus; this varies corpus size: each step appends a
+    progressively larger segment (``rows_per_step * step``), commits, and
+    measures ms/image through a pinned-layout warmed session at the grown
+    shape — so the fit learns how cost scales with ``rows_scanned``. The
+    observations and the manifest travel together (``commit``), and the
+    fitted coefficients land in ``indexing_calibration.json``.
+    """
+    import numpy as np
+    import jax
+
+    from repro.core.tree import build_tree
+    from repro.data.store import VirtualStore
+    from repro.distributed.meshutil import local_mesh
+    from repro.index import Index
+    from repro.serving import SearchSession
+
+    mesh = local_mesh()
+    total = rows_per_step * steps * (steps + 1) // 2
+    store = VirtualStore(total, dim, block_rows=rows_per_step, seed=seed)
+    tree = build_tree(
+        jnp.asarray(store.sample_for_tree(min(65_536, store.n_rows))),
+        tuple(fanouts), key=jax.random.PRNGKey(seed),
+    )
+    rng = np.random.default_rng(seed + 1)
+    q = store.read_rows(
+        np.arange(0, rows_per_step, max(1, rows_per_step // batch_rows))
+    )[:batch_rows]
+    q = q + rng.standard_normal(q.shape).astype(np.float32)
+    payload = {"steps": [], "rows_per_step": rows_per_step, "dim": dim}
+    with tempfile.TemporaryDirectory() as d:
+        idx = Index.create(tree, d, mesh=mesh)
+        block = 0
+        for step in range(1, steps + 1):
+            vecs = np.concatenate(
+                [store.read_block(block + i).vecs for i in range(step)]
+            )
+            block += step
+            idx.append(vecs)
+            idx.commit()
+            entry = {"rows": int(idx.rows), "segments": idx.n_segments}
+            for layout in ("point_major", "query_routed"):
+                s = SearchSession(idx, k=10, layout=layout,
+                                  buckets=(batch_rows,),
+                                  cost_model="heuristic")
+                s.warmup()
+                for _ in range(rounds):
+                    s.search(q, n_images=max(1, batch_rows // desc_per_image))
+                entry[f"ms_per_image_{layout}"] = s.metrics.ms_per_image
+            payload["steps"].append(entry)
+        version = idx.commit()
+        payload.update(fit_payload(idx.calibration, version))
+    if json_path:
+        write_artifact(json_path, payload)
+        print(f"# indexing calibration JSON -> {json_path}", file=sys.stderr)
     return payload
 
 
@@ -187,6 +269,10 @@ def main(argv=None) -> int:
                     help="run the index-lifecycle smoke gate")
     ap.add_argument("--incremental", action="store_true",
                     help="incremental-append throughput mode")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="grow an index step by step, measure ms/image at "
+                         "each size, and commit + fit the cost model -> "
+                         "indexing_calibration.json")
     ap.add_argument("--segments", type=int, default=4)
     ap.add_argument("--rows-per-segment", type=int, default=30_000)
     ap.add_argument("--dim", type=int, default=64)
@@ -196,6 +282,24 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     if args.smoke:
         return lifecycle_smoke()
+    if args.calibrate:
+        out_dir = os.environ.get("REPRO_BENCH_OUT", "benchmarks/out")
+        payload = run_calibrate(
+            steps=args.segments,
+            rows_per_step=args.rows_per_segment,
+            dim=args.dim,
+            json_path=args.json or os.path.join(
+                out_dir, "indexing_calibration.json"
+            ),
+        )
+        print("name,us_per_call,derived")
+        for s in payload["steps"]:
+            print(row(
+                f"calibrate_rows_{s['rows']}",
+                s["ms_per_image_point_major"] / 1e3,
+                f"qr_ms_per_image={s['ms_per_image_query_routed']:.2f}",
+            ))
+        return 0
     if args.incremental:
         out_dir = os.environ.get("REPRO_BENCH_OUT", "benchmarks/out")
         payload = run_incremental(

@@ -36,9 +36,11 @@ MODULES = [
 def smoke() -> int:
     """Tiny end-to-end serve runs on both layouts with multi-probe, the
     serving-session gate (2 warmed buckets, ~100 zipf requests, zero
-    steady-state recompiles), and the index-lifecycle gate (create →
-    append ×2 → search → compact → search, identical results) — the
-    per-PR gate wired into scripts/smoke.sh. Fails loudly, returns rc."""
+    steady-state recompiles), the index-lifecycle gate (create →
+    append ×2 → search → compact → search, identical results), the
+    cost-model calibration round-trip gate, and the sharded bit-identity
+    gate — the per-PR gate wired into scripts/smoke.sh. Fails loudly,
+    returns rc."""
     from benchmarks import indexing as indexing_bench
     from benchmarks import serving as serving_bench
     from repro.launch import serve
@@ -60,6 +62,11 @@ def smoke() -> int:
         return rc
     print("# smoke: serving session (2 buckets, zipf trace)", file=sys.stderr)
     rc = serving_bench.smoke()
+    if rc != 0:
+        return rc
+    print("# smoke: calibration round-trip (record -> commit -> reopen -> "
+          "fitted plan)", file=sys.stderr)
+    rc = serving_bench.calibration_smoke()
     if rc != 0:
         return rc
     print("# smoke: sharded scatter-gather (bit-identity at shards 1/2/3)",

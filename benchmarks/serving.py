@@ -9,8 +9,12 @@ warmed :class:`~repro.serving.SearchSession` + ``MicroBatcher`` and emits
     ms/image, cache hit rate, steady-state recompiles;
   * a JSON file (``benchmarks/out/serving.json`` or ``$REPRO_BENCH_OUT``)
     with the full metrics, per-bucket plans, and the per-plan *measured*
-    ms/image observations (``engine.observations()``) — the data a later
-    PR calibrates the ``plan()`` cost model against (ROADMAP open item).
+    ms/image observations (the session index's calibration store) — the
+    data the ``plan()`` cost model is calibrated against;
+  * ``--calibrate``: sweep batch-size x layout shapes, record measured
+    ms/image into an index's calibration store, commit the fit, and emit
+    the fitted coefficients (``serving_calibration.json``) — see
+    docs/cost_model.md.
 """
 
 from __future__ import annotations
@@ -19,16 +23,23 @@ import json
 import math
 import os
 
-from benchmarks.common import Corpus, bench_header, row
+from benchmarks.common import (
+    Corpus,
+    bench_header,
+    fit_payload,
+    row,
+    write_artifact,
+)
 
 
-def _session(c, *, buckets, cache_leaves=0, cache_admit=2, probes=1):
+def _session(c, *, buckets, cache_leaves=0, cache_admit=2, probes=1,
+             cost_model="auto"):
     from repro.serving import SearchSession
 
     s = SearchSession(
         c.index, c.tree, c.mesh, k=10, layout="auto", probes=probes,
         buckets=buckets, cache_leaves=cache_leaves,
-        cache_admit_after=cache_admit,
+        cache_admit_after=cache_admit, cost_model=cost_model,
     )
     s.warmup()
     return s
@@ -45,13 +56,16 @@ def _replay(session, c, *, skew, n_requests, desc_per_image, rate, seed=3):
 
 
 def run():
-    from repro.core.engine import observations, reset_observations
+    from repro.core.engine import CalibrationStore
 
     out_rows = []
     payload = {}
     c = Corpus()
     dpi = 24
-    reset_observations()
+    session = None
+    # each session wraps the shared corpus index in its own ephemeral
+    # facade; fold their calibration stores for the artifact
+    calibration = CalibrationStore()
     for skew, cache_leaves in (("uniform", 0), ("zipf", 1024)):
         session = _session(
             c, buckets=(1024, 4096), cache_leaves=cache_leaves,
@@ -67,18 +81,18 @@ def run():
             f"cache_hit={session.cache.hit_rate:.2f} "
             f"recompiles={session.steady_state_recompiles()}",
         ))
+        calibration.merge(session.index.calibration)
         payload[skew] = {
             "metrics": m.to_dict(),
             "cache": session.cache.stats(),
             "plans": session.plan_summary(),
         }
-    payload["header"] = bench_header()
-    payload["plan_observations"] = observations()
+    payload["header"] = bench_header(
+        cost_model=session.active_cost_model()
+    )
+    payload["plan_observations"] = calibration.snapshot()
     out_dir = os.environ.get("REPRO_BENCH_OUT", "benchmarks/out")
-    os.makedirs(out_dir, exist_ok=True)
-    path = os.path.join(out_dir, "serving.json")
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=1)
+    path = write_artifact(os.path.join(out_dir, "serving.json"), payload)
     out_rows.append(row("serving_json", 0.0, f"wrote={path}"))
     return out_rows
 
@@ -108,7 +122,6 @@ def shard_sweep(
     """
     import numpy as np
 
-    from repro.core.engine import observations
     from repro.index import Index
     from repro.serving import ShardedSearchSession
 
@@ -127,6 +140,7 @@ def shard_sweep(
     q, _ = c.queries(n_queries)
     q = np.asarray(q)
     out_rows, entries, ref = [], [], None
+    session = None
     for n in shard_counts:
         session = ShardedSearchSession(
             idx, shards=n, shard_strategy=strategy, k=10, layout="auto",
@@ -166,19 +180,180 @@ def shard_sweep(
         ))
     out_dir = os.environ.get("REPRO_BENCH_OUT", "benchmarks/out")
     path = json_path or os.path.join(out_dir, "serving_shards.json")
-    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     payload = {
         "header": bench_header(
             shard_plan={"strategy": strategy, "counts": list(shard_counts),
                         "segments": segments},
+            cost_model=session.active_cost_model(),
         ),
         "sweep": entries,
-        "plan_observations": observations(),
+        "plan_observations": idx.calibration.snapshot(),
     }
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=1)
+    write_artifact(path, payload)
     out_rows.append(row("serving_shards_json", 0.0, f"wrote={path}"))
     return out_rows
+
+
+def _index_queries(idx, n: int, *, noise: float = 4.0, seed: int = 0):
+    """``n`` perturbed live descriptor rows from ``idx`` — dimension-true
+    query vectors for calibrating an arbitrary durable index."""
+    import numpy as np
+
+    if not idx.segments:
+        raise ValueError(f"index at {idx.directory} has no live rows")
+    ids = np.concatenate([s.host_ids() for s in idx.segments])
+    ids = ids[ids >= 0]
+    ids = np.setdiff1d(ids, idx.tombstones)
+    if ids.size == 0:
+        raise ValueError(f"index at {idx.directory} has no live rows")
+    rng = np.random.default_rng(seed)
+    take = rng.choice(ids, size=n, replace=ids.size < n)
+    q = idx.read_rows(take)
+    return q + rng.standard_normal(q.shape).astype(np.float32) * noise
+
+
+def calibrate(
+    *,
+    index_dir: str | None = None,
+    batch_sizes=(256, 1024),
+    layouts=("point_major", "query_routed"),
+    rounds: int = 3,
+    desc_per_image: int = 24,
+    corpus: Corpus | None = None,
+    json_path: str | None = None,
+    rows: int | None = None,
+):
+    """Sweep (batch size x layout) shapes, record measured ms/image into
+    an index's calibration store, commit, and fit the cost model.
+
+    Each sweep cell runs a warmed single-bucket session pinned to one
+    layout with ``cost_model="heuristic"`` (measurements must not be
+    steered by the model they will feed). The recorded observations land
+    in the index's manifest via ``commit`` (for a durable ``index_dir``),
+    and the fitted per-layout coefficients (``ms ≈ a·(rows_scanned/tile)
+    + b·probes·leaves + c·batch + d``) are written to
+    ``serving_calibration.json`` — after which ``plan(model="auto")``
+    over this index prefers the fit (docs/cost_model.md).
+    """
+    import numpy as np
+
+    from repro.index import Index
+    from repro.serving import SearchSession
+
+    if index_dir:
+        # calibrate the durable index in place: queries must come from
+        # *its* corpus (its dim), not the synthetic benchmark Corpus
+        idx = Index.open(index_dir)
+        q_base = _index_queries(idx, max(batch_sizes))
+    else:
+        c = corpus or (Corpus(rows=rows) if rows else Corpus())
+        idx = Index.create(c.tree, None, mesh=c.mesh)
+        idx.append(c.vecs_np)
+        idx.commit()
+        q_base, _ = c.queries(max(batch_sizes))
+        q_base = np.asarray(q_base)
+    out_rows = []
+    for layout in layouts:
+        for b in batch_sizes:
+            session = SearchSession(
+                idx, k=10, layout=layout, buckets=(int(b),),
+                cost_model="heuristic",
+            )
+            session.warmup()
+            q = q_base[:int(b)]
+            for _ in range(rounds):
+                session.search(
+                    q, n_images=max(1, int(b) // desc_per_image)
+                )
+            m = session.metrics
+            out_rows.append(row(
+                f"calibrate_{layout}_b{b}",
+                m.engine_ms / 1e3 / max(1, m.engine_batches),
+                f"ms_per_image={m.ms_per_image:.3f}",
+            ))
+    # ephemeral indexes commit too: committed_version must name a
+    # manifest state that actually contains these observations
+    version = idx.commit()
+    payload = dict(
+        fit_payload(idx.calibration, version),
+        observations=idx.calibration.snapshot(),
+    )
+    out_dir = os.environ.get("REPRO_BENCH_OUT", "benchmarks/out")
+    path = write_artifact(
+        json_path or os.path.join(out_dir, "serving_calibration.json"),
+        payload,
+    )
+    out_rows.append(row(
+        "serving_calibration_json", 0.0,
+        f"wrote={path} layouts_fitted={len(payload['coefficients'])}",
+    ))
+    return out_rows
+
+
+def calibration_smoke() -> int:
+    """Calibration round-trip gate: record during serving → ``commit``
+    persists it to the manifest → ``Index.open`` reloads it →
+    ``plan(model="auto")`` over the reopened store is decided by the
+    calibrated models (fitted/observed), not the heuristic."""
+    import tempfile
+
+    import numpy as np
+
+    from repro.core.engine import PlanShapes, plan as make_plan, resolve_model
+    from repro.index import Index
+    from repro.serving import SearchSession
+
+    c = Corpus(rows=20_000, dim=32, fanouts=(16, 16))
+    with tempfile.TemporaryDirectory() as d:
+        idx = Index.create(c.tree, d, mesh=c.mesh)
+        idx.append(c.vecs_np)
+        idx.commit()
+        q, _ = c.queries(512)
+        q = np.asarray(q)
+        # two batch shapes per layout: enough distinct measurements for
+        # the per-layout fit to become usable
+        for layout in ("point_major", "query_routed"):
+            for b in (256, 512):
+                s = SearchSession(idx, k=10, layout=layout, buckets=(b,),
+                                  cost_model="heuristic")
+                s.warmup()
+                for _ in range(2):
+                    s.search(q[:b], n_images=max(1, b // 24))
+        assert idx.calibration.dirty, "serving dispatches did not record"
+        n_recorded = len(idx.calibration)
+        assert n_recorded >= 4, idx.calibration.snapshot()
+        idx.commit()
+        assert not idx.calibration.dirty
+        reopened = Index.open(d, mesh=c.mesh)
+    assert len(reopened.calibration) == n_recorded, (
+        f"reopened {len(reopened.calibration)} != recorded {n_recorded}"
+    )
+    # decide at a batch size the sweep never measured: only the fit can
+    # price it — plan(model="auto") must be decided by the fitted model
+    rows_ = reopened.segments[0].rows
+    shapes = dict(rows=rows_, n_leaves=c.tree.n_leaves, n_queries=384,
+                  n_shards=1, k=10)
+    candidates = tuple(
+        make_plan(layout=lay, **shapes)
+        for lay in ("point_major", "query_routed")
+    )
+    pick, kind = resolve_model("auto", reopened.calibration).decide(
+        candidates,
+        PlanShapes(rows=rows_, n_queries=384, n_shards=1,
+                   n_leaves=c.tree.n_leaves),
+    )
+    assert kind == "fitted", (
+        f"plan(model='auto') fell back to {kind!r} despite "
+        f"{len(reopened.calibration)} reloaded calibration records"
+    )
+    auto = make_plan(model="auto", calibration=reopened.calibration, **shapes)
+    assert auto.layout == pick.layout
+    print(
+        f"# calibration smoke: record → commit → reopen round-trips "
+        f"{len(reopened.calibration)} plan signatures; plan(model='auto') "
+        f"decided by the {kind} model → {auto.layout}"
+    )
+    return 0
 
 
 def smoke() -> int:
@@ -267,9 +442,22 @@ def main(argv=None) -> int:
                     help="run the serving-session smoke gate")
     ap.add_argument("--sharded-smoke", action="store_true",
                     help="run the scatter-gather bit-identity gate")
+    ap.add_argument("--calibration-smoke", action="store_true",
+                    help="run the calibration round-trip gate "
+                         "(record -> commit -> reopen -> fitted plan)")
     ap.add_argument("--shard-sweep", action="store_true",
                     help="ms/image vs shard count -> "
                          "benchmarks/out/serving_shards.json")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="sweep batch x layout shapes, commit the measured "
+                         "ms/image into the index manifest, and fit the "
+                         "cost model -> serving_calibration.json")
+    ap.add_argument("--index-dir", default=None,
+                    help="calibrate an existing durable index instead of "
+                         "an ephemeral benchmark corpus (--calibrate)")
+    ap.add_argument("--batch-sizes", type=int, nargs="+",
+                    default=(256, 1024),
+                    help="bucket sizes the calibration sweep measures")
     ap.add_argument("--shards", type=int, nargs="+", default=(1, 2, 4),
                     help="shard counts to sweep")
     ap.add_argument("--segments", type=int, default=4,
@@ -282,10 +470,16 @@ def main(argv=None) -> int:
         return smoke()
     if args.sharded_smoke:
         return sharded_smoke()
+    if args.calibration_smoke:
+        return calibration_smoke()
     print("name,us_per_call,derived")
     if args.shard_sweep:
         rows = shard_sweep(tuple(args.shards), segments=args.segments,
                            strategy=args.strategy, json_path=args.json)
+    elif args.calibrate:
+        rows = calibrate(index_dir=args.index_dir,
+                         batch_sizes=tuple(args.batch_sizes),
+                         json_path=args.json)
     else:
         rows = run()
     for r in rows:

@@ -17,15 +17,18 @@ python -m pytest -x -q
 
 # includes the index-lifecycle gate (create -> append x2 -> search ->
 # compact -> search, exactness asserted; standalone: benchmarks.indexing
-# --smoke) and the sharded scatter-gather gate (shards 1/2/3 bit-identical
-# to unsharded; standalone: benchmarks.serving --sharded-smoke)
-echo "== serve smoke (both layouts, --probes 2) + lifecycle + session + shard gates =="
+# --smoke), the cost-model calibration round-trip gate (record -> commit ->
+# reopen -> plan(model="auto") uses the fit; standalone: benchmarks.serving
+# --calibration-smoke) and the sharded scatter-gather gate (shards 1/2/3
+# bit-identical to unsharded; standalone: benchmarks.serving --sharded-smoke)
+echo "== serve smoke (both layouts, --probes 2) + lifecycle + session + calibration + shard gates =="
 python -m benchmarks.run --smoke
 
 echo "== serving CLI smoke (zipf trace, hot-leaf cache, recompile gate) =="
 python -m repro.launch.serve --rows 20000 --dim 32 --images 400 \
     --fanout 16 16 --trace zipf --requests 100 --buckets 512,1024 \
-    --probes 2 --cache-leaves 256 --cache-admit 1 --rate 300 --no-recall
+    --probes 2 --cache-leaves 256 --cache-admit 1 --rate 300 --no-recall \
+    --cost-model auto
 
 echo "== sharded serving CLI smoke (scatter-gather, 2 shards) =="
 python -m repro.launch.serve --rows 20000 --dim 32 --images 400 \

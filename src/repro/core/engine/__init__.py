@@ -4,23 +4,43 @@ One declarative :class:`SearchPlan` describes *how* a batch of queries is
 executed against a :class:`~repro.core.index_build.DistributedIndex`:
 layout (point-major wave scan vs query-routed), tile sizes, slab budgets,
 ``k``, multi-probe width, kernel impl and wire dtype. ``plan()`` auto-picks
-layout and budgets from the index/mesh/query shapes; ``make_executor()``
-builds the jittable ``(index, lookup) -> SearchResult`` pipeline for a plan.
+layout and budgets from the index/mesh/query shapes by consulting a
+pluggable cost model (:mod:`repro.core.engine.costmodel`: fitted >
+observed > heuristic); ``make_executor()`` builds the jittable
+``(index, lookup) -> SearchResult`` pipeline for a plan.
 
 Both executors are thin orchestrations over the shared tile-scan core in
 :mod:`repro.core.engine.tilescan` — slab slicing, the fused distance+top-k
 candidate fold, and pairs/overflow accounting are written once.
 """
 
+from repro.core.engine.costmodel import (  # noqa: F401
+    FIT_FORM,
+    MODEL_KINDS,
+    CalibrationStore,
+    CostModel,
+    FittedModel,
+    HeuristicModel,
+    ModelChain,
+    ObservedModel,
+    PlanShapes,
+    default_calibration,
+    fitted_component,
+    observations,
+    plan_signature,
+    record_observation,
+    reset_default_calibration,
+    reset_observations,
+    resolve_model,
+    scale_slab_budget,
+    shard_slab_scales,
+)
 from repro.core.engine.plan import (  # noqa: F401
     LAYOUTS,
     SearchPlan,
     bucket_ladder,
     largest_divisor_leq,
-    observations,
     plan,
-    record_observation,
-    reset_observations,
     snap_to_bucket,
 )
 from repro.core.engine.executors import (  # noqa: F401

@@ -1,33 +1,47 @@
-"""Declarative search plans + the auto-planning heuristic.
+"""Declarative search plans + the auto-planning entry point.
 
 A :class:`SearchPlan` is the single static description both executors are
 built from. ``plan()`` resolves an ``"auto"`` layout and any unset budgets
-from the index/mesh/query shapes using a first-order cost model of the two
-scan layouts:
+from the index/mesh/query shapes; *which* candidate wins is delegated to
+the pluggable cost-model subsystem (:mod:`repro.core.engine.costmodel`):
 
-  * ``point_major`` — every shard sweeps its ``shard_rows`` index rows in
-    waves of ``block_rows`` against a ``q_cap``-row query slab, carrying a
-    full ``(rows, k)`` running-best table. Tile work per shard is
-    ``shard_rows * q_cap`` distance pairs; the carry costs
-    ``O(rows * k)`` HBM traffic per wave.
-  * ``query_routed`` — queries are shuffled to the shard owning their leaf,
-    then each ``q_tile`` query tile reads one ``p_cap`` point slab. Tile
-    work per shard is ``n_qwaves * q_tile * p_cap`` pairs with no carry.
+  * ``HeuristicModel`` — first-order shape rules (distance pairs + carry
+    traffic) for the two scan layouts:
 
-The model only has to rank the two layouts, not predict wall-clock.
+    - ``point_major`` — every shard sweeps its ``shard_rows`` index rows
+      in waves of ``block_rows`` against a ``q_cap``-row query slab,
+      carrying a full ``(rows, k)`` running-best table;
+    - ``query_routed`` — queries are shuffled to the shard owning their
+      leaf, then each ``q_tile`` query tile reads one ``p_cap`` point
+      slab (no carry, one all_to_all).
+
+  * ``ObservedModel`` — exact-signature measured ms/image;
+  * ``FittedModel`` — a parametric fit over all observations, so
+    measurements at one shape inform nearby unmeasured shapes.
+
+``plan(model="auto")`` (the default) prefers **fitted > observed >
+heuristic** — measured behaviour decides whenever calibration data
+exists, and the shape rules only break the cold-start tie. The model
+only picks layouts and budgets; results are bit-identical under every
+model (the invariant the engine/serving/sharding tests assert).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from typing import Any
 
 import jax.numpy as jnp
 
+from repro.core.engine import costmodel as costmodel_lib
+from repro.core.engine.costmodel import (
+    LAYOUTS,
+    CalibrationStore,
+    PlanShapes,
+)
 from repro.distributed.meshutil import round_up
-
-LAYOUTS = ("point_major", "query_routed")
 
 
 def largest_divisor_leq(n: int, cap: int) -> int:
@@ -85,57 +99,6 @@ def snap_to_bucket(n: int, buckets) -> int:
     return min(fitting) if fitting else max(buckets)
 
 
-# ---------------------------------------------------------------------------
-# Measured-cost observations (ROADMAP: calibrate plan() from real runs).
-# Keyed by the plan's cost-relevant signature; the serving session and the
-# benchmarks feed these via ``SearchPlan.observe(ms_per_image)`` and persist
-# them in the benchmark JSON so a later PR can fit the cost model.
-# ---------------------------------------------------------------------------
-
-_OBSERVATIONS: dict[tuple, dict] = {}
-
-
-def _plan_signature(p: "SearchPlan") -> tuple:
-    return (
-        p.layout, p.k, p.probes, p.impl, p.block_rows, p.q_cap, p.q_tile,
-        p.p_cap,
-    )
-
-
-def record_observation(p: "SearchPlan", ms_per_image: float) -> None:
-    """Fold one measured ms/image into the per-plan running stats."""
-    ms = float(ms_per_image)
-    o = _OBSERVATIONS.setdefault(
-        _plan_signature(p),
-        {"count": 0, "total_ms": 0.0, "min_ms": ms, "max_ms": ms,
-         "last_ms": ms},
-    )
-    o["count"] += 1
-    o["total_ms"] += ms
-    o["min_ms"] = min(o["min_ms"], ms)
-    o["max_ms"] = max(o["max_ms"], ms)
-    o["last_ms"] = ms
-
-
-def observations() -> dict[str, dict]:
-    """JSON-ready snapshot: plan signature string -> running ms/image stats
-    (with a derived ``mean_ms``)."""
-    out = {}
-    for sig, o in _OBSERVATIONS.items():
-        layout, k, probes, impl, block_rows, q_cap, q_tile, p_cap = sig
-        key = (
-            f"{layout}/k={k}/probes={probes}/impl={impl}/"
-            f"block_rows={block_rows}/q_cap={q_cap}/"
-            f"q_tile={q_tile}/p_cap={p_cap}"
-        )
-        out[key] = dict(o, mean_ms=o["total_ms"] / max(1, o["count"]))
-    return out
-
-
-def reset_observations() -> None:
-    _OBSERVATIONS.clear()
-
-
 @dataclasses.dataclass(frozen=True)
 class SearchPlan:
     """Static description of one search execution (hashable, jit-safe).
@@ -177,10 +140,28 @@ class SearchPlan:
                 raise ValueError(f"plan field {f!r} unresolved for {self.layout}")
         return self
 
-    def observe(self, ms_per_image: float) -> None:
-        """Record one measured ms/image for this plan (module-level registry
-        — the frozen plan itself stays hashable/jit-safe)."""
-        record_observation(self, ms_per_image)
+    def observe(
+        self,
+        ms_per_image: float,
+        *,
+        store: CalibrationStore | None = None,
+        shapes: PlanShapes | None = None,
+    ) -> None:
+        """Record one measured ms/image for this plan.
+
+        Args:
+          ms_per_image: measured engine milliseconds per image.
+          store: the :class:`CalibrationStore` to record into — an
+            index-scoped store (``Index.calibration``) for durable,
+            manifest-persisted calibration, or ``None`` for the
+            module-level default (the frozen plan itself stays
+            hashable/jit-safe either way).
+          shapes: the shapes the measurement was taken at; required for
+            the observation to feed the fitted model.
+        """
+        target = (store if store is not None
+                  else costmodel_lib.default_calibration())
+        target.record(self, ms_per_image, shapes)
 
 
 def _point_major_budgets(
@@ -225,23 +206,6 @@ def _query_routed_budgets(
     return dataclasses.replace(p, q_tile=q_tile, p_cap=p_cap)
 
 
-def _scan_cost(p: SearchPlan, *, shard_rows: int, n_shards: int,
-               q_rows: int, k: int) -> float:
-    """First-order per-shard cost (distance pairs + carry traffic)."""
-    if p.layout == "point_major":
-        n_waves = shard_rows // p.block_rows
-        tile_pairs = shard_rows * p.q_cap
-        carry = n_waves * q_rows * k  # running-best table touched per wave
-        return float(tile_pairs + carry)
-    q_cap_shard = round_up(
-        max(p.q_tile, int(q_rows / n_shards * p.query_capacity_factor)),
-        p.q_tile,
-    )
-    n_qwaves = q_cap_shard // p.q_tile
-    shuffle = q_rows / n_shards * 2.0  # all_to_all send+recv rows
-    return float(n_qwaves * p.q_tile * p.p_cap + shuffle)
-
-
 def plan(
     *,
     rows: int,
@@ -258,7 +222,9 @@ def plan(
     q_tile: int | None = None,
     p_cap: int | None = None,
     query_capacity_factor: float = 4.0,
-    use_observations: bool = False,
+    model: Any = "auto",
+    calibration: CalibrationStore | None = None,
+    use_observations: bool | None = None,
 ) -> SearchPlan:
     """Resolve a full :class:`SearchPlan` from shapes.
 
@@ -274,34 +240,45 @@ def plan(
       wire_dtype: routed-shuffle payload dtype.
       block_rows/q_cap/q_tile/p_cap: pin a budget instead of deriving it;
         ``query_capacity_factor``: routing headroom for hot shards.
-      use_observations: prefer measured ms/image over the shape model
-        (see below).
+      model: which cost model ranks an ``"auto"`` layout — one of
+        ``"auto"`` (fitted > observed > heuristic, the default),
+        ``"heuristic"``, ``"observed"``, ``"fitted"``, or a prebuilt
+        :class:`~repro.core.engine.costmodel.CostModel`.
+      calibration: the :class:`CalibrationStore` the calibrated models
+        read (an index's ``Index.calibration``); ``None`` uses the
+        module-level default store.
+      use_observations: deprecated — ``True`` maps to
+        ``model="observed"``, ``False`` to ``model="heuristic"``.
 
     Returns:
       A fully resolved (budgeted) :class:`SearchPlan`.
 
     Raises:
-      ValueError: ``probes > n_leaves``; an unknown ``layout``; or
-        ``layout="query_routed"`` when ``n_leaves`` does not divide over
-        the shards (leaf ownership is a contiguous range per shard).
+      ValueError: ``probes > n_leaves``; an unknown ``layout`` or
+        ``model``; or ``layout="query_routed"`` when ``n_leaves`` does
+        not divide over the shards (leaf ownership is a contiguous range
+        per shard).
 
-    ``layout="auto"`` budgets *both* layouts and keeps the one with the
-    lower modelled scan cost.
-
-    ``use_observations=True`` closes the cost-model loop (ROADMAP): when
-    *both* candidate plans have measured ms/image under their exact plan
-    signature (fed by ``SearchPlan.observe`` from the serving session and
-    benchmarks), the measured means rank the layouts instead of the shape
-    model. With fewer than two measured candidates the shape model decides
-    — a single measurement cannot be compared against a modelled cost.
-
-    Caveat: a plan signature keys on the *resolved budgets*, which embed
-    the index/query shapes only when the budgets were derived by this
-    function. Explicitly pinned budgets (e.g. a CLI ``--q-cap``) produce
-    the same signature at any corpus size, so measurements can bleed
-    across shapes; fitting a parametric model over shapes is the ROADMAP
-    follow-on.
+    ``layout="auto"`` budgets *both* layouts and asks the cost model to
+    keep the cheaper one. With no calibration data every model chain
+    falls back to the heuristic shape rules, so a cold process plans
+    exactly as it always has; once measurements exist (recorded by the
+    serving session, persisted in the index manifest) they decide.
+    Ties go to the paper-faithful point-major baseline under every model.
     """
+    if use_observations is not None:
+        if model != "auto":
+            raise ValueError(
+                "pass either model=... or the deprecated "
+                "use_observations=..., not both"
+            )
+        warnings.warn(
+            "plan(use_observations=...) is deprecated; use "
+            "model='observed' (True) or model='heuristic' (False)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        model = "observed" if use_observations else "heuristic"
     if probes > n_leaves:
         raise ValueError(f"{probes=} must be <= {n_leaves=}")
     shard_rows = max(1, rows // max(1, n_shards))
@@ -330,23 +307,12 @@ def plan(
         return qr.resolved()
     if layout != "auto":
         raise ValueError(f"unknown layout {layout!r}")
-    if use_observations:
-        measured = {
-            p.layout: _OBSERVATIONS.get(_plan_signature(p)) for p in (pm, qr)
-        }
-        if all(measured.values()):
-            mean = lambda o: o["total_ms"] / max(1, o["count"])  # noqa: E731
-            # tie goes to the paper-faithful baseline, like the shape model
-            pick = (
-                pm
-                if mean(measured["point_major"]) <= mean(measured["query_routed"])
-                else qr
-            )
-            return pick.resolved()
-    cost = {
-        p.layout: _scan_cost(p, shard_rows=shard_rows, n_shards=n_shards,
-                             q_rows=q_rows, k=k)
-        for p in (pm, qr)
-    }
-    # tie goes to the paper-faithful baseline
-    return (pm if cost["point_major"] <= cost["query_routed"] else qr).resolved()
+    ctx = PlanShapes(
+        rows=rows, n_queries=n_queries, n_shards=n_shards, n_leaves=n_leaves
+    )
+    # candidates listed baseline-first: every model breaks ties toward
+    # the paper-faithful point-major scan
+    pick = costmodel_lib.resolve_model(model, calibration).choose(
+        (pm.resolved(), qr.resolved()), ctx
+    )
+    return pick

@@ -154,15 +154,19 @@ def batch_search(
     impl: str = "xla",
     p_cap: int | None = None,
     q_tile: int | None = None,
-    use_observations: bool = False,
+    cost_model="auto",
+    calibration=None,
+    use_observations: bool | None = None,
 ) -> SearchResult:
     """Eager convenience wrapper: plan, build lookup, pad, jit, run, trim.
 
     ``layout`` is one of ``point_major`` (paper-faithful wave scan),
     ``query_routed`` (beyond-paper shuffle), or ``auto`` (the ``plan()``
-    cost model picks; ``use_observations=True`` lets measured ms/image
-    override the shape model). ``probes=T`` visits each query's T nearest
-    leaves — the multi-probe recall lever (docs/engine.md).
+    cost model picks — ``cost_model``/``calibration`` select which model
+    and which calibration store, see
+    :mod:`repro.core.engine.costmodel`; ``use_observations`` is the
+    deprecated pre-cost-model spelling). ``probes=T`` visits each query's
+    T nearest leaves — the multi-probe recall lever (docs/engine.md).
     """
     n_shards = data_axis_size(mesh)
     q = queries.shape[0]
@@ -179,6 +183,8 @@ def batch_search(
         q_cap=q_cap,
         q_tile=q_tile,
         p_cap=p_cap,
+        model=cost_model,
+        calibration=calibration,
         use_observations=use_observations,
     )
     lookup = jit_build_lookup(tree, queries, probes=probes)

@@ -40,7 +40,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engine import SearchPlan, plan as make_plan
+from repro.core.engine import (
+    CalibrationStore,
+    SearchPlan,
+    plan as make_plan,
+)
 from repro.core.engine.executors import SearchResult
 from repro.core.index_build import DistributedIndex, build_index
 from repro.core.search import jit_build_lookup, search_with_lookup
@@ -112,6 +116,7 @@ class Index:
         meta: dict | None = None,
         wire_dtype=jnp.float32,
         shard_plan: ShardPlan | None = None,
+        calibration: CalibrationStore | None = None,
     ):
         self.directory = directory
         self.tree = tree
@@ -121,6 +126,12 @@ class Index:
         self._staged: list[Segment] = []
         self._shard_plan = shard_plan
         self._shard_plan_dirty = False
+        # index-scoped cost-model calibration: measured ms/image per plan
+        # signature, persisted in the manifest (its own dirty flag drives
+        # commit), consulted by search()/serving via plan(model="auto")
+        self.calibration = (
+            calibration if calibration is not None else CalibrationStore()
+        )
         self._tombstones = (
             np.sort(np.asarray(tombstones, np.int64))
             if tombstones is not None and len(tombstones)
@@ -249,6 +260,10 @@ class Index:
             wire_dtype=wire,
             shard_plan=(
                 ShardPlan.from_json(m.shard_plan) if m.shard_plan else None
+            ),
+            calibration=(
+                CalibrationStore.from_json(m.calibration)
+                if m.calibration else None
             ),
         )
 
@@ -388,6 +403,9 @@ class Index:
             next_id=self._next_id,
             meta=self._user_meta,
             shard_plan=shard_plan.to_json() if shard_plan else None,
+            calibration=(
+                self.calibration.to_json() if len(self.calibration) else None
+            ),
         )
 
     def _plan_for(self, segments: Sequence[Segment]) -> ShardPlan | None:
@@ -554,8 +572,8 @@ class Index:
         return int(ids.size)
 
     def commit(self) -> int:
-        """Publish staged segments + tombstones + metadata + shard plan:
-        one atomic manifest bump.
+        """Publish staged segments + tombstones + metadata + shard plan +
+        cost-model calibration: one atomic manifest bump.
 
         Idempotent — committing with nothing staged returns the current
         version without writing. A crash *before* the manifest rename
@@ -575,7 +593,7 @@ class Index:
             a retried ``commit()`` re-attempts publication.
         """
         if not (self._staged or self._tombstones_dirty or self._meta_dirty
-                or self._shard_plan_dirty):
+                or self._shard_plan_dirty or self.calibration.dirty):
             return self._version
         # durable writes FIRST, memory state only after they succeed — a
         # failed write leaves the handle still-staged, so a retried
@@ -601,6 +619,7 @@ class Index:
         self._tombstones_dirty = False
         self._meta_dirty = False
         self._shard_plan_dirty = False
+        self.calibration.mark_clean()
         return version
 
     def compact(self) -> str | None:
@@ -670,6 +689,7 @@ class Index:
         self._tombstones = np.empty((0,), np.int64)
         self._tombstones_dirty = False
         self._meta_dirty = False
+        self.calibration.mark_clean()
         self._version = version
         self._views = None
         if self.directory:
@@ -753,7 +773,8 @@ class Index:
         q_cap: int | None = None,
         q_tile: int | None = None,
         p_cap: int | None = None,
-        use_observations: bool = False,
+        cost_model="auto",
+        use_observations: bool | None = None,
     ) -> SearchResult:
         """k-NN over every live row: one shared lookup build, one executor
         run per segment, one ascending-distance merge across segments.
@@ -765,9 +786,13 @@ class Index:
             (layout, k, probes, impl, budgets) override the keyword
             arguments; budgets are still re-resolved per segment, since
             tile sizes must divide each segment's shard rows.
-          layout/probes/impl/block_rows/q_cap/q_tile/p_cap/
-            use_observations: per-call plan knobs, as in
-            :func:`repro.core.engine.plan`.
+          layout/probes/impl/block_rows/q_cap/q_tile/p_cap: per-call plan
+            knobs, as in :func:`repro.core.engine.plan`.
+          cost_model: which model ranks an ``"auto"`` layout (``"auto"``
+            / ``"heuristic"`` / ``"observed"`` / ``"fitted"``), consulting
+            *this index's* manifest-persisted calibration store.
+          use_observations: deprecated spelling of
+            ``cost_model="observed"`` (see :func:`repro.core.engine.plan`).
 
         Returns:
           A :class:`SearchResult`: ``(q, k)`` ids (``-1`` where fewer
@@ -812,6 +837,8 @@ class Index:
                 q_cap=q_cap,
                 q_tile=q_tile,
                 p_cap=p_cap,
+                model=cost_model,
+                calibration=self.calibration,
                 use_observations=use_observations,
             )
             per.append(

@@ -41,6 +41,10 @@ class Manifest:
     # serialized repro.index.sharding.ShardPlan (scatter-gather serving);
     # absent on pre-sharding manifests, so from_json defaults it
     shard_plan: dict | None = None
+    # serialized repro.core.engine.costmodel.CalibrationStore (measured
+    # ms/image per plan signature, the cost-model calibration data);
+    # versioned like shard_plan — absent on pre-calibration manifests
+    calibration: dict | None = None
 
     def to_json(self) -> dict:
         return {
@@ -51,6 +55,7 @@ class Manifest:
             "next_id": int(self.next_id),
             "meta": dict(self.meta),
             "shard_plan": self.shard_plan,
+            "calibration": self.calibration,
         }
 
     @classmethod
@@ -62,6 +67,7 @@ class Manifest:
             next_id=int(d.get("next_id", 0)),
             meta=dict(d.get("meta", {})),
             shard_plan=d.get("shard_plan"),
+            calibration=d.get("calibration"),
         )
 
 

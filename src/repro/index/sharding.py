@@ -37,7 +37,14 @@ from typing import Sequence
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engine import SearchPlan, plan as make_plan
+from repro.core.engine import (
+    PlanShapes,
+    SearchPlan,
+    fitted_component,
+    plan as make_plan,
+    scale_slab_budget,
+    shard_slab_scales,
+)
 from repro.core.engine.executors import SearchResult
 from repro.core.search import jit_build_lookup, search_with_lookup
 from repro.distributed.meshutil import data_axis_size, shard_submeshes
@@ -223,6 +230,57 @@ def shard_local_partial(
     )
 
 
+def fitted_shard_scales(
+    index,
+    shard_views,
+    meshes,
+    *,
+    cost_model,
+    n_queries: int,
+    k: int,
+    probes: int,
+    layout: str,
+    impl: str,
+) -> list[float]:
+    """Per-shard slab-headroom multipliers from fitted per-shard costs —
+    shared by :meth:`ShardedIndex.search` and the sharded serving
+    session's bucket ladders.
+
+    Each non-empty shard's total rows are priced by the fitted model;
+    the probe plan supplying the tile features is derived under the SAME
+    ``cost_model`` the per-segment plans will use, so the priced layout
+    matches the one that actually executes (a fitted flip prices the
+    flipped layout). Shards above the mean earn proportionally more slab
+    headroom (``engine.shard_slab_scales``, grow-only, so result-safe).
+    All ones — the uniform-split fallback — until ``index.calibration``
+    yields a usable fit, or when any shard cannot be planned/priced.
+    """
+    fitted = fitted_component(cost_model, index.calibration)
+    if fitted is None:
+        return [1.0] * len(shard_views)
+    probe_plans, shapes = [], []
+    for shard, mesh in zip(shard_views, meshes):
+        if not shard:
+            continue
+        rows = sum(int(v.rows) for _, v in shard)
+        n_shards = data_axis_size(mesh)
+        try:
+            probe_plans.append(make_plan(
+                rows=rows, n_leaves=index.n_leaves, n_queries=n_queries,
+                n_shards=n_shards, k=k, probes=probes, layout=layout,
+                impl=impl, model=cost_model,
+                calibration=index.calibration,
+            ))
+        except ValueError:  # e.g. unroutable leaves at this shard
+            return [1.0] * len(shard_views)
+        shapes.append(PlanShapes(
+            rows=rows, n_queries=n_queries, n_shards=n_shards,
+            n_leaves=index.n_leaves,
+        ))
+    scales = iter(shard_slab_scales(fitted, probe_plans, shapes))
+    return [next(scales) if shard else 1.0 for shard in shard_views]
+
+
 def gather_merge(
     partials: Sequence[tuple[np.ndarray, np.ndarray, np.ndarray]], k: int
 ) -> tuple[np.ndarray, np.ndarray]:
@@ -329,17 +387,28 @@ class ShardedIndex:
         q_cap: int | None = None,
         q_tile: int | None = None,
         p_cap: int | None = None,
-        use_observations: bool = False,
+        cost_model="auto",
+        use_observations: bool | None = None,
     ) -> SearchResult:
         """Scatter-gather k-NN: one shared lookup build, each shard scans
         its segments with the engine's jit-cached executors, per-shard
         candidates merge by ``(distance, slot)``.
 
         Args mirror :meth:`Index.search` exactly — including the
-        ``plan`` template, whose fields override the keyword arguments.
-        Results are bit-identical to it (ids and distances, both
-        layouts, any ``probes``, tombstones respected) at every shard
-        count — see the module docstring for the slot argument.
+        ``plan`` template, whose fields override the keyword arguments,
+        and ``cost_model``, which consults the index's calibration store.
+        When a fitted model is available, per-shard predicted costs set
+        per-shard slab budgets (``shard_slab_scales``): a shard the fit
+        prices above the mean gets proportionally more slab headroom in
+        place of the uniform split. Scales only ever *grow* budgets, so
+        in the zero-overflow regime (``q_cap_overflow == 0``, the one
+        every identity test pins down) results are bit-identical to
+        :meth:`Index.search` (ids and distances, both layouts, any
+        ``probes``, tombstones respected) at every shard count and under
+        every ``cost_model``; when a derived slab *would* overflow, a
+        grown slab can only recover candidates the uniform split
+        truncated — strictly closer to the true k-NN, overflow still
+        counted — see the module docstring for the slot argument.
 
         Returns a :class:`SearchResult`; ``pairs`` / ``q_cap_overflow``
         are summed across shards. Raises ``ValueError`` via ``plan()``
@@ -364,9 +433,13 @@ class ShardedIndex:
                 q_cap_overflow=jnp.zeros((), jnp.int32),
             )
         lookup = jit_build_lookup(self.index.tree, queries, probes=probes)
+        scales = fitted_shard_scales(
+            self.index, views, self._meshes, cost_model=cost_model,
+            n_queries=q, k=k, probes=probes, layout=layout, impl=impl,
+        )
         partials = []
         pairs = overflow = 0
-        for shard, mesh in zip(views, self._meshes):
+        for shard, mesh, scale in zip(views, self._meshes, scales):
             if not shard:
                 continue  # more shards than segments: an empty scatter leg
             n_shards = data_axis_size(mesh)
@@ -385,8 +458,20 @@ class ShardedIndex:
                     q_cap=q_cap,
                     q_tile=q_tile,
                     p_cap=p_cap,
+                    model=cost_model,
+                    calibration=self.index.calibration,
                     use_observations=use_observations,
                 )
+                # never scale a budget the caller pinned: a pinned
+                # slab must reproduce exactly (Args mirror Index.search)
+                pinned = (q_cap is not None
+                          if p.layout == "point_major"
+                          else p_cap is not None)
+                if not pinned:
+                    p = scale_slab_budget(
+                        p, scale, n_queries=q,
+                        shard_rows=view.rows // n_shards,
+                    )
                 per_seg.append(
                     search_with_lookup(view, lookup, p, mesh, n_queries=q)
                 )

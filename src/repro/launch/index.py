@@ -71,6 +71,13 @@ def main(argv=None) -> int:
         "--probes", type=int, default=1,
         help="multi-probe width for the verification search",
     )
+    ap.add_argument(
+        "--cost-model",
+        choices=("auto", "heuristic", "observed", "fitted"),
+        default="auto",
+        help="cost model for the verification search's auto layout "
+        "(consults the index's persisted calibration; docs/cost_model.md)",
+    )
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -209,7 +216,8 @@ def main(argv=None) -> int:
             store.read_rows(rows)
             + rng.standard_normal((len(rows), args.dim)).astype(np.float32)
         )
-        res = idx.search(queries, k=1, layout=args.layout, probes=args.probes)
+        res = idx.search(queries, k=1, layout=args.layout,
+                         probes=args.probes, cost_model=args.cost_model)
         got = np.array(res.ids[:, 0])
         hit = got == base_id + rows
         # a grown index may hold exact copies of the planted row (e.g. the

@@ -62,6 +62,13 @@ def main(argv=None) -> int:
     ap.add_argument("--probes", type=int, default=1,
                     help="multi-probe width: leaves visited per query")
     ap.add_argument("--impl", default="xla")
+    ap.add_argument("--cost-model",
+                    choices=("auto", "heuristic", "observed", "fitted"),
+                    default="auto",
+                    help="which cost model ranks an auto layout: auto "
+                         "prefers fitted > observed > heuristic over the "
+                         "index's manifest-persisted calibration "
+                         "(docs/cost_model.md)")
     # serving
     ap.add_argument("--max-batch-rows", type=int, default=4096,
                     help="largest micro-batch bucket (query rows)")
@@ -109,7 +116,6 @@ def main(argv=None) -> int:
     import jax
     import jax.numpy as jnp
 
-    from repro.core.engine import observations
     from repro.core.index_build import build_index
     from repro.core.tree import build_tree
     from repro.data import synth
@@ -170,6 +176,7 @@ def main(argv=None) -> int:
         k=args.k, layout=args.layout, probes=args.probes, impl=args.impl,
         max_batch_rows=args.max_batch_rows, n_buckets=args.n_buckets,
         cache_leaves=args.cache_leaves, cache_admit_after=args.cache_admit,
+        cost_model=args.cost_model,
     )
     if args.buckets:
         session_kw["buckets"] = [int(b) for b in args.buckets.split(",")]
@@ -235,6 +242,8 @@ def main(argv=None) -> int:
     dim = int(meta.get("dim", args.dim))
     print(f"corpus: {n_images} images x {dpi} descriptors x d={dim} "
           f"(layout={args.layout}, probes={args.probes}, k={args.k})")
+    print(f"cost model: {session.active_cost_model()} "
+          f"({len(session.index.calibration)} calibration records)")
     for p in session.plan_summary():
         print(f"bucket {p['bucket']:>6} rows: layout={p['layout']} "
               f"q_total={p['q_total']} block_rows={p['block_rows']} "
@@ -323,6 +332,18 @@ def main(argv=None) -> int:
     print(f"steady-state recompiles after warmup: {n_recomp} "
           f"({'OK' if n_recomp == 0 else 'REGRESSION'})")
 
+    # make this run's measured ms/image durable: the next serve run's
+    # plan(model="auto") then opens with a warm calibration store
+    if args.index_dir and session.index.calibration.dirty:
+        # best-effort: a lost calibration commit (concurrent committer,
+        # full/read-only disk) must not fail an otherwise-good serve run
+        try:
+            v = session.index.commit()
+            print(f"calibration: {len(session.index.calibration)} plan "
+                  f"signatures committed (manifest v{v})")
+        except OSError as e:  # incl. FileExistsError from a commit race
+            print(f"warning: calibration not persisted ({e})")
+
     if not args.no_recall:
         ok = n = 0
         for c in completions:
@@ -342,7 +363,8 @@ def main(argv=None) -> int:
             "metrics": m.to_dict(),
             "cache": session.cache.stats(),
             "plans": session.plan_summary(),
-            "plan_observations": observations(),
+            "cost_model": session.active_cost_model(),
+            "plan_observations": session.index.calibration.snapshot(),
             "wall_s": wall,
             "shards": (
                 session.per_shard_stats()

@@ -40,10 +40,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import (
+    PlanShapes,
     SearchPlan,
     bucket_ladder,
     make_executor,
     plan as make_plan,
+    resolve_model,
+    scale_slab_budget,
     snap_to_bucket,
 )
 from repro.core.engine.executors import SearchResult, pad_lookup
@@ -71,6 +74,7 @@ class _BucketRuntime:
     plans: tuple  # one resolved plan per segment
     q_total: int  # largest per-segment padded lookup row count
     fn: object  # jitted (segments, tree, queries, n_valid) -> (result, leaves)
+    plan_rows: tuple = ()  # (plan, padded rows, n_shards) per segment
 
 
 def make_bucket_runtime(
@@ -85,8 +89,17 @@ def make_bucket_runtime(
     impl: str,
     ordinals=None,
     emit_slots: bool = False,
+    cost_model="auto",
+    calibration=None,
+    slab_scale: float = 1.0,
 ) -> _BucketRuntime:
     """Build one warmed bucket rung over ``segments`` (masked views).
+
+    ``cost_model``/``calibration`` select which cost model ranks an
+    ``"auto"`` layout (see :mod:`repro.core.engine.costmodel`);
+    ``slab_scale`` grows each segment plan's slab budget (the sharded
+    session's per-shard fitted-cost headroom — never shrinks, so it is
+    result-safe).
 
     The fused jitted pipeline runs ONE lookup build (probe routing + leaf
     sort) shared by every segment, then each segment's executor over it,
@@ -105,9 +118,9 @@ def make_bucket_runtime(
     if ordinals is None:
         ordinals = tuple(range(len(segments)))
     q_rows = bucket * probes
-    plans, q_totals, execs = [], [], []
+    plans, base_plans, q_totals, execs = [], [], [], []
     for view in segments:
-        p = make_plan(
+        base_p = make_plan(
             rows=view.rows,
             n_leaves=n_leaves,
             n_queries=bucket,
@@ -116,7 +129,14 @@ def make_bucket_runtime(
             probes=probes,
             layout=layout,
             impl=impl,
+            model=cost_model,
+            calibration=calibration,
         )
+        p = scale_slab_budget(
+            base_p, slab_scale, n_queries=bucket,
+            shard_rows=view.rows // n_shards,
+        )
+        base_plans.append(base_p)
         q_total = lookup_q_total(p, bucket, n_shards)
         execs.append(make_executor(
             mesh, p, n_leaves=n_leaves,
@@ -170,6 +190,13 @@ def make_bucket_runtime(
     return _BucketRuntime(
         bucket=bucket, plan=plans[primary], plans=tuple(plans),
         q_total=max(q_totals), fn=jax.jit(fused),
+        # calibration keys on the UNSCALED plans (what a later consult
+        # will derive, before any slab scaling) at each plan's own
+        # n_shards (sharded rungs plan on per-shard submeshes)
+        plan_rows=tuple(
+            (bp, int(v.rows), n_shards)
+            for bp, v in zip(base_plans, segments)
+        ),
     )
 
 
@@ -249,6 +276,12 @@ class SearchSession:
         both.
       k/layout/probes/impl: the serving plan knobs (see
         :func:`repro.core.engine.plan`).
+      cost_model: which cost model ranks an ``"auto"`` layout —
+        ``"auto"`` (fitted > observed > heuristic, the default),
+        ``"heuristic"``, ``"observed"``, or ``"fitted"`` — consulting the
+        index's manifest-persisted calibration store. Post-warmup
+        dispatches record measured ms/image back into that store
+        (durable at the index's next ``commit``).
       max_batch_rows/n_buckets/buckets: the warmed bucket ladder —
         explicit ``buckets`` override the derived geometric ladder.
       cache_leaves/cache_admit_after: hot-leaf cache capacity (0 = off)
@@ -274,6 +307,7 @@ class SearchSession:
         buckets: Sequence[int] | None = None,
         cache_leaves: int = 0,
         cache_admit_after: int = 2,
+        cost_model: str = "auto",
     ):
         from repro.index import Index
 
@@ -299,6 +333,7 @@ class SearchSession:
         self.layout = layout
         self.probes = int(probes)
         self.impl = impl
+        self.cost_model = cost_model
         self.buckets = (
             tuple(sorted(int(b) for b in buckets))
             if buckets
@@ -356,7 +391,15 @@ class SearchSession:
         return make_bucket_runtime(
             self.mesh, self.index.n_leaves, self._segments, bucket,
             k=self.k, probes=self.probes, layout=self.layout, impl=self.impl,
+            cost_model=self.cost_model, calibration=self.index.calibration,
         )
+
+    def active_cost_model(self) -> str:
+        """Which model currently decides (e.g. ``"auto(fitted)"``) —
+        resolved against the index's live calibration store."""
+        return resolve_model(
+            self.cost_model, self.index.calibration
+        ).describe()
 
     # -- compile accounting -------------------------------------------------
     def recompiles(self) -> int:
@@ -425,7 +468,7 @@ class SearchSession:
         self.metrics.q_cap_overflow += overflow
         if n_images:
             self.metrics.engine_images += n_images
-            rt.plan.observe(dt * 1e3 / n_images)
+            self._record_calibration(rt, dt * 1e3 / n_images)
         # a starved dispatch must not seed the cache: a cached full-slab
         # scan would disagree with the truncated engine answer
         self.cache.record(queries, leaves_np, exact=overflow == 0)
@@ -487,10 +530,34 @@ class SearchSession:
             off += s
         return out
 
+    def _record_calibration(self, rt: _BucketRuntime, ms_per_image: float
+                            ) -> None:
+        """Measured ms/image -> the index's calibration store. A dispatch
+        scans every segment (and shard) in one fused program, so the
+        measured ms is attributed to each executed plan proportionally to
+        its rows share — each record's shapes then match what the next
+        session's per-segment ``plan()`` consult will ask about, and the
+        fit gets one shape-consistent point per plan. Only after warmup:
+        a compile-tainted first dispatch must not poison the fit."""
+        if self._warmed_compiles is None:
+            return
+        total = sum(r for _, r, _ in rt.plan_rows) or 1
+        for p, rows, n_shards in rt.plan_rows:
+            self.index.calibration.record(
+                p, ms_per_image * rows / total,
+                shapes=PlanShapes(
+                    rows=rows,
+                    n_queries=rt.bucket,
+                    n_shards=n_shards,
+                    n_leaves=self.index.n_leaves,
+                ),
+            )
+
     def plan_summary(self) -> list[dict]:
         return [
             {
                 "bucket": rt.bucket,
+                "cost_model": self.cost_model,
                 "layout": rt.plan.layout,
                 "q_total": rt.q_total,
                 "block_rows": rt.plan.block_rows,

@@ -40,7 +40,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import SearchPlan, snap_to_bucket
-from repro.index.sharding import ShardedIndex, ShardPlan, gather_merge
+from repro.index.sharding import (
+    ShardedIndex,
+    ShardPlan,
+    fitted_shard_scales,
+    gather_merge,
+)
 from repro.serving.session import (
     SearchSession,
     _jit_cache_size,
@@ -57,6 +62,7 @@ class _ShardedRuntime:
     plan: SearchPlan  # primary plan (largest shard) — observe()/reporting
     plans: tuple  # every resolved per-segment plan across shards
     q_total: int  # largest per-segment padded lookup row count
+    plan_rows: tuple = ()  # (plan, padded rows, n_shards) across shards
 
 
 class ShardedSearchSession(SearchSession):
@@ -117,9 +123,10 @@ class ShardedSearchSession(SearchSession):
         shard_views = self.sharded.shard_views()
         self._runtimes = {}
         for b in self.buckets:
+            scales = self._shard_scales(shard_views, b)
             parts = []
-            for si, (shard, mesh) in enumerate(
-                zip(shard_views, self.sharded._meshes)
+            for si, (shard, mesh, scale) in enumerate(
+                zip(shard_views, self.sharded._meshes, scales)
             ):
                 if not shard:
                     continue  # more shards than segments: empty scatter leg
@@ -130,6 +137,9 @@ class ShardedSearchSession(SearchSession):
                     impl=self.impl,
                     ordinals=tuple(g for g, _ in shard),
                     emit_slots=True,
+                    cost_model=self.cost_model,
+                    calibration=self.index.calibration,
+                    slab_scale=scale,
                 )
                 parts.append((si, tuple(v for _, v in shard), rt))
             primary = max(
@@ -142,7 +152,23 @@ class ShardedSearchSession(SearchSession):
                 plan=parts[primary][2].plan,
                 plans=tuple(p for _, _, rt in parts for p in rt.plans),
                 q_total=max(rt.q_total for _, _, rt in parts),
+                # every shard scans the dispatch: the base session's
+                # rows-share attribution then covers all executed plans
+                plan_rows=tuple(
+                    pr for _, _, rt in parts for pr in rt.plan_rows
+                ),
             )
+
+    def _shard_scales(self, shard_views, bucket: int) -> list[float]:
+        """Per-shard slab-headroom multipliers for one bucket rung —
+        the shared :func:`repro.index.sharding.fitted_shard_scales`
+        (all ones until the index's calibration yields a usable fit, i.e.
+        the uniform budget split)."""
+        return fitted_shard_scales(
+            self.index, shard_views, self.sharded._meshes,
+            cost_model=self.cost_model, n_queries=bucket, k=self.k,
+            probes=self.probes, layout=self.layout, impl=self.impl,
+        )
 
     # -- compile accounting --------------------------------------------------
     def recompiles(self) -> int:
@@ -219,7 +245,7 @@ class ShardedSearchSession(SearchSession):
         self.metrics.q_cap_overflow += overflow
         if n_images:
             self.metrics.engine_images += n_images
-            rtb.plan.observe(dt * 1e3 / n_images)
+            self._record_calibration(rtb, dt * 1e3 / n_images)
         # a starved dispatch must not seed the cache (see SearchSession)
         self.cache.record(queries, leaves_np, exact=overflow == 0)
         return ids, dists, leaves_np, dt
@@ -242,6 +268,7 @@ class ShardedSearchSession(SearchSession):
         return [
             {
                 "bucket": rtb.bucket,
+                "cost_model": self.cost_model,
                 "layout": rtb.plan.layout,
                 "q_total": rtb.q_total,
                 "block_rows": rtb.plan.block_rows,

@@ -91,3 +91,16 @@ except ModuleNotFoundError:
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(autouse=True)
+def _isolated_calibration():
+    """Cost-model calibration hygiene: the module-level default store is
+    emptied around every test, so one test's recorded ms/image can never
+    flip another test's ``plan(model="auto")`` decision. (Index-scoped
+    stores are per-instance and need no guard.)"""
+    from repro.core.engine import costmodel
+
+    costmodel.reset_default_calibration()
+    yield
+    costmodel.reset_default_calibration()

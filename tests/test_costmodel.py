@@ -1,0 +1,510 @@
+"""The pluggable cost-model subsystem: calibration store round-trips,
+model selection/fallback (fitted > observed > heuristic), fitted-model
+generalization + monotonicity, manifest-persisted index-scoped
+calibration, and the bit-identity invariant — the model picks plans,
+never results — under every cost-model setting."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.engine import (
+    CalibrationStore,
+    FittedModel,
+    HeuristicModel,
+    ObservedModel,
+    PlanShapes,
+    default_calibration,
+    fitted_component,
+    plan as make_plan,
+    plan_signature,
+    resolve_model,
+    scale_slab_budget,
+    shard_slab_scales,
+)
+from repro.core.index_build import build_index
+from repro.core.tree import build_tree
+from repro.data import synth
+from repro.distributed.meshutil import local_mesh
+from repro.index import Index, ShardedIndex
+
+SHAPES = dict(rows=65_536, n_leaves=64, n_queries=256, n_shards=1, k=10)
+
+
+def _candidates(**overrides):
+    kw = dict(SHAPES, **overrides)
+    return (
+        make_plan(layout="point_major", **kw),
+        make_plan(layout="query_routed", **kw),
+    )
+
+
+def _ctx(**overrides):
+    kw = dict(SHAPES, **overrides)
+    return PlanShapes(rows=kw["rows"], n_queries=kw["n_queries"],
+                      n_shards=kw["n_shards"], n_leaves=kw["n_leaves"])
+
+
+def _calibrate_both_layouts(store, rows_list, ms_by_layout,
+                            n_queries=SHAPES["n_queries"]):
+    """Record both layouts' resolved plans at each rows shape."""
+    for rows in rows_list:
+        pm, qr = _candidates(rows=rows, n_queries=n_queries)
+        shapes = _ctx(rows=rows, n_queries=n_queries)
+        store.record(pm, ms_by_layout["point_major"](rows), shapes)
+        store.record(qr, ms_by_layout["query_routed"](rows), shapes)
+
+
+# ---------------------------------------------------------------------------
+# calibration store
+# ---------------------------------------------------------------------------
+
+
+def test_calibration_store_records_and_roundtrips():
+    store = CalibrationStore()
+    assert not store.dirty and len(store) == 0
+    pm, qr = _candidates()
+    store.record(pm, 10.0)
+    store.record(pm, 20.0, shapes=_ctx())
+    store.record(qr, 5.0, shapes=_ctx())
+    assert store.dirty and len(store) == 3  # (sig, shapes) keys
+    # exact-signature consult aggregates across the shapes measured at
+    agg = store.lookup(pm)
+    assert agg["count"] == 2 and agg["total_ms"] == 30.0
+    assert agg["min_ms"] == 10.0 and agg["max_ms"] == 20.0
+    assert agg["last_ms"] == 20.0
+    assert store.mean_ms(pm) == pytest.approx(15.0)
+    assert store.mean_ms(qr) == pytest.approx(5.0)
+    # snapshot keys on the signature string; shapes ride along when known
+    snap = store.snapshot()
+    assert len(snap) == 2
+    pm_key = [k for k in snap if k.startswith("point_major/")][0]
+    assert snap[pm_key]["mean_ms"] == pytest.approx(15.0)
+    assert len(snap[pm_key]["shapes"]) == 1
+    # JSON round trip preserves records, fit rows, and consult results
+    restored = CalibrationStore.from_json(store.to_json())
+    assert len(restored) == len(store)
+    assert restored.mean_ms(pm) == pytest.approx(15.0)
+    assert len(restored.fit_rows()) == len(store.fit_rows()) == 2
+    assert not restored.dirty  # freshly loaded state is clean
+    store.mark_clean()
+    assert not store.dirty
+    store.record(qr, 1.0)
+    assert store.dirty
+
+
+def test_observe_routes_to_explicit_store_even_when_empty():
+    """Regression: an *empty* store is falsy (len 0) — observe() must
+    still honour it rather than leaking into the module default."""
+    pm, _ = _candidates()
+    store = CalibrationStore()
+    pm.observe(5.0, store=store, shapes=_ctx())
+    assert len(store) == 1
+    assert len(default_calibration()) == 0
+
+
+def test_describe_reports_only_models_that_can_decide():
+    """Regression: describe() must not claim observed/fitted provenance
+    while only one layout is measured and the heuristic still decides."""
+    store = CalibrationStore()
+    pm, qr = _candidates()
+    assert resolve_model("auto", store).describe() == "auto(heuristic)"
+    store.record(pm, 5.0, shapes=_ctx())
+    assert resolve_model("auto", store).describe() == "auto(heuristic)"
+    store.record(qr, 5.0, shapes=_ctx())
+    assert resolve_model("auto", store).describe() == "auto(observed)"
+    _calibrate_both_layouts(
+        store, [SHAPES["rows"] * 4],
+        {"point_major": lambda r: 5.0, "query_routed": lambda r: 5.0},
+    )
+    assert resolve_model("auto", store).describe() == "auto(fitted)"
+    assert resolve_model("fitted", store).describe() == "fitted"
+
+
+def test_plan_rejects_model_and_use_observations_together():
+    with pytest.raises(ValueError, match="not both"):
+        make_plan(layout="auto", model="fitted", use_observations=True,
+                  **SHAPES)
+
+
+def test_default_store_reset_between_tests_part1():
+    """With the autouse guard, recordings here must not leak into any
+    other test (its twin below asserts the store comes back empty)."""
+    pm, _ = _candidates()
+    default_calibration().record(pm, 123.0)
+    assert len(default_calibration()) == 1
+
+
+def test_default_store_reset_between_tests_part2():
+    assert len(default_calibration()) == 0
+
+
+# ---------------------------------------------------------------------------
+# model selection and fallback
+# ---------------------------------------------------------------------------
+
+
+def test_fallback_chain_fitted_observed_heuristic():
+    store = CalibrationStore()
+    pm, qr = _candidates()
+    ctx = _ctx()
+
+    # empty store: everything falls through to the heuristic
+    pick, kind = resolve_model("auto", store).decide((pm, qr), ctx)
+    assert kind == "heuristic"
+    heuristic_pick = pick.layout
+
+    # one measured layout: observed cannot rank the pair -> heuristic
+    store.record(pm, 100.0, shapes=ctx)
+    pick, kind = resolve_model("auto", store).decide((pm, qr), ctx)
+    assert kind == "heuristic" and pick.layout == heuristic_pick
+
+    # both measured at ONE shape: fitted (needs 2 per layout) is not
+    # ready -> the observed exact-signature model decides
+    store.record(qr, 1.0, shapes=ctx)
+    pick, kind = resolve_model("auto", store).decide((pm, qr), ctx)
+    assert kind == "observed" and pick.layout == "query_routed"
+    # explicitly requested fitted with <N observations: same fallback
+    pick, kind = resolve_model("fitted", store).decide((pm, qr), ctx)
+    assert kind == "observed" and pick.layout == "query_routed"
+
+    # a second measured shape per layout: the fit becomes usable and
+    # takes precedence over observed
+    _calibrate_both_layouts(
+        store, [SHAPES["rows"] * 4],
+        {"point_major": lambda r: 400.0, "query_routed": lambda r: 1.0},
+    )
+    pick, kind = resolve_model("auto", store).decide((pm, qr), ctx)
+    assert kind == "fitted" and pick.layout == "query_routed"
+
+    # pinned models ignore the rest of the chain
+    pick, kind = resolve_model("heuristic", store).decide((pm, qr), ctx)
+    assert kind == "heuristic" and pick.layout == heuristic_pick
+    with pytest.raises(ValueError):
+        resolve_model("bogus", store)
+
+
+def test_observed_no_matching_signature_falls_back_to_heuristic():
+    """Observed data at one shape says nothing about a *different* plan
+    signature — the chain must fall back to the heuristic there."""
+    store = CalibrationStore()
+    pm, qr = _candidates()
+    store.record(pm, 100.0)
+    store.record(qr, 1.0)
+    other = _candidates(k=20)  # a different k: different plan signature
+    assert store.mean_ms(other[0]) is None  # genuinely unmeasured
+    pick, kind = resolve_model("observed", store).decide(other, _ctx())
+    assert kind == "heuristic"
+    assert pick.layout == make_plan(
+        layout="auto", model="heuristic", **dict(SHAPES, k=20)
+    ).layout
+
+
+def test_fitted_overrides_heuristic_at_unmeasured_shape():
+    """The acceptance case: calibrate at shapes A and B, then plan at an
+    unmeasured nearby shape C — the fit generalizes and flips the
+    heuristic's layout pick to the one the measurements imply."""
+    rows_a, rows_b, rows_c = 65_536, 262_144, 131_072
+    heuristic_at_c = make_plan(
+        layout="auto", model="heuristic", **dict(SHAPES, rows=rows_c)
+    )
+    winner = ("query_routed" if heuristic_at_c.layout == "point_major"
+              else "point_major")
+    # measurements contradict the shape rules: the heuristic's pick is
+    # slow (and grows with rows), the other layout is flat-cheap
+    ms = {
+        heuristic_at_c.layout: lambda r: 100.0 * r / rows_a,
+        winner: lambda r: 1.0,
+    }
+    store = CalibrationStore()
+    _calibrate_both_layouts(store, [rows_a, rows_b], ms)
+    # C's signatures are genuinely unmeasured -> observed cannot decide
+    c_pm, c_qr = _candidates(rows=rows_c)
+    assert store.mean_ms(c_pm) is None or store.mean_ms(c_qr) is None
+    pick, kind = resolve_model("auto", store).decide(
+        (c_pm, c_qr), _ctx(rows=rows_c)
+    )
+    assert kind == "fitted" and pick.layout == winner
+    # the full plan() path agrees, and differs from the heuristic's pick
+    auto = make_plan(layout="auto", model="auto", calibration=store,
+                     **dict(SHAPES, rows=rows_c))
+    assert auto.layout == winner != heuristic_at_c.layout
+    # predictions interpolate the measurements (A < C < B for the loser)
+    fitted = FittedModel(store)
+    loser_plan = c_pm if heuristic_at_c.layout == "point_major" else c_qr
+    pred_c = fitted.predict_ms(loser_plan, _ctx(rows=rows_c))
+    assert 100.0 < pred_c < 400.0
+
+
+@settings(max_examples=12)
+@given(
+    ms_a=st.floats(min_value=0.5, max_value=50.0),
+    slope=st.floats(min_value=0.0, max_value=8.0),
+    n_queries=st.sampled_from([64, 256, 1024]),
+    probes=st.integers(1, 3),
+)
+def test_fitted_predictions_monotone_in_rows_scanned(
+    ms_a, slope, n_queries, probes
+):
+    """Property: whatever was measured, FittedModel predictions never
+    decrease as rows_scanned grows (slope coefficients are clamped >= 0
+    by the active-set refit)."""
+    store = CalibrationStore()
+    rows_grid = [32_768, 131_072, 524_288]
+    for i, rows in enumerate(rows_grid):
+        kw = dict(SHAPES, rows=rows, n_queries=n_queries, probes=probes)
+        pm = make_plan(layout="point_major", **kw)
+        shapes = _ctx(rows=rows, n_queries=n_queries)
+        # ms grows (or stays flat) with rows at rate `slope`
+        store.record(pm, ms_a + slope * i, shapes)
+    fitted = FittedModel(store)
+    assert fitted.ready("point_major")
+    probe = make_plan(
+        layout="point_major",
+        **dict(SHAPES, rows=rows_grid[0], n_queries=n_queries,
+               probes=probes),
+    )
+    preds = [
+        fitted.predict_ms(probe, _ctx(rows=r, n_queries=n_queries))
+        for r in (2 ** e for e in range(13, 23))
+    ]
+    assert all(a <= b + 1e-9 for a, b in zip(preds, preds[1:])), preds
+
+
+def test_plan_use_observations_deprecation_shim():
+    pm, qr = _candidates()
+    default_calibration().record(pm, 100.0)
+    default_calibration().record(qr, 1.0)
+    with pytest.deprecated_call():
+        shimmed = make_plan(layout="auto", use_observations=True, **SHAPES)
+    assert shimmed.layout == "query_routed"  # observed semantics
+    with pytest.deprecated_call():
+        legacy_off = make_plan(layout="auto", use_observations=False,
+                               **SHAPES)
+    assert legacy_off.layout == make_plan(
+        layout="auto", model="heuristic", **SHAPES
+    ).layout  # False pins the old shape-model behaviour
+
+
+# ---------------------------------------------------------------------------
+# per-shard budget scaling helpers
+# ---------------------------------------------------------------------------
+
+
+def test_scale_slab_budget_grows_never_shrinks():
+    # a big batch leaves q_cap well under the probe-expanded query rows,
+    # so there is real headroom to grow into
+    pm, qr = _candidates(n_queries=4096)
+    kw = dict(n_queries=4096, shard_rows=SHAPES["rows"])
+    assert scale_slab_budget(pm, 1.0, **kw) is pm
+    assert scale_slab_budget(pm, 0.5, **kw) is pm  # never shrink
+    grown = scale_slab_budget(pm, 1.5, **kw)
+    assert grown.layout == "point_major"
+    assert grown.q_cap >= int(pm.q_cap * 1.5) and grown.q_cap % 8 == 0
+    assert grown.block_rows == pm.block_rows  # only the slab budget moves
+    # growth caps at the probe-expanded query rows: a slab never pads
+    # dead rows past the real batch
+    maxed = scale_slab_budget(pm, 100.0, **kw)
+    assert maxed.q_cap == 4096 * pm.probes
+    grown_qr = scale_slab_budget(qr, 2.0, n_queries=4096,
+                                 shard_rows=qr.p_cap + 8)
+    assert grown_qr.p_cap == qr.p_cap + 8  # capped at the shard rows
+    assert grown_qr.q_tile == qr.q_tile
+
+
+def test_shard_slab_scales_uniform_until_fitted():
+    pm_a, _ = _candidates()
+    pm_b, _ = _candidates(rows=SHAPES["rows"] * 2)
+    shapes = [_ctx(), _ctx(rows=SHAPES["rows"] * 2)]
+    # no fit -> uniform
+    assert shard_slab_scales(None, [pm_a, pm_b], shapes) == [1.0, 1.0]
+    store = CalibrationStore()
+    assert fitted_component("auto", store) is None
+    assert fitted_component("heuristic", store) is None
+    # calibrate: cost grows with rows -> the bigger shard earns headroom
+    _calibrate_both_layouts(
+        store, [SHAPES["rows"], SHAPES["rows"] * 4],
+        {"point_major": lambda r: r / 1000.0,
+         "query_routed": lambda r: r / 1000.0},
+    )
+    fitted = fitted_component("auto", store)
+    assert fitted is not None
+    scales = shard_slab_scales(fitted, [pm_a, pm_b], shapes)
+    assert scales[0] == 1.0  # at/below mean: keep the derived default
+    assert 1.0 < scales[1] <= 2.0  # pricier shard: more slab headroom
+
+
+# ---------------------------------------------------------------------------
+# index-scoped calibration through the lifecycle, and bit-identity
+# ---------------------------------------------------------------------------
+
+DIM = 24
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    vecs_np, _ = synth.sample_descriptors(3000, DIM, seed=0, n_centers=50)
+    vecs = jnp.asarray(vecs_np)
+    tree = build_tree(vecs, (8, 4), key=jax.random.PRNGKey(1))
+    mesh = local_mesh()
+    built = build_index(vecs, tree, mesh, wire_dtype=jnp.float32)
+    q_np = np.array(vecs[:48]) + np.random.default_rng(2).standard_normal(
+        (48, DIM)
+    ).astype(np.float32)
+    return vecs_np, tree, mesh, built, q_np
+
+
+def test_calibration_survives_the_index_lifecycle(tmp_path, corpus):
+    """Recorded during serving (post-warmup only) → persisted by commit →
+    reloaded by open → carried through compact."""
+    from repro.serving import SearchSession
+
+    vecs_np, tree, mesh, built, q_np = corpus
+    d = str(tmp_path / "idx")
+    idx = Index.create(tree, d, mesh=mesh)
+    idx.append(vecs_np[:2000])
+    idx.append(vecs_np[2000:])
+    v0 = idx.commit()
+
+    s = SearchSession(idx, k=5, layout="point_major", buckets=(48,),
+                      cost_model="heuristic")
+    # pre-warmup dispatches must NOT record (compile-tainted timings)
+    s.search(q_np, n_images=4)
+    assert len(idx.calibration) == 0 and not idx.calibration.dirty
+    s.warmup()
+    s.search(q_np, n_images=4)
+    # one record per executed segment plan, ms attributed by rows share,
+    # keyed at the shapes a later per-segment plan() consult will use
+    expected = {(plan_signature(p), r)
+                for p, r, _ in s._runtimes[48].plan_rows}
+    assert len(idx.calibration) == len(expected) and idx.calibration.dirty
+    sigs = {plan_signature(p) for p in s._runtimes[48].plans}
+    recs = idx.calibration.fit_rows()
+    assert {r[0] for r in recs} <= sigs
+    assert all(r[2].n_queries == 48 for r in recs)
+    # the observed model's exact-shape consult must find every executed
+    # plan at the shapes a later per-segment plan() will ask about
+    for p, seg_rows, n_sh in s._runtimes[48].plan_rows:
+        assert idx.calibration.mean_ms(
+            p, PlanShapes(rows=seg_rows, n_queries=48, n_shards=n_sh,
+                          n_leaves=idx.n_leaves)
+        ) is not None
+    n_recs = len(idx.calibration)
+
+    # calibration alone is commit-worthy, and the bump is durable
+    v1 = idx.commit()
+    assert v1 == v0 + 1 and not idx.calibration.dirty
+    reopened = Index.open(d, mesh=mesh)
+    assert len(reopened.calibration) == n_recs
+    assert reopened.calibration.mean_ms(s._runtimes[48].plan) == (
+        pytest.approx(idx.calibration.mean_ms(s._runtimes[48].plan))
+    )
+
+    # compact() carries the store into the new manifest
+    reopened.compact()
+    assert len(reopened.calibration) == n_recs
+    recompacted = Index.open(d, mesh=mesh)
+    assert len(recompacted.calibration) == n_recs
+    # idempotent commit: clean calibration does not bump the version
+    v2 = recompacted.version
+    assert recompacted.commit() == v2
+
+
+@pytest.mark.parametrize("cost_model",
+                         ["heuristic", "observed", "fitted", "auto"])
+def test_search_bit_identical_under_every_cost_model(corpus, cost_model):
+    """The model picks plans, never results: with a populated calibration
+    store (fitted active, per-shard scales live), Index.search and
+    ShardedIndex.search return bit-identical ids+dists under every
+    cost-model setting, and sharded == unsharded within each."""
+    vecs_np, tree, mesh, built, q_np = corpus
+    idx = Index.create(tree, None, mesh=mesh)
+    idx.append(vecs_np[:1200])
+    idx.append(vecs_np[1200:2100])
+    idx.append(vecs_np[2100:])
+    idx.commit()
+    ref = idx.search(q_np, k=5, probes=2, cost_model="heuristic")
+    # calibrate both layouts at two shapes (cost rises with rows) so the
+    # fitted model is ready and shard scales deviate from uniform
+    seg_rows = [v.rows for v in idx.segment_views()]
+    for rows in (min(seg_rows), max(seg_rows) * 4):
+        for layout in ("point_major", "query_routed"):
+            p = make_plan(rows=rows, n_leaves=idx.n_leaves,
+                          n_queries=len(q_np), n_shards=1, k=5, probes=2,
+                          layout=layout)
+            idx.calibration.record(
+                p, rows / 500.0,
+                PlanShapes(rows=rows, n_queries=len(q_np), n_shards=1,
+                           n_leaves=idx.n_leaves),
+            )
+    assert fitted_component(cost_model, idx.calibration) is not None or \
+        cost_model in ("heuristic", "observed")
+    got = idx.search(q_np, k=5, probes=2, cost_model=cost_model)
+    np.testing.assert_array_equal(np.asarray(got.ids), np.asarray(ref.ids))
+    np.testing.assert_array_equal(np.asarray(got.dists),
+                                  np.asarray(ref.dists))
+    for shards in (2, 3):
+        sharded = ShardedIndex(idx, n_shards=shards)
+        res = sharded.search(q_np, k=5, probes=2, cost_model=cost_model)
+        np.testing.assert_array_equal(np.asarray(res.ids),
+                                      np.asarray(ref.ids))
+        np.testing.assert_array_equal(np.asarray(res.dists),
+                                      np.asarray(ref.dists))
+    # a caller-pinned slab budget is never scaled by fitted per-shard
+    # headroom: pinned sharded == pinned unsharded even with a warm fit
+    pinned_ref = idx.search(q_np, k=5, layout="point_major", q_cap=64,
+                            cost_model=cost_model)
+    pinned = ShardedIndex(idx, n_shards=2).search(
+        q_np, k=5, layout="point_major", q_cap=64, cost_model=cost_model
+    )
+    np.testing.assert_array_equal(np.asarray(pinned.ids),
+                                  np.asarray(pinned_ref.ids))
+    np.testing.assert_array_equal(np.asarray(pinned.dists),
+                                  np.asarray(pinned_ref.dists))
+
+
+@pytest.mark.parametrize("cost_model", ["heuristic", "auto"])
+def test_sessions_bit_identical_under_cost_models(corpus, cost_model):
+    """Serving sessions (unsharded and scatter-gather) under a populated
+    calibration store: identical results to the heuristic baseline, zero
+    steady-state recompiles, and post-warmup dispatches keep recording."""
+    from repro.serving import SearchSession, ShardedSearchSession
+
+    vecs_np, tree, mesh, built, q_np = corpus
+    idx = Index.create(tree, None, mesh=mesh)
+    idx.append(vecs_np[:1500])
+    idx.append(vecs_np[1500:])
+    idx.commit()
+    baseline = SearchSession(idx, k=5, probes=2, buckets=(48,),
+                             cost_model="heuristic")
+    baseline.warmup()
+    ref_ids, ref_dists = baseline.search(q_np)
+    # the baseline's own post-warmup dispatch has already begun calibrating
+    assert len(idx.calibration) >= 0
+    for rows in (2048, 8192):
+        for layout in ("point_major", "query_routed"):
+            p = make_plan(rows=rows, n_leaves=idx.n_leaves, n_queries=48,
+                          n_shards=1, k=5, probes=2, layout=layout)
+            idx.calibration.record(
+                p, rows / 100.0,
+                PlanShapes(rows=rows, n_queries=48, n_shards=1,
+                           n_leaves=idx.n_leaves),
+            )
+    s = SearchSession(idx, k=5, probes=2, buckets=(48,),
+                      cost_model=cost_model)
+    s.warmup()
+    ids, dists = s.search(q_np, n_images=6)
+    np.testing.assert_array_equal(ids, ref_ids)
+    np.testing.assert_array_equal(dists, ref_dists)
+    assert s.steady_state_recompiles() == 0
+    assert s.active_cost_model().startswith(cost_model)
+    sh = ShardedSearchSession(idx, shards=2, k=5, probes=2, buckets=(48,),
+                              cost_model=cost_model)
+    sh.warmup()
+    ids, dists = sh.search(q_np, n_images=6)
+    np.testing.assert_array_equal(ids, ref_ids)
+    np.testing.assert_array_equal(dists, ref_dists)
+    assert sh.steady_state_recompiles() == 0

@@ -96,29 +96,34 @@ def test_plan_observations_registry():
 
 
 def test_plan_use_observations_preference_flip():
-    """The cost-model consult loop: measured ms/image under both candidate
-    signatures overrides the shape model's layout pick; with fewer than
-    two measured candidates the shape model still decides."""
+    """The cost-model consult loop, on by default: measured ms/image under
+    both candidate signatures overrides the heuristic's layout pick; with
+    fewer than two measured candidates the heuristic still decides."""
     reset_observations()
     shapes = dict(rows=65_536, n_leaves=64, n_queries=256, n_shards=1, k=10)
-    modelled = make_plan(layout="auto", **shapes)
+    modelled = make_plan(layout="auto", model="heuristic", **shapes)
     pm = make_plan(layout="point_major", **shapes)
     qr = make_plan(layout="query_routed", **shapes)
     winner, loser = (pm, qr) if modelled.layout == pm.layout else (qr, pm)
     # measurements contradict the model: the modelled winner is slow
     record_observation(winner, 100.0)
     assert make_plan(
-        layout="auto", use_observations=True, **shapes
-    ).layout == modelled.layout  # one measurement: model still decides
+        layout="auto", **shapes
+    ).layout == modelled.layout  # one measurement: heuristic still decides
     record_observation(loser, 1.0)
-    flipped = make_plan(layout="auto", use_observations=True, **shapes)
+    flipped = make_plan(layout="auto", **shapes)
     assert flipped.layout == loser.layout  # both measured: data wins
-    # consult is opt-in, and the shape model is untouched by observations
-    assert make_plan(layout="auto", **shapes).layout == modelled.layout
-    reset_observations()
+    # the deprecated spelling still works (maps to model="observed")
+    with pytest.deprecated_call():
+        assert make_plan(
+            layout="auto", use_observations=True, **shapes
+        ).layout == loser.layout
+    # model="heuristic" pins the shape rules regardless of observations
     assert make_plan(
-        layout="auto", use_observations=True, **shapes
+        layout="auto", model="heuristic", **shapes
     ).layout == modelled.layout
+    reset_observations()
+    assert make_plan(layout="auto", **shapes).layout == modelled.layout
     reset_observations()
 
 
