@@ -38,9 +38,10 @@ def smoke() -> int:
     serving-session gate (2 warmed buckets, ~100 zipf requests, zero
     steady-state recompiles), the index-lifecycle gate (create →
     append ×2 → search → compact → search, identical results), the
-    cost-model calibration round-trip gate, and the sharded bit-identity
-    gate — the per-PR gate wired into scripts/smoke.sh. Fails loudly,
-    returns rc."""
+    cost-model calibration round-trip gate, the sharded bit-identity
+    gate, and the SLO scheduling gate (fifo == edf results, EDF
+    interactive p95 < batch p95) — the per-PR gate wired into
+    scripts/smoke.sh. Fails loudly, returns rc."""
     from benchmarks import indexing as indexing_bench
     from benchmarks import serving as serving_bench
     from repro.launch import serve
@@ -71,7 +72,12 @@ def smoke() -> int:
         return rc
     print("# smoke: sharded scatter-gather (bit-identity at shards 1/2/3)",
           file=sys.stderr)
-    return serving_bench.sharded_smoke()
+    rc = serving_bench.sharded_smoke()
+    if rc != 0:
+        return rc
+    print("# smoke: SLO scheduling (fifo == edf results, EDF interactive "
+          "p95 < batch p95)", file=sys.stderr)
+    return serving_bench.slo_smoke()
 
 
 def main() -> None:

@@ -97,6 +97,226 @@ def run():
     return out_rows
 
 
+def _calibrated_index(c, *, batch_sizes=(256, 1024), rounds=2,
+                      desc_per_image=24):
+    """An ephemeral lifecycle Index over the benchmark corpus with a
+    usable fitted calibration: measurements are recorded by sessions
+    pinned to ``cost_model="heuristic"`` (they must not be steered by the
+    model they feed), two batch shapes per layout — enough for the
+    per-layout fit. The SLO replay's admission control and ladder/slab
+    tuning all key off this fit."""
+    import numpy as np
+
+    from repro.index import Index
+    from repro.serving import SearchSession
+
+    idx = Index.create(c.tree, None, mesh=c.mesh)
+    idx.append(c.vecs_np)
+    idx.commit()
+    q, _ = c.queries(max(batch_sizes))
+    q = np.asarray(q)
+    for layout in ("point_major", "query_routed"):
+        for b in batch_sizes:
+            s = SearchSession(idx, k=10, layout=layout, buckets=(int(b),),
+                              cost_model="heuristic")
+            s.warmup()
+            for _ in range(rounds):
+                s.search(q[:int(b)],
+                         n_images=max(1, int(b) // desc_per_image))
+    idx.commit()
+    return idx
+
+
+def _identical_results(by_rid_a: dict, by_rid_b: dict) -> tuple[int, int]:
+    """(compared, mismatches) over the rids completed in both replays —
+    the scheduling-never-changes-results gate."""
+    import numpy as np
+
+    shared = set(by_rid_a) & set(by_rid_b)
+    mismatches = 0
+    for rid in shared:
+        a, b = by_rid_a[rid], by_rid_b[rid]
+        if not (np.array_equal(a.ids, b.ids)
+                and np.array_equal(a.dists, b.dists)):
+            mismatches += 1
+    return len(shared), mismatches
+
+
+def slo_run(
+    *,
+    n_requests: int = 400,
+    rate: float = 2000.0,
+    desc_per_image: int = 24,
+    corpus: Corpus | None = None,
+    json_path: str | None = None,
+) -> list[str]:
+    """Deadline-aware vs FIFO scheduling under one multi-tenant trace.
+
+    The same bursty multi-tenant trace (:func:`default_tenant_mix` —
+    steady interactive/standard classes plus heavily bursty batch
+    traffic) is replayed through a FIFO and an EDF micro-batcher over the
+    same calibrated index at the same offered load. The JSON artifact
+    (``serving_slo.json``) carries, per scheduler, the per-class latency
+    distributions and SLO attainment, the queue-wait vs compute
+    breakdown, queue-depth percentiles, and the shed/downgrade counters —
+    plus the cross-scheduler comparison (interactive p95 speedup) and the
+    result-divergence gate (must be zero: scheduling changes *when* a
+    request runs, never *what* it returns).
+    """
+    from repro.serving import (
+        MicroBatcher,
+        SearchSession,
+        TraceLoadGenerator,
+        default_tenant_mix,
+    )
+
+    c = corpus or Corpus()
+    idx = _calibrated_index(c, desc_per_image=desc_per_image)
+    n_images = len(c.vecs_np) // desc_per_image
+    gen = TraceLoadGenerator(c.vecs_np, desc_per_image, seed=3)
+    # the queue-owned regime: offered load outruns the engine, so the
+    # pending set is deep and dispatch *order* decides each class's tail;
+    # a minority interactive class is the one EDF protects
+    classes = default_tenant_mix(n_requests, rate=rate,
+                                 interactive_frac=0.2, standard_frac=0.3)
+    reqs = gen.multi_tenant(classes, n_images, seed=7)
+    out_rows, sched_payload, by_rid, p95s = [], {}, {}, {}
+    session = None
+    for sched in ("fifo", "edf"):
+        # buckets sized so the trace spans many dispatches — one giant
+        # bucket would put every class in the same dispatch and leave the
+        # scheduler nothing to order
+        session = SearchSession(idx, mesh=c.mesh, k=10, layout="auto",
+                                buckets=(128, 512), cost_model="auto")
+        session.warmup()
+        batcher = MicroBatcher(session, max_wait_ms=5.0, max_queue=4096,
+                               scheduler=sched)
+        comps = batcher.run(reqs)
+        by_rid[sched] = {cc.rid: cc for cc in comps if cc.ids is not None}
+        m = session.metrics
+        pc = {
+            name: cm.latency.percentile(95)
+            for name, cm in m.per_class.items()
+        }
+        p95s[sched] = pc
+        offered = len(reqs)
+        sched_payload[sched] = {
+            "metrics": m.to_dict(),
+            "queue": m.queue_summary(),
+            "shed_rate": m.shed / offered,
+            "policy": {
+                "shed_depth": batcher.policy.shed_depth,
+                "on_overload": batcher.policy.on_overload,
+                "deadlines_ms": dict(batcher.policy.deadlines_ms),
+                "max_wait_ms": dict(batcher.policy.max_wait_ms),
+            },
+        }
+        attain = {
+            name: cm.slo_attainment for name, cm in m.per_class.items()
+        }
+        out_rows.append(row(
+            f"serving_slo_{sched}",
+            pc.get("interactive", float("nan")) / 1e3,
+            f"int_p95={pc.get('interactive', float('nan')):.1f} "
+            f"std_p95={pc.get('standard', float('nan')):.1f} "
+            f"batch_p95={pc.get('batch', float('nan')):.1f} "
+            f"attain_int={attain.get('interactive', 1.0):.2f} "
+            f"shed={m.shed} wait_p95={m.wait.percentile(95):.1f} "
+            f"compute_p95={m.compute.percentile(95):.1f}",
+        ))
+    compared, mismatches = _identical_results(by_rid["fifo"], by_rid["edf"])
+    assert mismatches == 0, (
+        f"{mismatches}/{compared} requests diverged between fifo and edf"
+    )
+    speedup = p95s["fifo"]["interactive"] / max(1e-9,
+                                                p95s["edf"]["interactive"])
+    out_rows.append(row(
+        "serving_slo_speedup", 0.0,
+        f"interactive_p95_fifo={p95s['fifo']['interactive']:.1f} "
+        f"interactive_p95_edf={p95s['edf']['interactive']:.1f} "
+        f"speedup={speedup:.2f}x divergence=0/{compared}",
+    ))
+    payload = {
+        "header": bench_header(cost_model=session.active_cost_model()),
+        "trace": {
+            "n_requests": len(reqs),
+            "rate": rate,
+            "desc_per_image": desc_per_image,
+            "classes": [
+                {"priority": tc.priority, "n_requests": tc.n_requests,
+                 "rate": tc.rate, "skew": tc.skew,
+                 "burst_factor": tc.burst_factor}
+                for tc in classes
+            ],
+        },
+        "schedulers": sched_payload,
+        "comparison": {
+            "interactive_p95_fifo_ms": p95s["fifo"]["interactive"],
+            "interactive_p95_edf_ms": p95s["edf"]["interactive"],
+            "interactive_p95_speedup": speedup,
+            "divergence": {"compared": compared, "mismatches": mismatches},
+        },
+    }
+    out_dir = os.environ.get("REPRO_BENCH_OUT", "benchmarks/out")
+    path = write_artifact(
+        json_path or os.path.join(out_dir, "serving_slo.json"), payload
+    )
+    out_rows.append(row("serving_slo_json", 0.0, f"wrote={path}"))
+    return out_rows
+
+
+def slo_smoke() -> int:
+    """SLO scheduling gate: one small multi-tenant trace replayed under
+    FIFO and EDF over the same corpus. Asserts (a) zero result divergence
+    (bit-identical ids + distances per request — scheduling never changes
+    *what* a request returns) and (b) under EDF the interactive class's
+    p95 beats the batch class's p95 (the deadline-aware ordering is
+    actually doing something)."""
+    from repro.serving import MicroBatcher, TraceLoadGenerator, \
+        default_tenant_mix
+
+    c = Corpus(rows=20_000, dim=32, fanouts=(16, 16))
+    dpi = 20
+    n_images = len(c.vecs_np) // dpi
+    gen = TraceLoadGenerator(c.vecs_np, dpi, seed=3)
+    # the offered load must outrun the engine (the queue, not the kernel,
+    # owns the tail — the regime this PR schedules): at 2000 req/s the
+    # whole trace arrives inside a couple of dispatches' wall time, so
+    # the pending set is deep and ordering it is what matters
+    reqs = gen.multi_tenant(
+        default_tenant_mix(150, rate=2000.0), n_images, seed=7
+    )
+    by_rid, metrics = {}, {}
+    for sched in ("fifo", "edf"):
+        session = _session(c, buckets=(256, 1024))
+        comps = MicroBatcher(session, max_wait_ms=5.0, max_queue=4096,
+                             scheduler=sched).run(reqs)
+        assert session.metrics.requests == len(reqs), (
+            f"{sched}: served {session.metrics.requests}/{len(reqs)}"
+        )
+        by_rid[sched] = {cc.rid: cc for cc in comps if cc.ids is not None}
+        metrics[sched] = session.metrics
+    compared, mismatches = _identical_results(by_rid["fifo"], by_rid["edf"])
+    assert compared == len(reqs) and mismatches == 0, (
+        f"fifo vs edf divergence: {mismatches}/{compared} "
+        f"(of {len(reqs)} requests)"
+    )
+    m = metrics["edf"]
+    int_p95 = m.per_class["interactive"].latency.percentile(95)
+    bat_p95 = m.per_class["batch"].latency.percentile(95)
+    assert int_p95 < bat_p95, (
+        f"EDF interactive p95 {int_p95:.1f} ms not under batch p95 "
+        f"{bat_p95:.1f} ms"
+    )
+    print(
+        f"# slo smoke: fifo == edf on {compared} requests (0 diverged); "
+        f"EDF interactive p95 {int_p95:.1f} ms < batch p95 {bat_p95:.1f} ms; "
+        f"wait p95 {m.wait.percentile(95):.1f} ms, "
+        f"compute p95 {m.compute.percentile(95):.1f} ms"
+    )
+    return 0
+
+
 def shard_sweep(
     shard_counts=(1, 2, 4),
     *,
@@ -445,6 +665,18 @@ def main(argv=None) -> int:
     ap.add_argument("--calibration-smoke", action="store_true",
                     help="run the calibration round-trip gate "
                          "(record -> commit -> reopen -> fitted plan)")
+    ap.add_argument("--slo-smoke", action="store_true",
+                    help="run the SLO scheduling gate (fifo == edf "
+                         "results, EDF interactive p95 < batch p95)")
+    ap.add_argument("--slo", action="store_true",
+                    help="replay the multi-tenant trace under fifo and "
+                         "edf, report per-class SLO attainment and the "
+                         "queue-wait vs compute breakdown -> "
+                         "benchmarks/out/serving_slo.json")
+    ap.add_argument("--requests", type=int, default=400,
+                    help="trace length for --slo")
+    ap.add_argument("--rate", type=float, default=250.0,
+                    help="offered load (req/s) for --slo")
     ap.add_argument("--shard-sweep", action="store_true",
                     help="ms/image vs shard count -> "
                          "benchmarks/out/serving_shards.json")
@@ -472,8 +704,13 @@ def main(argv=None) -> int:
         return sharded_smoke()
     if args.calibration_smoke:
         return calibration_smoke()
+    if args.slo_smoke:
+        return slo_smoke()
     print("name,us_per_call,derived")
-    if args.shard_sweep:
+    if args.slo:
+        rows = slo_run(n_requests=args.requests, rate=args.rate,
+                       json_path=args.json)
+    elif args.shard_sweep:
         rows = shard_sweep(tuple(args.shards), segments=args.segments,
                            strategy=args.strategy, json_path=args.json)
     elif args.calibrate:

@@ -19,9 +19,12 @@ python -m pytest -x -q
 # compact -> search, exactness asserted; standalone: benchmarks.indexing
 # --smoke), the cost-model calibration round-trip gate (record -> commit ->
 # reopen -> plan(model="auto") uses the fit; standalone: benchmarks.serving
-# --calibration-smoke) and the sharded scatter-gather gate (shards 1/2/3
+# --calibration-smoke), the sharded scatter-gather gate (shards 1/2/3
 # bit-identical to unsharded; standalone: benchmarks.serving --sharded-smoke)
-echo "== serve smoke (both layouts, --probes 2) + lifecycle + session + calibration + shard gates =="
+# and the SLO scheduling gate (same trace under fifo and edf returns
+# bit-identical results, EDF interactive p95 < batch p95; standalone:
+# benchmarks.serving --slo-smoke)
+echo "== serve smoke (both layouts, --probes 2) + lifecycle + session + calibration + shard + SLO gates =="
 python -m benchmarks.run --smoke
 
 echo "== serving CLI smoke (zipf trace, hot-leaf cache, recompile gate) =="
@@ -29,6 +32,11 @@ python -m repro.launch.serve --rows 20000 --dim 32 --images 400 \
     --fanout 16 16 --trace zipf --requests 100 --buckets 512,1024 \
     --probes 2 --cache-leaves 256 --cache-admit 1 --rate 300 --no-recall \
     --cost-model auto
+
+echo "== SLO serving CLI smoke (multi-tenant trace, p95 target, EDF) =="
+python -m repro.launch.serve --rows 20000 --dim 32 --images 400 \
+    --fanout 16 16 --trace multi --requests 120 --target-p95-ms 150 \
+    --rate 400 --no-recall
 
 echo "== sharded serving CLI smoke (scatter-gather, 2 shards) =="
 python -m repro.launch.serve --rows 20000 --dim 32 --images 400 \

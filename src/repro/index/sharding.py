@@ -241,6 +241,7 @@ def fitted_shard_scales(
     probes: int,
     layout: str,
     impl: str,
+    max_scale: float = 2.0,
 ) -> list[float]:
     """Per-shard slab-headroom multipliers from fitted per-shard costs —
     shared by :meth:`ShardedIndex.search` and the sharded serving
@@ -277,7 +278,8 @@ def fitted_shard_scales(
             rows=rows, n_queries=n_queries, n_shards=n_shards,
             n_leaves=index.n_leaves,
         ))
-    scales = iter(shard_slab_scales(fitted, probe_plans, shapes))
+    scales = iter(shard_slab_scales(fitted, probe_plans, shapes,
+                                    max_scale=max_scale))
     return [next(scales) if shard else 1.0 for shard in shard_views]
 
 

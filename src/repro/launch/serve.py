@@ -11,10 +11,20 @@ the dynamic micro-batcher — reporting the latency distribution
 (p50/p95/p99), engine ms/image, cache hit rate, and the steady-state
 recompile count (the serving invariant: 0 after warmup).
 
+Scheduling is deadline-aware by default (``--scheduler edf``): requests
+carry priority classes, the batcher dispatches earliest-deadline-first
+with fitted-cost admission control, and ``--target-p95-ms`` closes the
+loop by letting the fitted cost model pick the bucket ladder for a
+latency target (docs/slo_serving.md). ``--scheduler fifo`` keeps the
+original arrival-order coalescing for comparability.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --trace zipf --requests 500
   PYTHONPATH=src python -m repro.launch.serve --index-dir /tmp/idx \\
       --trace uniform --requests 200 --rate 100 --cache-leaves 64
+  # multi-tenant trace + latency target, FIFO baseline for comparison:
+  PYTHONPATH=src python -m repro.launch.serve --trace multi \\
+      --requests 600 --target-p95-ms 100 --scheduler fifo
   # legacy fixed-batch protocol (the old CLI):
   PYTHONPATH=src python -m repro.launch.serve --batches 3 --batch-images 256
 """
@@ -75,14 +85,35 @@ def main(argv=None) -> int:
     ap.add_argument("--n-buckets", type=int, default=3)
     ap.add_argument("--buckets", default=None,
                     help="explicit comma-separated bucket sizes (query rows)")
-    ap.add_argument("--max-wait-ms", type=float, default=5.0,
-                    help="micro-batcher coalescing deadline")
+    ap.add_argument("--max-wait-ms", type=float, default=None,
+                    help="micro-batcher base coalescing deadline "
+                         "(default 5.0, or the tuned slack under "
+                         "--target-p95-ms)")
     ap.add_argument("--max-queue", type=int, default=4096,
                     help="pending-request cap (backpressure)")
+    ap.add_argument("--scheduler", choices=("edf", "fifo"), default="edf",
+                    help="micro-batcher scheduler: edf (default) is "
+                         "deadline-aware — earliest-deadline-first within "
+                         "priority class, fitted-cost admission control "
+                         "shedding overload batch work; fifo is the "
+                         "original arrival-order coalescing (identical "
+                         "results, different latency profile)")
+    ap.add_argument("--target-p95-ms", type=float, default=None,
+                    help="closed-loop latency target: the fitted cost "
+                         "model picks the bucket ladder (and per-shard "
+                         "slab budgets) whose largest dispatch fits this "
+                         "p95 (ignored when --buckets is explicit; no-op "
+                         "until the index carries a usable calibration)")
     ap.add_argument("--cache-leaves", type=int, default=0,
                     help="hot-leaf cache capacity in leaves (0 = off)")
     ap.add_argument("--cache-admit", type=int, default=2,
                     help="leaf routings before a leaf is admitted")
+    ap.add_argument("--cache-eviction", choices=("cost", "lru"),
+                    default="cost",
+                    help="hot-leaf eviction policy: cost ranks resident "
+                         "leaves by predicted ms-saved-per-resident-byte "
+                         "(fitted cost model), lru is the original "
+                         "recency policy")
     ap.add_argument("--shards", type=int, default=None,
                     help="scatter-gather serving over N index shards "
                          "(default: the index's persisted shard plan, or "
@@ -94,10 +125,12 @@ def main(argv=None) -> int:
                          "round_robin; persisted in the index manifest "
                          "when --index-dir is given)")
     # workload
-    ap.add_argument("--trace", choices=("fixed", "uniform", "zipf"),
+    ap.add_argument("--trace", choices=("fixed", "uniform", "zipf", "multi"),
                     default=None,
-                    help="request stream; fixed replays the legacy "
-                         "batch protocol")
+                    help="request stream; fixed replays the legacy batch "
+                         "protocol; multi is the multi-tenant mix "
+                         "(bursty batch + steady interactive/standard "
+                         "priority classes)")
     ap.add_argument("--requests", type=int, default=500)
     ap.add_argument("--zipf-s", type=float, default=1.1)
     ap.add_argument("--rate", type=float, default=None,
@@ -125,6 +158,8 @@ def main(argv=None) -> int:
         SearchSession,
         ShardedSearchSession,
         TraceLoadGenerator,
+        default_tenant_mix,
+        tune_ladder,
     )
     from repro.serving import persist
     from repro.serving.session import load_or_build_index
@@ -176,7 +211,7 @@ def main(argv=None) -> int:
         k=args.k, layout=args.layout, probes=args.probes, impl=args.impl,
         max_batch_rows=args.max_batch_rows, n_buckets=args.n_buckets,
         cache_leaves=args.cache_leaves, cache_admit_after=args.cache_admit,
-        cost_model=args.cost_model,
+        cache_eviction=args.cache_eviction, cost_model=args.cost_model,
     )
     if args.buckets:
         session_kw["buckets"] = [int(b) for b in args.buckets.split(",")]
@@ -184,6 +219,37 @@ def main(argv=None) -> int:
     idx, meta = load_or_build_index(
         args.index_dir, build_fn=build_fn, mesh=mesh, rebuild=args.rebuild,
     )
+    dpi = int(meta.get("desc_per_image", dpi))
+    max_wait_ms = args.max_wait_ms
+    if args.target_p95_ms and not args.buckets:
+        # closed loop: the fitted cost model picks the ladder whose
+        # largest dispatch still fits the target (stock ladder until the
+        # index carries a usable calibration)
+        decision = tune_ladder(
+            idx.calibration, target_p95_ms=args.target_p95_ms,
+            rows=idx.rows, n_leaves=idx.n_leaves, desc_per_image=dpi,
+            max_batch_rows=args.max_batch_rows, n_buckets=args.n_buckets,
+            n_shards=args.shards
+            or (idx.shard_plan.n_shards if idx.shard_plan else 1),
+            k=args.k, probes=args.probes, layout=args.layout,
+            impl=args.impl, cost_model=args.cost_model,
+            base_max_wait_ms=args.max_wait_ms
+            if args.max_wait_ms is not None else 5.0,
+        )
+        session_kw["buckets"] = list(decision.buckets)
+        if max_wait_ms is None:
+            max_wait_ms = decision.max_wait_ms
+        pred = decision.predicted_dispatch_ms
+        print(
+            f"ladder tuner: target p95 {args.target_p95_ms:.0f} ms -> "
+            f"buckets {list(decision.buckets)}, "
+            f"max_wait {decision.max_wait_ms:.1f} ms "
+            f"({decision.decided_by}"
+            + (f", predicted dispatch {pred:.1f} ms)" if pred is not None
+               else ")")
+        )
+    if max_wait_ms is None:
+        max_wait_ms = 5.0
     if args.shards is not None or idx.shard_plan is not None:
         # strategy precedence: explicit flag > the index's persisted
         # strategy > round_robin — so `--shards N` alone never flips a
@@ -196,7 +262,8 @@ def main(argv=None) -> int:
         )
         session = ShardedSearchSession(
             idx, mesh=mesh, shards=args.shards,
-            shard_strategy=strategy, **session_kw,
+            shard_strategy=strategy, target_p95_ms=args.target_p95_ms,
+            **session_kw,
         )
         shard_stats = session.per_shard_stats()["shards"]
         empty = [s["shard"] for s in shard_stats if not s["segments"]]
@@ -285,20 +352,35 @@ def main(argv=None) -> int:
         replace = n_req > n_images
         image_ids = rng.choice(n_images, n_req, replace=replace)
         arrivals = np.zeros(n_req)
+    elif mode == "multi":
+        classes = default_tenant_mix(args.requests, rate=args.rate or 100.0)
+        reqs = gen.multi_tenant(classes, n_images, seed=args.trace_seed)
+        image_ids = [r.image_id for r in reqs]
     else:
         image_ids, arrivals = synth.sample_trace(
             args.requests, n_images, skew=mode, zipf_s=args.zipf_s,
             rate=args.rate, seed=args.trace_seed,
         )
-    reqs = gen.requests(image_ids, arrivals)
+    if mode != "multi":
+        reqs = gen.requests(image_ids, arrivals)
     uniq = len(set(int(i) for i in image_ids))
-    # fixed mode always bursts at t=0; --rate only paces uniform/zipf
-    paced = args.rate if mode != "fixed" else None
+    # fixed mode always bursts at t=0; --rate only paces the others
+    paced = (args.rate or 100.0) if mode == "multi" else (
+        args.rate if mode != "fixed" else None
+    )
     print(f"trace: {mode}, {len(reqs)} requests over {uniq} distinct images"
           + (f", rate={paced}/s" if paced else ", all at t=0"))
+    if mode == "multi":
+        by_class = {}
+        for r in reqs:
+            by_class[r.priority] = by_class.get(r.priority, 0) + 1
+        print("classes: " + ", ".join(
+            f"{c}={n}" for c, n in sorted(by_class.items())
+        ))
 
-    batcher = MicroBatcher(session, max_wait_ms=args.max_wait_ms,
-                           max_queue=args.max_queue)
+    batcher = MicroBatcher(session, max_wait_ms=max_wait_ms,
+                           max_queue=args.max_queue,
+                           scheduler=args.scheduler)
     t0 = time.perf_counter()
     completions = batcher.run(reqs)
     wall = time.perf_counter() - t0
@@ -308,13 +390,35 @@ def main(argv=None) -> int:
     lat = m.latency.summary()
     print(
         f"served {m.requests}/{len(reqs)} requests "
-        f"({m.rejected} rejected, {m.engine_batches} micro-batches, "
-        f"{m.cache_images} cache-served) in {wall:.2f}s wall"
+        f"({m.rejected} rejected, {m.shed} shed, {m.downgraded} downgraded, "
+        f"{m.engine_batches} micro-batches, "
+        f"{m.cache_images} cache-served) in {wall:.2f}s wall "
+        f"[scheduler={batcher.scheduler}]"
     )
     if lat.get("count"):
         print(
             f"latency: p50 {lat['p50_ms']:.1f} ms, p95 {lat['p95_ms']:.1f} ms, "
             f"p99 {lat['p99_ms']:.1f} ms (mean {lat['mean_ms']:.1f} ms)"
+        )
+        wait, comp = m.wait.summary(), m.compute.summary()
+        if wait.get("count"):
+            print(
+                f"breakdown: queue-wait p95 {wait['p95_ms']:.1f} ms "
+                f"(mean {wait['mean_ms']:.1f}), compute p95 "
+                f"{comp['p95_ms']:.1f} ms (mean {comp['mean_ms']:.1f})"
+            )
+    for name, cm in sorted(
+        m.per_class.items(), key=lambda kv: kv[0]
+    ):
+        cl = cm.latency.summary()
+        if not cl.get("count") and not (cm.shed or cm.rejected):
+            continue
+        slo = (f"SLO<{cm.deadline_ms:.0f}ms attained "
+               f"{cm.slo_attainment:.2f}  " if cm.deadline_ms else "")
+        print(
+            f"  class {name:<12} p50 {cl.get('p50_ms', 0.0):7.1f} ms  "
+            f"p95 {cl.get('p95_ms', 0.0):7.1f} ms  " + slo +
+            f"(done {cm.completed}, shed {cm.shed}, rej {cm.rejected})"
         )
     print(
         f"throughput: {m.ms_per_image:.1f} ms/image engine "

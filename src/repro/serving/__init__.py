@@ -3,10 +3,14 @@
 ``SearchSession`` (bucketed, recompile-free executors + hot-leaf cache +
 metrics), ``ShardedSearchSession`` (scatter-gather over a
 ``repro.index.ShardPlan`` — same surface, bit-identical results),
-``MicroBatcher`` (dynamic coalescing with deadline and backpressure),
-``TraceLoadGenerator`` (uniform/Zipf replayable workloads), and
-``persist`` (corpus store helpers + deprecated index shims). See
-docs/serving.md and docs/sharding.md for the architecture.
+``MicroBatcher`` (deadline-aware EDF or arrival-order FIFO coalescing
+with backpressure and fitted-cost admission control), ``SLOPolicy`` +
+``tune_ladder`` (per-class deadlines, shedding depth, and closed-loop
+bucket-ladder tuning for a target p95 — see :mod:`repro.serving.slo`),
+``TraceLoadGenerator`` (uniform/Zipf replayable workloads, plus
+multi-tenant bursty class mixes via ``TenantClass``), and ``persist``
+(corpus store helpers + deprecated index shims). See docs/serving.md,
+docs/slo_serving.md, and docs/sharding.md for the architecture.
 """
 
 from repro.serving.batching import Completion, MicroBatcher  # noqa: F401
@@ -14,4 +18,14 @@ from repro.serving.cache import HotLeafCache  # noqa: F401
 from repro.serving.metrics import LatencyStats, ServingMetrics  # noqa: F401
 from repro.serving.session import SearchSession  # noqa: F401
 from repro.serving.sharded import ShardedSearchSession  # noqa: F401
-from repro.serving.trace import Request, TraceLoadGenerator  # noqa: F401
+from repro.serving.slo import (  # noqa: F401
+    LadderDecision,
+    SLOPolicy,
+    tune_ladder,
+)
+from repro.serving.trace import (  # noqa: F401
+    Request,
+    TenantClass,
+    TraceLoadGenerator,
+    default_tenant_mix,
+)

@@ -1,19 +1,32 @@
-"""Dynamic micro-batching: the request queue in front of the engine.
+"""Deadline-aware micro-batching: the request scheduler in front of the
+engine.
 
 The paper's throughput headline (~210 ms/image, Exp #5) comes from
 batching: the lookup-table broadcast and the scan amortise over a big
 batch. Online, nobody sends 12k-image batches — the *batcher* has to
 manufacture them by coalescing the queue, trading a bounded wait for
-amortisation:
+amortisation. Under sustained load the queue, not the kernel, owns the
+tail: our serving benchmark measured ~15 ms/image engine cost but >1 s
+p95, nearly all queueing. Two schedulers attack that:
 
-  * dispatch when pending rows reach the largest warmed bucket
-    (perfect amortisation), or
-  * when the oldest pending request has waited ``max_wait_ms`` (bounded
-    tail latency), whichever comes first;
-  * reject arrivals beyond ``max_queue`` pending requests (backpressure —
-    a bounded queue, not an unbounded latency cliff);
-  * requests the hot-leaf cache can answer are served at admission and
-    never occupy a batch slot.
+  * ``scheduler="edf"`` (default) — deadline-aware dispatch. Every
+    request carries a priority class (``interactive`` / ``standard`` /
+    ``batch``, see :mod:`repro.serving.slo`); the pending set is ordered
+    earliest-deadline-first within class, higher classes first. Each
+    class owns its own coalescing budget (interactive holds briefly,
+    batch holds long), and admission control sheds — or
+    deadline-downgrades — incoming ``batch`` work once queue depth
+    crosses the policy's fitted-cost-derived threshold, so bursts of
+    bulk traffic cannot collapse the interactive tail.
+  * ``scheduler="fifo"`` — the original arrival-order coalescing,
+    kept bit-for-bit so existing benchmark trajectories stay comparable
+    (``launch/serve --scheduler fifo``).
+
+Scheduling never changes *what* a request returns: per-request results
+are independent of batch composition (each query row routes and scans
+independently; padding is masked), so the same trace replayed under
+``fifo`` and ``edf`` yields bit-identical ids + distances per request —
+the ``--slo-smoke`` gate asserts it.
 
 Replay is a discrete-event simulation over a trace: *arrival times are
 virtual* (from the trace), *compute times are real* (measured wall clock
@@ -25,12 +38,14 @@ in shape (same trace -> same batches) regardless of host speed.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import time
 from collections import deque
 
 import numpy as np
 
 from repro.serving.session import SearchSession
+from repro.serving.slo import SLOPolicy, class_rank
 from repro.serving.trace import Request
 
 
@@ -42,9 +57,12 @@ class Completion:
     image_id: int
     arrival: float  # virtual seconds
     finish: float  # virtual seconds
-    source: str  # "engine" | "cache" | "rejected"
-    ids: np.ndarray | None = None  # (rows, k) or None when rejected
+    source: str  # "engine" | "cache" | "rejected" | "shed"
+    ids: np.ndarray | None = None  # (rows, k) or None when dropped
     dists: np.ndarray | None = None
+    priority: str = "standard"
+    wait_ms: float = 0.0  # arrival -> dispatch (queueing + coalescing)
+    compute_ms: float = 0.0  # dispatch -> finish (engine / cache work)
 
     @property
     def latency_ms(self) -> float:
@@ -52,7 +70,26 @@ class Completion:
 
 
 class MicroBatcher:
-    """Coalesce a request stream into bucket-sized engine dispatches."""
+    """Coalesce a request stream into bucket-sized engine dispatches.
+
+    Args:
+      session: the warmed :class:`~repro.serving.SearchSession` (or
+        sharded subclass) dispatches run on.
+      max_wait_ms: base coalescing budget. FIFO applies it to the oldest
+        pending request; EDF derives per-class budgets from it unless
+        ``policy`` overrides them.
+      max_queue: hard pending-request cap (backpressure) — arrivals
+        beyond it are rejected under either scheduler.
+      scheduler: ``"edf"`` (deadline-aware, the default) or ``"fifo"``
+        (the original arrival-order coalescing, kept for comparability).
+      policy: the :class:`~repro.serving.slo.SLOPolicy` EDF enforces;
+        defaults to :meth:`SLOPolicy.for_session`, which derives the
+        batch-shedding depth from the session's fitted cost model (no
+        shedding when the index carries no usable calibration).
+
+    Raises:
+      ValueError: an unknown ``scheduler``.
+    """
 
     def __init__(
         self,
@@ -60,14 +97,94 @@ class MicroBatcher:
         *,
         max_wait_ms: float = 5.0,
         max_queue: int = 256,
+        scheduler: str = "edf",
+        policy: SLOPolicy | None = None,
     ):
+        if scheduler not in ("edf", "fifo"):
+            raise ValueError(
+                f"unknown scheduler {scheduler!r}; want edf|fifo"
+            )
         self.session = session
         self.max_wait = float(max_wait_ms) / 1e3
         self.max_queue = int(max_queue)
+        self.scheduler = scheduler
+        self.policy = policy if policy is not None else SLOPolicy.for_session(
+            session, base_max_wait_ms=max_wait_ms,
+        )
 
     def run(self, requests: list[Request]) -> list[Completion]:
         """Replay a trace to completion; returns one Completion per
         request (in completion order) and fills ``session.metrics``."""
+        if self.scheduler == "fifo":
+            return self._run_fifo(requests)
+        return self._run_edf(requests)
+
+    # -- shared helpers ------------------------------------------------------
+
+    def _try_cache(self, r: Request, now: float, done: list[Completion]
+                   ) -> bool:
+        """Serve ``r`` from the hot-leaf cache at admission if possible.
+        A hit never occupies a queue slot, so it is served even under
+        backpressure or shedding."""
+        s = self.session
+        m = s.metrics
+        t0 = time.perf_counter()
+        hit = s.cache.try_serve(r.queries, s.k)
+        dt = time.perf_counter() - t0
+        if hit is None:
+            return False
+        m.cache_images += 1
+        m.requests += 1
+        lat_start = max(now, r.arrival)
+        wait_ms = (lat_start - r.arrival) * 1e3
+        done.append(Completion(
+            rid=r.rid, image_id=r.image_id, arrival=r.arrival,
+            finish=lat_start + dt, source="cache",
+            ids=hit[0], dists=hit[1], priority=r.priority,
+            wait_ms=wait_ms, compute_ms=dt * 1e3,
+        ))
+        m.observe_latency(
+            r.priority, wait_ms=wait_ms, compute_ms=dt * 1e3,
+            deadline_ms=self.policy.deadlines_ms.get(r.priority),
+        )
+        return True
+
+    def _dispatch(self, batch: list[Request], now: float,
+                  done: list[Completion]) -> float:
+        """Run one coalesced batch; returns the new virtual ``now``
+        (advanced by the measured engine wall time) after appending one
+        engine Completion per request."""
+        s = self.session
+        m = s.metrics
+        busy0 = m.engine_ms
+        if batch[0].rows > s.max_batch_rows:
+            # a single request bigger than the top bucket: session.search
+            # splits it across dispatches (it can never coalesce anyway)
+            ids, dists = s.search(batch[0].queries, n_images=1)
+            results = [(ids, dists)]
+        else:
+            results = s.serve_many([r.queries for r in batch])
+        # advance the virtual clock by the measured engine wall time
+        dispatch_t = now
+        now += (m.engine_ms - busy0) * 1e-3
+        compute_ms = (now - dispatch_t) * 1e3
+        for r, (ids, dists) in zip(batch, results):
+            m.requests += 1
+            wait_ms = (dispatch_t - r.arrival) * 1e3
+            done.append(Completion(
+                rid=r.rid, image_id=r.image_id, arrival=r.arrival,
+                finish=now, source="engine", ids=ids, dists=dists,
+                priority=r.priority, wait_ms=wait_ms, compute_ms=compute_ms,
+            ))
+            m.observe_latency(
+                r.priority, wait_ms=wait_ms, compute_ms=compute_ms,
+                deadline_ms=self.policy.deadlines_ms.get(r.priority),
+            )
+        return now
+
+    # -- fifo: the original arrival-order coalescing -------------------------
+
+    def _run_fifo(self, requests: list[Request]) -> list[Completion]:
         s = self.session
         m = s.metrics
         todo = sorted(requests, key=lambda r: (r.arrival, r.rid))
@@ -84,25 +201,14 @@ class MicroBatcher:
                 i += 1
                 # cache first: a hit never occupies a queue slot, so it is
                 # served even under backpressure
-                t0 = time.perf_counter()
-                hit = s.cache.try_serve(r.queries, s.k)
-                dt = time.perf_counter() - t0
-                if hit is not None:
-                    m.cache_images += 1
-                    m.requests += 1
-                    lat_start = max(now, r.arrival)
-                    done.append(Completion(
-                        rid=r.rid, image_id=r.image_id, arrival=r.arrival,
-                        finish=lat_start + dt, source="cache",
-                        ids=hit[0], dists=hit[1],
-                    ))
-                    m.latency.add((lat_start + dt - r.arrival) * 1e3)
+                if self._try_cache(r, now, done):
                     continue
                 if len(pending) >= self.max_queue:
-                    m.rejected += 1
+                    m.observe_drop(r.priority, "rejected")
                     done.append(Completion(
                         rid=r.rid, image_id=r.image_id, arrival=r.arrival,
                         finish=r.arrival, source="rejected",
+                        priority=r.priority,
                     ))
                     continue
                 pending.append(r)
@@ -130,22 +236,88 @@ class MicroBatcher:
                 batch.append(r)
                 rows += r.rows
             rows_pending -= rows
-            busy0 = s.metrics.engine_ms
-            if batch[0].rows > s.max_batch_rows:
-                # a single request bigger than the top bucket: session.search
-                # splits it across dispatches (it can never coalesce anyway)
-                ids, dists = s.search(batch[0].queries, n_images=1)
-                results = [(ids, dists)]
-            else:
-                results = s.serve_many([r.queries for r in batch])
-            # advance the virtual clock by the measured engine wall time
-            now += (s.metrics.engine_ms - busy0) * 1e-3
-            for r, (ids, dists) in zip(batch, results):
-                m.requests += 1
-                done.append(Completion(
-                    rid=r.rid, image_id=r.image_id, arrival=r.arrival,
-                    finish=now, source="engine", ids=ids, dists=dists,
-                ))
-                m.latency.add((now - r.arrival) * 1e3)
+            now = self._dispatch(batch, now, done)
+        s.steady_state_recompiles()
+        return done
+
+    # -- edf: deadline-aware scheduling with admission control ---------------
+
+    def _run_edf(self, requests: list[Request]) -> list[Completion]:
+        s = self.session
+        m = s.metrics
+        policy = self.policy
+        todo = sorted(requests, key=lambda r: (r.arrival, r.rid))
+        i = 0
+        now = 0.0
+        # heap entries: (class rank, effective deadline, rid, request) —
+        # earliest-deadline-first within class, higher classes first
+        heap: list[tuple] = []
+        rows_pending = 0
+        done: list[Completion] = []
+
+        def admit(until: float):
+            nonlocal i, rows_pending
+            while i < len(todo) and todo[i].arrival <= until + 1e-12:
+                r = todo[i]
+                i += 1
+                if self._try_cache(r, now, done):
+                    continue
+                deadline_t = r.arrival + policy.deadline_s(r.priority)
+                # admission control: past the fitted-cost-derived depth,
+                # queued work alone already exceeds the batch deadline —
+                # shed (or deadline-downgrade) incoming batch work rather
+                # than let it lengthen every class's queue
+                if (policy.shed_depth is not None
+                        and r.priority == "batch"
+                        and len(heap) >= policy.shed_depth):
+                    if policy.on_overload == "shed":
+                        m.observe_drop(r.priority, "shed")
+                        done.append(Completion(
+                            rid=r.rid, image_id=r.image_id,
+                            arrival=r.arrival, finish=r.arrival,
+                            source="shed", priority=r.priority,
+                        ))
+                        continue
+                    m.downgraded += 1
+                    deadline_t += policy.deadline_s("batch")
+                if len(heap) >= self.max_queue:
+                    m.observe_drop(r.priority, "rejected")
+                    done.append(Completion(
+                        rid=r.rid, image_id=r.image_id, arrival=r.arrival,
+                        finish=r.arrival, source="rejected",
+                        priority=r.priority,
+                    ))
+                    continue
+                heapq.heappush(
+                    heap, (class_rank(r.priority), deadline_t, r.rid, r)
+                )
+                rows_pending += r.rows
+
+        while i < len(todo) or heap:
+            if not heap:
+                now = max(now, todo[i].arrival)
+            admit(now)
+            if not heap:
+                continue
+            head = heap[0][3]
+            # the head's class decides how long the batcher may hold the
+            # queue open to coalesce — interactive holds briefly, batch
+            # holds long
+            hold = head.arrival + policy.max_wait_s(head.priority)
+            if rows_pending < s.max_batch_rows and now < hold and i < len(todo):
+                now = min(hold, todo[i].arrival)
+                admit(now)
+                if rows_pending < s.max_batch_rows and now < hold:
+                    continue  # head may have changed: re-evaluate
+            # ---- dispatch: fill the bucket in (class, deadline) order ---
+            m.observe_queue_depth(len(heap))
+            batch: list[Request] = [heapq.heappop(heap)[3]]
+            rows = batch[0].rows
+            while heap and rows + heap[0][3].rows <= s.max_batch_rows:
+                r = heapq.heappop(heap)[3]
+                batch.append(r)
+                rows += r.rows
+            rows_pending -= rows
+            now = self._dispatch(batch, now, done)
         s.steady_state_recompiles()
         return done

@@ -13,11 +13,21 @@ slot.
 Two layers of keying:
 
   * ``leaf_id -> slab`` — admitted once a leaf has been routed to
-    ``admit_after`` times, evicted LRU when over ``capacity`` leaves;
+    ``admit_after`` times, evicted when over ``capacity`` leaves;
   * ``query bytes -> probe leaves`` — the routing memo. Routing is a tree
     descent (device work), so a cache *hit* must not need it: only queries
     whose exact bytes have been routed before can be cache-served, which
     is precisely the hot-repeated-query population the cache targets.
+
+Eviction is **cost-aware** by default (``eviction="cost"``): resident
+leaves are ranked by predicted *ms saved per resident byte* — routing
+frequency x the engine cost a hit avoids (the serving session feeds the
+fitted :class:`~repro.core.engine.costmodel.CostModel`'s predicted
+ms/image via :meth:`HotLeafCache.note_engine_cost`) / the slab's resident
+bytes — and the lowest-value-per-byte leaf goes first. A huge lukewarm
+slab is evicted before a small hot one even if touched more recently,
+so a fixed budget holds the leaves that actually buy tail latency.
+``eviction="lru"`` keeps the original recency policy.
 
 Distances use the same algebraic form as the engine
 (``||p||^2 - 2 p.q + ||q||^2`` in float32), so ids agree with the engine
@@ -32,19 +42,37 @@ import numpy as np
 
 
 class HotLeafCache:
-    """LRU cache of hot leaf slabs + routing memo, with hit accounting."""
+    """Hot-leaf slab cache + routing memo, with hit accounting.
+
+    Args:
+      capacity_leaves: resident-leaf budget (0 disables the cache).
+      admit_after: leaf routings before a leaf's slab is admitted.
+      memo_capacity: routing-memo entries kept (exact query bytes).
+      eviction: ``"cost"`` (predicted ms-saved-per-resident-byte, the
+        default) or ``"lru"`` (recency — the original policy).
+
+    Raises:
+      ValueError: an unknown ``eviction`` policy.
+    """
 
     def __init__(self, capacity_leaves: int, *, admit_after: int = 2,
-                 memo_capacity: int = 65536):
+                 memo_capacity: int = 65536, eviction: str = "cost"):
+        if eviction not in ("cost", "lru"):
+            raise ValueError(
+                f"unknown eviction policy {eviction!r}; want cost|lru"
+            )
         self.capacity = int(capacity_leaves)
         self.admit_after = int(admit_after)
         self.memo_capacity = int(memo_capacity)
+        self.eviction = eviction
         # leaf -> (vecs, ids, point sq-norms), norms precomputed at admission
         self._slabs: OrderedDict[int, tuple] = OrderedDict()
         self._freq: dict[int, int] = {}
         self._memo: OrderedDict[bytes, np.ndarray] = OrderedDict()
         self.hits = 0  # requests answered entirely from cache
         self.misses = 0  # requests that went to the engine
+        self.evictions = 0  # slabs dropped to stay within capacity
+        self.cost_hint_ms = None  # predicted/measured engine ms a hit saves
         # index-side tables (attach_index)
         self._vecs = self._ids = None
         self._order = self._starts = None
@@ -86,8 +114,53 @@ class HotLeafCache:
 
     @property
     def hit_rate(self) -> float:
+        """Hits / (hits + misses); 0.0 on an idle or never-attached cache
+        (never a division by zero)."""
         total = self.hits + self.misses
         return self.hits / total if total else 0.0
+
+    @property
+    def resident_bytes(self) -> int:
+        """Host bytes held by the admitted slabs (vectors + ids + norms)."""
+        return sum(
+            sv.nbytes + si.nbytes + sn.nbytes
+            for sv, si, sn in self._slabs.values()
+        )
+
+    def note_engine_cost(self, ms_per_image: float | None) -> None:
+        """Feed the predicted (fitted cost model) or measured engine
+        ms/image a cache hit saves — the numerator of the cost-aware
+        eviction score. Folded as an EMA so one outlier dispatch cannot
+        flip the ranking; ``None``/non-positive values are ignored."""
+        if ms_per_image is None or ms_per_image <= 0:
+            return
+        ms = float(ms_per_image)
+        if self.cost_hint_ms is None:
+            self.cost_hint_ms = ms
+        else:
+            self.cost_hint_ms += 0.25 * (ms - self.cost_hint_ms)
+
+    def _score(self, leaf: int) -> float:
+        """Predicted ms saved per resident byte: routing frequency x the
+        engine cost a hit avoids / the slab's resident bytes. Without a
+        cost hint the hint cancels out of the ranking (frequency per
+        byte). Empty slabs score 0 — first out."""
+        sv, si, sn = self._slabs[leaf]
+        nbytes = sv.nbytes + si.nbytes + sn.nbytes
+        if not nbytes:
+            return 0.0
+        hint = self.cost_hint_ms if self.cost_hint_ms else 1.0
+        return self._freq.get(leaf, 0) * hint / nbytes
+
+    def _evict_one(self) -> None:
+        """Drop one slab: the lowest ms-saved-per-byte leaf under
+        ``eviction="cost"``, the least-recently-used under ``"lru"``."""
+        if self.eviction == "cost":
+            victim = min(self._slabs, key=self._score)
+            del self._slabs[victim]
+        else:
+            self._slabs.popitem(last=False)
+        self.evictions += 1
 
     def try_serve(
         self, queries: np.ndarray, k: int
@@ -163,13 +236,22 @@ class HotLeafCache:
                         (sv * sv).sum(1).astype(np.float32),
                     )
                     while len(self._slabs) > self.capacity:
-                        self._slabs.popitem(last=False)  # evict LRU
+                        self._evict_one()
 
     def stats(self) -> dict:
+        """Well-formed counters at any lifecycle stage — including a
+        cache that was never attached to an index or never served a
+        request (all rates defined, no division by zero)."""
         return {
+            "enabled": self.enabled,
             "hits": self.hits,
             "misses": self.misses,
             "hit_rate": self.hit_rate,
             "cached_leaves": self.n_cached_leaves,
             "capacity_leaves": self.capacity,
+            "resident_bytes": self.resident_bytes,
+            "memo_entries": len(self._memo),
+            "eviction": self.eviction,
+            "evictions": self.evictions,
+            "cost_hint_ms": self.cost_hint_ms,
         }

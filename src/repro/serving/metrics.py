@@ -3,8 +3,12 @@
 The paper's Exp #5 reports one number (ms/image at a fixed batch size); an
 online service needs the full latency distribution (p50/p95/p99 — queueing
 delay included), the throughput it was achieved at, and the health counters
-that explain it (queue depth, recompiles, cache hit rate, rejects). All
-accounting is plain Python/numpy — nothing here touches a device.
+that explain it (queue depth, recompiles, cache hit rate, rejects). Since
+nearly all tail latency in a loaded service is *queueing*, every completion
+also splits into wait-ms (arrival -> dispatch) vs compute-ms (the engine /
+cache work itself), and everything is kept per priority class so SLO
+attainment can be reported per tenant. All accounting is plain
+Python/numpy — nothing here touches a device.
 """
 
 from __future__ import annotations
@@ -46,12 +50,53 @@ class LatencyStats:
 
 
 @dataclasses.dataclass
+class ClassMetrics:
+    """Per-priority-class accounting: the SLO view of one tenant class."""
+
+    latency: LatencyStats = dataclasses.field(default_factory=LatencyStats)
+    wait: LatencyStats = dataclasses.field(default_factory=LatencyStats)
+    compute: LatencyStats = dataclasses.field(default_factory=LatencyStats)
+    completed: int = 0
+    attained: int = 0  # completions within the class deadline
+    shed: int = 0  # admission-control drops
+    rejected: int = 0  # hard max_queue drops
+    deadline_ms: float | None = None
+
+    @property
+    def slo_attainment(self) -> float:
+        """Fraction of *offered* requests that completed within the class
+        deadline — shed and rejected requests count as misses (1.0 for an
+        idle class: no offered request missed)."""
+        offered = self.completed + self.shed + self.rejected
+        if not offered:
+            return 1.0
+        return self.attained / offered
+
+    def to_dict(self) -> dict:
+        return {
+            "completed": self.completed,
+            "shed": self.shed,
+            "rejected": self.rejected,
+            "attained": self.attained,
+            "slo_attainment": self.slo_attainment,
+            "deadline_ms": self.deadline_ms,
+            "latency": self.latency.summary(),
+            "wait": self.wait.summary(),
+            "compute": self.compute.summary(),
+        }
+
+
+@dataclasses.dataclass
 class ServingMetrics:
     """Counters + distributions for one serving session/replay."""
 
     latency: LatencyStats = dataclasses.field(default_factory=LatencyStats)
+    wait: LatencyStats = dataclasses.field(default_factory=LatencyStats)
+    compute: LatencyStats = dataclasses.field(default_factory=LatencyStats)
     requests: int = 0  # completed requests (images)
-    rejected: int = 0  # backpressure rejects
+    rejected: int = 0  # backpressure rejects (hard max_queue cap)
+    shed: int = 0  # admission-control drops (batch-class overload)
+    downgraded: int = 0  # batch requests deadline-downgraded at admission
     query_rows: int = 0  # query descriptor rows served via the engine
     engine_batches: int = 0  # micro-batches dispatched to the engine
     engine_ms: float = 0.0  # wall-clock busy time inside the engine
@@ -61,9 +106,49 @@ class ServingMetrics:
     warmup_ms: float = 0.0
     recompiles_after_warmup: int = 0  # steady-state recompiles (want: 0)
     queue_depth: list = dataclasses.field(default_factory=list)  # samples
+    per_class: dict = dataclasses.field(default_factory=dict)
 
     def observe_queue_depth(self, depth: int) -> None:
         self.queue_depth.append(int(depth))
+
+    def _class(self, priority: str) -> ClassMetrics:
+        cm = self.per_class.get(priority)
+        if cm is None:
+            cm = self.per_class[priority] = ClassMetrics()
+        return cm
+
+    def observe_latency(self, priority: str, *, wait_ms: float,
+                        compute_ms: float,
+                        deadline_ms: float | None = None) -> None:
+        """Record one completion's wait/compute split (latency = sum),
+        globally and under its priority class; with a ``deadline_ms``,
+        also scores the class's SLO attainment."""
+        lat = float(wait_ms) + float(compute_ms)
+        self.latency.add(lat)
+        self.wait.add(wait_ms)
+        self.compute.add(compute_ms)
+        cm = self._class(priority)
+        cm.latency.add(lat)
+        cm.wait.add(wait_ms)
+        cm.compute.add(compute_ms)
+        cm.completed += 1
+        if deadline_ms is not None:
+            cm.deadline_ms = float(deadline_ms)
+            if lat <= deadline_ms:
+                cm.attained += 1
+
+    def observe_drop(self, priority: str, kind: str) -> None:
+        """Count one dropped request: ``kind`` is ``"shed"`` (admission
+        control) or ``"rejected"`` (hard queue cap)."""
+        cm = self._class(priority)
+        if kind == "shed":
+            self.shed += 1
+            cm.shed += 1
+        elif kind == "rejected":
+            self.rejected += 1
+            cm.rejected += 1
+        else:
+            raise ValueError(f"unknown drop kind {kind!r}")
 
     @property
     def ms_per_image(self) -> float:
@@ -73,12 +158,29 @@ class ServingMetrics:
             return float("nan")
         return self.engine_ms / self.engine_images
 
+    def queue_summary(self) -> dict:
+        """Queue-depth distribution at dispatch time (p50/p95/max/mean)."""
+        if not self.queue_depth:
+            return {"count": 0, "mean": 0.0, "p50": 0, "p95": 0, "max": 0}
+        qd = np.asarray(self.queue_depth)
+        return {
+            "count": int(qd.size),
+            "mean": float(qd.mean()),
+            "p50": int(np.percentile(qd, 50)),
+            "p95": int(np.percentile(qd, 95)),
+            "max": int(qd.max()),
+        }
+
     def to_dict(self) -> dict:
-        qd = np.asarray(self.queue_depth) if self.queue_depth else None
+        q = self.queue_summary()
         return {
             "latency": self.latency.summary(),
+            "wait": self.wait.summary(),
+            "compute": self.compute.summary(),
             "requests": self.requests,
             "rejected": self.rejected,
+            "shed": self.shed,
+            "downgraded": self.downgraded,
             "query_rows": self.query_rows,
             "engine_batches": self.engine_batches,
             "engine_ms": self.engine_ms,
@@ -88,6 +190,13 @@ class ServingMetrics:
             "ms_per_image": self.ms_per_image,
             "warmup_ms": self.warmup_ms,
             "recompiles_after_warmup": self.recompiles_after_warmup,
-            "queue_depth_mean": float(qd.mean()) if qd is not None else 0.0,
-            "queue_depth_max": int(qd.max()) if qd is not None else 0,
+            "queue_depth_mean": q["mean"],
+            "queue_depth_max": q["max"],
+            "queue_depth_p50": q["p50"],
+            "queue_depth_p95": q["p95"],
+            "per_class": {
+                name: cm.to_dict() for name, cm in sorted(
+                    self.per_class.items()
+                )
+            },
         }

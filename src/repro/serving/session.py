@@ -286,6 +286,9 @@ class SearchSession:
         explicit ``buckets`` override the derived geometric ladder.
       cache_leaves/cache_admit_after: hot-leaf cache capacity (0 = off)
         and admission threshold.
+      cache_eviction: ``"cost"`` (predicted ms-saved-per-resident-byte
+        via the fitted cost model, the default) or ``"lru"`` — see
+        :class:`~repro.serving.cache.HotLeafCache`.
 
     Raises:
       TypeError: a non-``Index`` first argument without its ``tree``.
@@ -307,6 +310,7 @@ class SearchSession:
         buckets: Sequence[int] | None = None,
         cache_leaves: int = 0,
         cache_admit_after: int = 2,
+        cache_eviction: str = "cost",
         cost_model: str = "auto",
     ):
         from repro.index import Index
@@ -340,10 +344,14 @@ class SearchSession:
             else bucket_ladder(max_batch_rows, n_buckets=n_buckets)
         )
         self.metrics = ServingMetrics()
-        self.cache = HotLeafCache(cache_leaves, admit_after=cache_admit_after)
+        self.cache = HotLeafCache(cache_leaves, admit_after=cache_admit_after,
+                                  eviction=cache_eviction)
         self._attach_cache()
         self._build_runtimes()
         self._warmed_compiles: int | None = None
+        # seed the cache's eviction score with the fitted model's view of
+        # what one engine-served image costs (measured EMA refines it)
+        self.cache.note_engine_cost(self.predicted_ms_per_image())
 
     def _attach_cache(self) -> None:
         attach_cache(self.cache, self._segments, self.index.n_leaves)
@@ -400,6 +408,46 @@ class SearchSession:
         return resolve_model(
             self.cost_model, self.index.calibration
         ).describe()
+
+    def predicted_ms_per_image(self, bucket: int | None = None
+                               ) -> float | None:
+        """Modelled engine ms per image for one dispatch at ``bucket``
+        (default: the largest warmed rung) — what the SLO policy derives
+        its shed threshold from and the hot-leaf cache scores evictions
+        with. Prefers the fitted cost model (summed over every executed
+        per-segment plan, mirroring how serving attributes measurements),
+        falls back to the calibration store's exact-signature means, then
+        to this session's own measured ms/image; ``None`` when nothing
+        can price it (callers must treat the cost as unknown)."""
+        from repro.core.engine import fitted_component
+
+        b = self.buckets[-1] if bucket is None else snap_to_bucket(
+            min(int(bucket), self.max_batch_rows), self.buckets
+        )
+        rt = self._runtimes[b]
+        fitted = fitted_component(self.cost_model, self.index.calibration)
+        for model in (fitted, self.index.calibration):
+            if model is None:
+                continue
+            preds = [
+                (
+                    model.predict_ms(
+                        p, PlanShapes(rows=rows, n_queries=rt.bucket,
+                                      n_shards=ns,
+                                      n_leaves=self.index.n_leaves),
+                    )
+                    if fitted is model
+                    else model.mean_ms(p)
+                )
+                for p, rows, ns in rt.plan_rows
+            ]
+            if all(v is not None for v in preds):
+                total = float(sum(preds))
+                if total > 0:
+                    return total
+        if self.metrics.engine_images:
+            return self.metrics.ms_per_image
+        return None
 
     # -- compile accounting -------------------------------------------------
     def recompiles(self) -> int:
@@ -469,6 +517,8 @@ class SearchSession:
         if n_images:
             self.metrics.engine_images += n_images
             self._record_calibration(rt, dt * 1e3 / n_images)
+            # measured engine cost refines the cache's eviction score
+            self.cache.note_engine_cost(dt * 1e3 / n_images)
         # a starved dispatch must not seed the cache: a cached full-slab
         # scan would disagree with the truncated engine answer
         self.cache.record(queries, leaves_np, exact=overflow == 0)

@@ -39,7 +39,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engine import SearchPlan, snap_to_bucket
+from repro.core.engine import (
+    PlanShapes,
+    SearchPlan,
+    fitted_component,
+    plan as make_plan,
+    snap_to_bucket,
+)
+from repro.distributed.meshutil import data_axis_size
 from repro.index.sharding import (
     ShardedIndex,
     ShardPlan,
@@ -51,6 +58,7 @@ from repro.serving.session import (
     _jit_cache_size,
     make_bucket_runtime,
 )
+from repro.serving.slo import slab_scale_cap
 
 
 @dataclasses.dataclass
@@ -73,8 +81,10 @@ class ShardedSearchSession(SearchSession):
     Construct from a ``repro.index.Index`` plus either ``shards=N`` (+
     ``shard_strategy``), an explicit ``shard_plan``, or an index whose
     manifest carries a persisted plan; a ``ShardedIndex`` is also
-    accepted directly. All other keywords are
-    :class:`SearchSession`'s.
+    accepted directly. ``target_p95_ms`` caps the fitted per-shard
+    slab-headroom multipliers so a grown dispatch still fits the latency
+    target (see :func:`repro.serving.slo.slab_scale_cap`); ``None``
+    keeps the stock cap. All other keywords are :class:`SearchSession`'s.
 
     Raises ``ValueError`` when no shard plan can be resolved, or when an
     explicit plan no longer covers the index's segments after a
@@ -90,6 +100,7 @@ class ShardedSearchSession(SearchSession):
         shards: int | None = None,
         shard_plan: ShardPlan | None = None,
         shard_strategy: str = "round_robin",
+        target_p95_ms: float | None = None,
         **session_kw,
     ):
         if isinstance(index, ShardedIndex):
@@ -98,6 +109,7 @@ class ShardedSearchSession(SearchSession):
         self._n_shards_arg = shards
         self._shard_plan_arg = shard_plan
         self._strategy_arg = shard_strategy
+        self._target_p95_ms = target_p95_ms
         super().__init__(index, tree, mesh, **session_kw)
 
     # -- runtime construction -----------------------------------------------
@@ -163,12 +175,54 @@ class ShardedSearchSession(SearchSession):
         """Per-shard slab-headroom multipliers for one bucket rung —
         the shared :func:`repro.index.sharding.fitted_shard_scales`
         (all ones until the index's calibration yields a usable fit, i.e.
-        the uniform budget split)."""
+        the uniform budget split). With ``target_p95_ms`` set, the
+        multiplier ceiling shrinks so the fitted model predicts a grown
+        dispatch still fits the target's dispatch budget."""
+        max_scale = 2.0
+        if self._target_p95_ms:
+            max_scale = slab_scale_cap(
+                self._target_p95_ms,
+                self._predicted_dispatch_ms(shard_views, bucket),
+            )
         return fitted_shard_scales(
             self.index, shard_views, self.sharded._meshes,
             cost_model=self.cost_model, n_queries=bucket, k=self.k,
             probes=self.probes, layout=self.layout, impl=self.impl,
+            max_scale=max_scale,
         )
+
+    def _predicted_dispatch_ms(self, shard_views, bucket: int) -> float | None:
+        """Fitted prediction for one full-bucket dispatch at scale 1 —
+        the sum of per-shard scan costs (on one device the shard scans
+        run back to back). ``None`` when any shard cannot be planned or
+        priced, which falls back to the stock headroom cap."""
+        fitted = fitted_component(self.cost_model, self.index.calibration)
+        if fitted is None:
+            return None
+        total = 0.0
+        for shard, mesh in zip(shard_views, self.sharded._meshes):
+            if not shard:
+                continue
+            rows = sum(int(v.rows) for _, v in shard)
+            ns = data_axis_size(mesh)
+            try:
+                p = make_plan(
+                    rows=rows, n_leaves=self.index.n_leaves,
+                    n_queries=bucket, n_shards=ns, k=self.k,
+                    probes=self.probes, layout=self.layout, impl=self.impl,
+                    model=self.cost_model,
+                    calibration=self.index.calibration,
+                )
+            except ValueError:
+                return None
+            pred = fitted.predict_ms(p, PlanShapes(
+                rows=rows, n_queries=bucket, n_shards=ns,
+                n_leaves=self.index.n_leaves,
+            ))
+            if pred is None:
+                return None
+            total += pred
+        return total or None
 
     # -- compile accounting --------------------------------------------------
     def recompiles(self) -> int:
@@ -246,6 +300,8 @@ class ShardedSearchSession(SearchSession):
         if n_images:
             self.metrics.engine_images += n_images
             self._record_calibration(rtb, dt * 1e3 / n_images)
+            # measured engine cost refines the cache's eviction score
+            self.cache.note_engine_cost(dt * 1e3 / n_images)
         # a starved dispatch must not seed the cache (see SearchSession)
         self.cache.record(queries, leaves_np, exact=overflow == 0)
         return ids, dists, leaves_np, dt

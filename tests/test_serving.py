@@ -22,6 +22,7 @@ from repro.core.tree import build_tree
 from repro.data import synth
 from repro.distributed.meshutil import local_mesh
 from repro.serving import (
+    HotLeafCache,
     MicroBatcher,
     SearchSession,
     TraceLoadGenerator,
@@ -358,6 +359,72 @@ def test_cache_hits_repeated_images_exactly(corpus):
         np.testing.assert_array_equal(hit.ids, eng.ids)
         # same candidate set and ids; distances agree to f32 GEMM rounding
         np.testing.assert_allclose(hit.dists, eng.dists, rtol=1e-3, atol=0.5)
+
+
+def test_cache_stats_safe_before_attach_and_when_disabled():
+    """Regression: hit_rate / stats() on an idle, disabled, or
+    never-attached cache must be well-formed, never divide by zero, and
+    the serve/learn paths must be no-ops rather than crashes."""
+    with pytest.raises(ValueError, match="eviction"):
+        HotLeafCache(8, eviction="bogus")
+    for cache in (HotLeafCache(0), HotLeafCache(8)):  # disabled / unattached
+        assert not cache.enabled
+        assert cache.hit_rate == 0.0
+        st = cache.stats()
+        assert st["enabled"] is False and st["hit_rate"] == 0.0
+        assert st["resident_bytes"] == 0 and st["cached_leaves"] == 0
+        assert st["memo_entries"] == 0 and st["cost_hint_ms"] is None
+        # a probe against the idle cache neither serves nor counts a miss
+        assert cache.try_serve(np.zeros((2, 4), np.float32), k=3) is None
+        cache.record(np.zeros((2, 4), np.float32), np.zeros((2, 1), np.int64))
+        assert cache.hits == 0 and cache.misses == 0
+        assert cache.stats()["memo_entries"] == 0
+
+
+def _attached_cache(**kw):
+    """A 3-leaf toy index: leaf 0 holds 90 rows, leaves 1/2 hold 5 each."""
+    rng = np.random.default_rng(0)
+    vecs = rng.normal(size=(100, 8)).astype(np.float32)
+    leaves = np.array([0] * 90 + [1] * 5 + [2] * 5)
+    cache = HotLeafCache(2, admit_after=1, **kw)
+    cache.attach_index(vecs, np.arange(100), leaves, n_leaves=3)
+    return cache
+
+
+def _route(cache, leaf, times):
+    for i in range(times):
+        q = np.full((1, 8), float(leaf * 10 + i), np.float32)
+        cache.record(q, np.array([[leaf]]))
+
+
+def test_cache_cost_eviction_drops_big_lukewarm_slab():
+    cache = _attached_cache()  # eviction="cost" is the default
+    _route(cache, 1, 3)
+    _route(cache, 2, 3)
+    assert set(cache._slabs) == {1, 2}
+    _route(cache, 0, 1)  # the 90-row slab: huge, touched once, most recent
+    # over capacity, the big lukewarm slab saves the fewest ms per
+    # resident byte — it goes first even though it is the newest
+    assert cache.evictions == 1 and 0 not in cache._slabs
+    assert set(cache._slabs) == {1, 2}
+    assert cache.stats()["resident_bytes"] == cache.resident_bytes > 0
+    # the original recency policy would have kept it and dropped leaf 1
+    lru = _attached_cache(eviction="lru")
+    _route(lru, 1, 3)
+    _route(lru, 2, 3)
+    _route(lru, 0, 1)
+    assert lru.evictions == 1
+    assert 0 in lru._slabs and 1 not in lru._slabs
+
+
+def test_cache_cost_hint_ema_ignores_bad_samples():
+    cache = HotLeafCache(8)
+    cache.note_engine_cost(None)
+    cache.note_engine_cost(-2.0)
+    assert cache.cost_hint_ms is None
+    cache.note_engine_cost(4.0)
+    cache.note_engine_cost(8.0)  # EMA fold, not overwrite: 4 + 0.25 * 4
+    assert cache.cost_hint_ms == pytest.approx(5.0)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,345 @@
+"""Deadline-aware SLO scheduling: policy validation, multi-tenant trace
+generation (determinism, class mix, burstiness bounds), EDF vs FIFO
+bit-identity + class ordering, admission control, per-class metrics, and
+the closed-loop ladder tuner."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import (
+    CalibrationStore,
+    PlanShapes,
+    bucket_ladder,
+    fitted_component,
+    plan as make_plan,
+)
+from repro.core.index_build import build_index
+from repro.core.tree import build_tree
+from repro.data import synth
+from repro.distributed.meshutil import local_mesh
+from repro.serving import (
+    MicroBatcher,
+    SearchSession,
+    SLOPolicy,
+    TenantClass,
+    TraceLoadGenerator,
+    default_tenant_mix,
+    tune_ladder,
+)
+from repro.serving.metrics import ServingMetrics
+from repro.serving.slo import (
+    DEFAULT_DEADLINES_MS,
+    PRIORITY_CLASSES,
+    class_rank,
+    slab_scale_cap,
+)
+
+DIM = 24
+DPI = 8
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    vecs_np, _ = synth.sample_descriptors(3000, DIM, seed=0, n_centers=50)
+    vecs = jnp.asarray(vecs_np)
+    tree = build_tree(vecs, (8, 4), key=jax.random.PRNGKey(1))
+    mesh = local_mesh()
+    index = build_index(vecs, tree, mesh, wire_dtype=jnp.float32)
+    return vecs_np, tree, mesh, index
+
+
+def _mixed_burst(vecs_np, n_each: int):
+    """``3 * n_each`` requests, all at t=0, classes interleaved by rid."""
+    gen = TraceLoadGenerator(vecs_np, DPI, seed=5)
+    reqs = gen.requests(np.arange(3 * n_each) % 20, np.zeros(3 * n_each))
+    for i, r in enumerate(reqs):
+        r.priority = PRIORITY_CLASSES[i % 3]
+    return reqs
+
+
+# ---------------------------------------------------------------------------
+# policy: ranks, validation, derived budgets, fitted shed depth
+# ---------------------------------------------------------------------------
+
+
+def test_class_rank_order_and_validation():
+    assert class_rank("interactive") < class_rank("standard")
+    assert class_rank("standard") < class_rank("batch")
+    with pytest.raises(ValueError, match="unknown priority"):
+        class_rank("bulk")
+
+
+def test_slo_policy_validation_and_budgets():
+    p = SLOPolicy.default(base_max_wait_ms=8.0)
+    for c in PRIORITY_CLASSES:
+        assert p.deadlines_ms[c] == DEFAULT_DEADLINES_MS[c]
+        assert p.deadline_s(c) == pytest.approx(p.deadlines_ms[c] / 1e3)
+    # interactive coalesces briefly, batch coalesces long
+    assert (p.max_wait_ms["interactive"] < p.max_wait_ms["standard"]
+            < p.max_wait_ms["batch"])
+    assert p.max_wait_ms["standard"] == 8.0
+    with pytest.raises(ValueError, match="on_overload"):
+        SLOPolicy.default(on_overload="panic")
+    with pytest.raises(ValueError, match="missing classes"):
+        SLOPolicy(deadlines_ms={"interactive": 1.0},
+                  max_wait_ms=dict.fromkeys(PRIORITY_CLASSES, 1.0))
+
+
+def test_policy_for_session_derives_shed_depth_from_fitted_cost():
+    class _Session:
+        def __init__(self, ms):
+            self._ms = ms
+
+        def predicted_ms_per_image(self):
+            return self._ms
+
+    # 2000 ms batch deadline / 10 ms per image -> depth 200
+    p = SLOPolicy.for_session(_Session(10.0))
+    assert p.shed_depth == 200
+    # unpriceable session -> shedding disabled, not guessed
+    assert SLOPolicy.for_session(_Session(None)).shed_depth is None
+    # clamped to [4, max_depth]
+    assert SLOPolicy.for_session(_Session(10_000.0)).shed_depth == 4
+    assert SLOPolicy.for_session(_Session(0.001), max_depth=64).shed_depth == 64
+    # an explicit depth wins over the derivation
+    assert SLOPolicy.for_session(_Session(10.0), shed_depth=7).shed_depth == 7
+
+
+# ---------------------------------------------------------------------------
+# multi-tenant traces: determinism, mix, burstiness
+# ---------------------------------------------------------------------------
+
+
+def test_tenant_class_validation():
+    with pytest.raises(ValueError, match="unknown priority"):
+        TenantClass("bulk", 10, rate=1.0)
+    with pytest.raises(ValueError, match="burst_factor"):
+        TenantClass("batch", 10, rate=1.0, burst_factor=0.5)
+    with pytest.raises(ValueError, match="rate"):
+        TenantClass("batch", 10, rate=0.0)
+
+
+def test_tenant_class_burstiness_bounds():
+    b = TenantClass("batch", 400, rate=100.0, burst_factor=5.0,
+                    burst_period_s=1.0)
+    arr = b.arrivals(np.random.default_rng(0))
+    assert (np.diff(arr) >= 0).all()
+    # every arrival lands in the first 1/burst_factor of its window
+    assert (np.mod(arr, 1.0) <= 1.0 / 5.0 + 1e-9).all()
+    # the mean offered rate is unchanged by bursting (same on-clock mass)
+    steady = TenantClass("standard", 400, rate=100.0)
+    s_arr = steady.arrivals(np.random.default_rng(0))
+    assert arr[-1] == pytest.approx(s_arr[-1], rel=0.35)
+    assert s_arr[-1] == pytest.approx(400 / 100.0, rel=0.3)
+
+
+def test_multi_tenant_trace_deterministic_and_mixed(corpus):
+    vecs_np, tree, mesh, index = corpus
+    gen = TraceLoadGenerator(vecs_np, DPI, seed=5)
+    classes = default_tenant_mix(120, rate=100.0)
+    assert sum(tc.n_requests for tc in classes) == 120
+    a = gen.multi_tenant(classes, 50, seed=9)
+    b = gen.multi_tenant(classes, 50, seed=9)
+    assert [(r.rid, r.image_id, r.arrival, r.priority) for r in a] == \
+           [(r.rid, r.image_id, r.arrival, r.priority) for r in b]
+    c = gen.multi_tenant(classes, 50, seed=10)
+    assert [(r.image_id, r.arrival) for r in a] != \
+           [(r.image_id, r.arrival) for r in c]
+    # merged stream is arrival-ordered with dense rids
+    assert [r.rid for r in a] == list(range(120))
+    assert all(x.arrival <= y.arrival for x, y in zip(a, a[1:]))
+    # the class mix survives the merge exactly
+    got = {p: sum(1 for r in a if r.priority == p) for p in PRIORITY_CLASSES}
+    want = {tc.priority: tc.n_requests for tc in classes}
+    assert got == want
+    # query vectors come from the shared per-image generator (cache-warm
+    # repeats are the same photo)
+    for r in a[:5]:
+        np.testing.assert_array_equal(r.queries, gen.query_image(r.image_id))
+
+
+# ---------------------------------------------------------------------------
+# EDF vs FIFO: bit-identical results, deadline-aware ordering
+# ---------------------------------------------------------------------------
+
+
+def test_edf_and_fifo_return_bit_identical_results(corpus):
+    vecs_np, tree, mesh, index = corpus
+    by_sched = {}
+    for sched in ("fifo", "edf"):
+        s = SearchSession(index, tree, mesh, k=3, layout="point_major",
+                          buckets=(64,))
+        s.warmup()
+        done = MicroBatcher(s, max_wait_ms=5.0, max_queue=256,
+                            scheduler=sched).run(_mixed_burst(vecs_np, 12))
+        assert s.metrics.requests == 36 and s.metrics.shed == 0
+        by_sched[sched] = {c.rid: c for c in done}
+    assert set(by_sched["fifo"]) == set(by_sched["edf"])
+    for rid, f in by_sched["fifo"].items():
+        e = by_sched["edf"][rid]
+        np.testing.assert_array_equal(f.ids, e.ids)
+        np.testing.assert_array_equal(f.dists, e.dists)
+
+
+def test_edf_dispatches_interactive_before_batch(corpus):
+    vecs_np, tree, mesh, index = corpus
+    s = SearchSession(index, tree, mesh, k=3, layout="point_major",
+                      buckets=(64,))
+    s.warmup()
+    done = MicroBatcher(s, max_wait_ms=5.0, max_queue=256,
+                        scheduler="edf").run(_mixed_burst(vecs_np, 12))
+    finish = {p: [] for p in PRIORITY_CLASSES}
+    for c in done:
+        finish[c.priority].append(c.finish)
+    # a concurrent burst dispatches in class order: every interactive
+    # request completes no later than the last batch request, and the
+    # class medians are strictly ordered
+    assert max(finish["interactive"]) <= max(finish["batch"])
+    assert np.median(finish["interactive"]) < np.median(finish["batch"])
+    m = s.metrics
+    int_p50 = m.per_class["interactive"].latency.percentile(50)
+    bat_p50 = m.per_class["batch"].latency.percentile(50)
+    assert int_p50 < bat_p50
+    # completions carry the wait/compute split and it sums to latency
+    for c in done:
+        assert c.latency_ms == pytest.approx(c.wait_ms + c.compute_ms,
+                                             rel=1e-6, abs=1e-6)
+
+
+def test_edf_admission_control_sheds_only_batch(corpus):
+    vecs_np, tree, mesh, index = corpus
+    gen = TraceLoadGenerator(vecs_np, DPI, seed=5)
+    reqs = gen.requests(np.arange(12) % 20, np.zeros(12))
+    for r in reqs[:10]:
+        r.priority = "batch"
+    for r in reqs[10:]:
+        r.priority = "interactive"
+    policy = SLOPolicy.default(shed_depth=2, on_overload="shed")
+    s = SearchSession(index, tree, mesh, k=3, layout="point_major",
+                      buckets=(64,))
+    s.warmup()
+    done = MicroBatcher(s, max_wait_ms=5.0, max_queue=256, scheduler="edf",
+                        policy=policy).run(reqs)
+    shed = [c for c in done if c.source == "shed"]
+    assert len(shed) == 8 and s.metrics.shed == 8
+    assert all(c.priority == "batch" and c.ids is None for c in shed)
+    # interactive arrivals are admitted past the shed depth
+    assert s.metrics.requests == 4
+    assert s.metrics.per_class["interactive"].completed == 2
+    # shed batch work counts against the batch class's SLO attainment
+    assert s.metrics.per_class["batch"].slo_attainment < 1.0
+
+
+def test_edf_admission_control_downgrade_keeps_requests(corpus):
+    vecs_np, tree, mesh, index = corpus
+    gen = TraceLoadGenerator(vecs_np, DPI, seed=5)
+    reqs = gen.requests(np.arange(12) % 20, np.zeros(12))
+    for r in reqs:
+        r.priority = "batch"
+    policy = SLOPolicy.default(shed_depth=2, on_overload="downgrade")
+    s = SearchSession(index, tree, mesh, k=3, layout="point_major",
+                      buckets=(64,))
+    s.warmup()
+    done = MicroBatcher(s, max_wait_ms=5.0, max_queue=256, scheduler="edf",
+                        policy=policy).run(reqs)
+    assert s.metrics.shed == 0 and s.metrics.downgraded == 10
+    assert s.metrics.requests == 12
+    assert all(c.source in ("engine", "cache") for c in done)
+
+
+def test_unknown_scheduler_rejected(corpus):
+    vecs_np, tree, mesh, index = corpus
+    s = SearchSession(index, tree, mesh, k=3, layout="point_major",
+                      buckets=(64,))
+    with pytest.raises(ValueError, match="unknown scheduler"):
+        MicroBatcher(s, scheduler="lifo")
+
+
+# ---------------------------------------------------------------------------
+# per-class metrics
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_per_class_attainment_and_breakdown():
+    m = ServingMetrics()
+    m.observe_latency("interactive", wait_ms=10.0, compute_ms=20.0,
+                      deadline_ms=50.0)
+    m.observe_latency("interactive", wait_ms=100.0, compute_ms=20.0,
+                      deadline_ms=50.0)
+    m.observe_drop("interactive", "shed")
+    m.observe_drop("standard", "rejected")
+    cm = m.per_class["interactive"]
+    assert cm.completed == 2 and cm.attained == 1 and cm.shed == 1
+    assert cm.slo_attainment == pytest.approx(1 / 3)
+    assert m.per_class["standard"].rejected == 1
+    assert m.shed == 1 and m.rejected == 1
+    assert len(m.wait) == 2 and len(m.compute) == 2
+    d = m.to_dict()
+    assert d["per_class"]["interactive"]["slo_attainment"] == \
+        pytest.approx(1 / 3)
+    assert d["wait"]["count"] == 2 and d["compute"]["count"] == 2
+    with pytest.raises(ValueError, match="unknown drop"):
+        m.observe_drop("batch", "lost")
+    # queue-depth percentiles are defined even with no samples
+    assert ServingMetrics().queue_summary()["p95"] == 0
+
+
+# ---------------------------------------------------------------------------
+# ladder tuner + slab-scale cap
+# ---------------------------------------------------------------------------
+
+
+def _calibrated_store(rows=65_536, n_leaves=64):
+    cal = CalibrationStore()
+    for layout in ("point_major", "query_routed"):
+        for b in (128, 1024):
+            p = make_plan(rows=rows, n_leaves=n_leaves, n_queries=b,
+                          n_shards=1, k=10, layout=layout)
+            cal.record(p, 2.0, PlanShapes(rows=rows, n_queries=b,
+                                          n_shards=1, n_leaves=n_leaves))
+    assert fitted_component("auto", cal) is not None
+    return cal
+
+
+def test_tune_ladder_without_fit_keeps_stock_ladder():
+    d = tune_ladder(CalibrationStore(), target_p95_ms=100.0, rows=65_536,
+                    n_leaves=64, desc_per_image=8, max_batch_rows=1024)
+    assert d.decided_by == "default"
+    assert d.buckets == bucket_ladder(1024, n_buckets=3)
+    assert d.predicted_dispatch_ms is None
+    assert d.max_wait_ms == 5.0
+
+
+def test_tune_ladder_fitted_scales_bucket_with_target():
+    cal = _calibrated_store()
+    kw = dict(rows=65_536, n_leaves=64, desc_per_image=8,
+              max_batch_rows=1024, n_buckets=3)
+    generous = tune_ladder(cal, target_p95_ms=1e6, **kw)
+    assert generous.decided_by == "fitted"
+    assert generous.buckets[-1] == 1024  # everything fits: keep the top
+    assert generous.predicted_dispatch_ms > 0
+    assert generous.max_wait_ms == 5.0  # ample slack: base budget kept
+    tight = tune_ladder(cal, target_p95_ms=1e-3, **kw)
+    assert tight.decided_by == "fitted"
+    # an unmeetable target degrades to the smallest plannable rung and
+    # the coalescing budget floors at 1 ms rather than going negative
+    assert tight.buckets[-1] < generous.buckets[-1]
+    assert tight.max_wait_ms == 1.0
+    # ladders are always real ladders: rungs divide the top rung
+    for d in (generous, tight):
+        assert all(d.buckets[-1] % r == 0 for r in d.buckets)
+
+
+def test_slab_scale_cap_bounds():
+    assert slab_scale_cap(None, 10.0) == 2.0  # no target: stock cap
+    assert slab_scale_cap(100.0, None) == 2.0  # unpriceable: stock cap
+    # cheap dispatch: growth allowed up to the stock cap
+    assert slab_scale_cap(100.0, 10.0) == 2.0
+    # dispatch already eats the budget: growth clamped to 1 (never shrink)
+    assert slab_scale_cap(100.0, 100.0) == 1.0
+    # in between: cap = target * dispatch_fraction / predicted
+    assert slab_scale_cap(100.0, 30.0) == pytest.approx(100.0 * 0.5 / 30.0)
