@@ -31,11 +31,16 @@ def git_rev() -> str:
 def bench_header(shard_plan=None, **extra) -> dict:
     """Header stamped on every ``benchmarks/out`` JSON artifact.
 
-    Records the git rev and the shard plan under which the numbers were
-    taken (``None`` = unsharded), so ms/image trajectories stay
+    Records the git rev, the shard plan under which the numbers were
+    taken (``None`` = unsharded), and the observability state (``obs``:
+    tracer enabled/sample/span counts — so a trajectory point taken with
+    tracing on is distinguishable), keeping ms/image trajectories
     comparable across PRs and shard topologies.
     """
-    h = {"git_rev": git_rev(), "shard_plan": shard_plan}
+    from repro.obs import get_tracer
+
+    h = {"git_rev": git_rev(), "shard_plan": shard_plan,
+         "obs": get_tracer().describe()}
     h.update(extra)
     return h
 

@@ -39,9 +39,11 @@ def smoke() -> int:
     steady-state recompiles), the index-lifecycle gate (create →
     append ×2 → search → compact → search, identical results), the
     cost-model calibration round-trip gate, the sharded bit-identity
-    gate, and the SLO scheduling gate (fifo == edf results, EDF
-    interactive p95 < batch p95) — the per-PR gate wired into
-    scripts/smoke.sh. Fails loudly, returns rc."""
+    gate, the SLO scheduling gate (fifo == edf results, EDF interactive
+    p95 < batch p95), and the observability gate (traced == untraced
+    bit-identity, valid Chrome trace + registry dump + tracereport) —
+    the per-PR gate wired into scripts/smoke.sh. Fails loudly,
+    returns rc."""
     from benchmarks import indexing as indexing_bench
     from benchmarks import serving as serving_bench
     from repro.launch import serve
@@ -77,7 +79,12 @@ def smoke() -> int:
         return rc
     print("# smoke: SLO scheduling (fifo == edf results, EDF interactive "
           "p95 < batch p95)", file=sys.stderr)
-    return serving_bench.slo_smoke()
+    rc = serving_bench.slo_smoke()
+    if rc != 0:
+        return rc
+    print("# smoke: observability (traced == untraced bit-identity, "
+          "Chrome trace, registry, tracereport)", file=sys.stderr)
+    return serving_bench.obs_smoke()
 
 
 def main() -> None:

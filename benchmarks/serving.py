@@ -55,7 +55,62 @@ def _replay(session, c, *, skew, n_requests, desc_per_image, rate, seed=3):
     return session.metrics
 
 
-def run():
+def _traced_shard_replay(c, out_dir, *, trace_out=None, trace_sample=1.0,
+                         shards=2, n_requests=200, desc_per_image=24):
+    """The traced scatter-gather leg of :func:`run`: one Zipf replay over
+    a ``shards``-segment index with a real tracer installed, exporting
+    the trace artifacts next to the benchmark JSONs — the Chrome timeline
+    (``serving_trace.json``, per-request queue-wait vs compute bars plus
+    one process lane per shard), the structured event log
+    (``serving_events.jsonl``), and the unified registry snapshot
+    (``serving_metrics.json``). ``scripts/tracereport.py`` digests either
+    trace file into a top-N-slowest breakdown."""
+    import numpy as np
+
+    from repro.index import Index
+    from repro.obs import (
+        Tracer,
+        export_trace,
+        get_registry,
+        tracing,
+        write_jsonl,
+    )
+    from repro.serving import (
+        MicroBatcher,
+        ShardedSearchSession,
+        TraceLoadGenerator,
+    )
+
+    idx = Index.create(c.tree, None, mesh=c.mesh)
+    for chunk in np.array_split(c.vecs_np, shards):
+        idx.append(chunk)
+    idx.commit()
+    session = ShardedSearchSession(
+        idx, mesh=c.mesh, shards=shards, k=10, buckets=(1024, 4096),
+        cache_leaves=256, cache_admit_after=1,
+    )
+    session.warmup()
+    n_images = len(c.vecs_np) // desc_per_image
+    gen = TraceLoadGenerator(c.vecs_np, desc_per_image, seed=3)
+    reqs = gen.from_trace(n_requests, n_images, skew="zipf", rate=100.0)
+    tracer = Tracer(sample=trace_sample, seed=3)
+    with tracing(tracer):
+        MicroBatcher(session, max_wait_ms=5.0, max_queue=4096).run(reqs)
+    paths = {
+        "trace": export_trace(
+            tracer, trace_out or os.path.join(out_dir, "serving_trace.json")
+        ),
+        "events": write_jsonl(
+            tracer, os.path.join(out_dir, "serving_events.jsonl")
+        ),
+        "metrics": get_registry().dump(
+            os.path.join(out_dir, "serving_metrics.json")
+        ),
+    }
+    return tracer, session, paths
+
+
+def run(*, trace_out=None, trace_sample=1.0):
     from repro.core.engine import CalibrationStore
 
     out_rows = []
@@ -87,11 +142,31 @@ def run():
             "cache": session.cache.stats(),
             "plans": session.plan_summary(),
         }
+    out_dir = os.environ.get("REPRO_BENCH_OUT", "benchmarks/out")
+    os.makedirs(out_dir, exist_ok=True)
+    # the traced scatter-gather leg: same engine, tracing on — its trace/
+    # events/registry artifacts land next to serving.json
+    tracer, traced_session, trace_paths = _traced_shard_replay(
+        c, out_dir, trace_out=trace_out, trace_sample=trace_sample,
+    )
+    tm = traced_session.metrics
+    calibration.merge(traced_session.index.calibration)
+    payload["sharded_traced"] = {
+        "metrics": tm.to_dict(),
+        "obs": tracer.describe(),
+        "shards": traced_session.n_shards,
+        "artifacts": trace_paths,
+    }
+    out_rows.append(row(
+        "serving_traced_2shard", tm.latency.percentile(50) / 1e3,
+        f"p95_ms={tm.latency.percentile(95):.1f} "
+        f"spans={tracer.describe()['spans']} "
+        f"trace={trace_paths['trace']}",
+    ))
     payload["header"] = bench_header(
         cost_model=session.active_cost_model()
     )
     payload["plan_observations"] = calibration.snapshot()
-    out_dir = os.environ.get("REPRO_BENCH_OUT", "benchmarks/out")
     path = write_artifact(os.path.join(out_dir, "serving.json"), payload)
     out_rows.append(row("serving_json", 0.0, f"wrote={path}"))
     return out_rows
@@ -654,12 +729,111 @@ def sharded_smoke() -> int:
     return 0
 
 
+def obs_smoke() -> int:
+    """Observability gate. Asserts (a) a traced 2-shard replay returns
+    ids + distances bit-identical to the untraced replay of the same
+    trace (tracing must never perturb results), (b) the trace is
+    non-empty and carries the full span taxonomy with both shard lanes,
+    (c) the Chrome export round-trips as valid JSON with monotone
+    timestamps, (d) the registry dump is non-empty, and (e)
+    ``scripts/tracereport.py`` digests the trace into a top-N report."""
+    import subprocess
+    import sys
+    import tempfile
+
+    import numpy as np
+
+    from repro.index import Index
+    from repro.obs import Tracer, get_registry, tracing, write_chrome_trace
+    from repro.serving import (
+        MicroBatcher,
+        ShardedSearchSession,
+        TraceLoadGenerator,
+    )
+
+    c = Corpus(rows=20_000, dim=32, fanouts=(16, 16))
+    idx = Index.create(c.tree, None, mesh=c.mesh)
+    idx.append(c.vecs_np[:12_000])
+    idx.append(c.vecs_np[12_000:])
+    idx.commit()
+    dpi = 20
+    n_images = len(c.vecs_np) // dpi
+    gen = TraceLoadGenerator(c.vecs_np, dpi, seed=3)
+    reqs = gen.from_trace(80, n_images, skew="zipf", rate=200.0)
+
+    def replay(tracer):
+        # cache OFF: the virtual clock advances by measured wall compute,
+        # so cache admission timing can differ between replays, and a
+        # cache-served answer is a CPU recompute under a rounding contract
+        # — not the engine's bits. Engine-only replays are deterministic.
+        s = ShardedSearchSession(idx, mesh=c.mesh, shards=2, k=10,
+                                 buckets=(256, 1024), cache_leaves=0)
+        s.warmup()
+        with tracing(tracer):
+            comps = MicroBatcher(s, max_wait_ms=5.0).run(reqs)
+        return {cc.rid: cc for cc in comps if cc.ids is not None}, s
+
+    base, _ = replay(None)
+    tracer = Tracer(sample=1.0, seed=0)
+    # keep the traced session alive through the registry dump below — its
+    # ServingMetrics source is weakly held and would be pruned once GC'd
+    traced, session = replay(tracer)
+    assert set(base) == set(traced), "traced replay completed different rids"
+    for rid, cc in traced.items():
+        np.testing.assert_array_equal(cc.ids, base[rid].ids)
+        np.testing.assert_array_equal(cc.dists, base[rid].dists)
+    assert session.metrics.requests == len(reqs)
+    d = tracer.describe()
+    assert d["spans"] > 0, d
+    names = {s.name for s in tracer.spans}
+    for want in ("request", "queue.wait", "compute", "engine.dispatch",
+                 "shard.scan", "gather.merge"):
+        assert want in names, f"missing {want} spans (have {sorted(names)})"
+    shards_seen = {
+        s.attrs["shard"] for s in tracer.spans if s.name == "shard.scan"
+    }
+    assert shards_seen == {0, 1}, shards_seen
+    with tempfile.TemporaryDirectory() as td:
+        path = write_chrome_trace(tracer, os.path.join(td, "trace.json"))
+        with open(path) as f:
+            doc = json.load(f)
+        evs = [e for e in doc["traceEvents"] if e["ph"] != "M"]
+        assert evs, "empty Chrome trace"
+        ts = [e["ts"] for e in evs]
+        assert ts == sorted(ts), "Chrome trace timestamps not monotone"
+        with open(get_registry().dump(os.path.join(td, "m.json"))) as f:
+            snap = json.load(f)
+        assert snap["metrics"], "empty registry dump"
+        assert any(k.startswith("serving_metrics") for k in snap["sources"])
+        script = os.path.join(
+            os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            "scripts", "tracereport.py",
+        )
+        rep = subprocess.run(
+            [sys.executable, script, path, "--top", "3"],
+            capture_output=True, text=True, timeout=120,
+        )
+        assert rep.returncode == 0, rep.stderr
+        assert "slowest" in rep.stdout, rep.stdout
+    print(
+        f"# obs smoke: traced == untraced on {len(base)} requests "
+        f"(2 shards); {d['spans']} spans / {d['events']} events; Chrome "
+        f"export valid + monotone; registry {len(snap['metrics'])} series; "
+        f"tracereport OK"
+    )
+    return 0
+
+
 def main(argv=None) -> int:
     import argparse
 
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="run the serving-session smoke gate")
+    ap.add_argument("--obs-smoke", action="store_true",
+                    help="run the observability gate (traced == untraced "
+                         "bit-identity, valid Chrome trace, registry dump, "
+                         "tracereport)")
     ap.add_argument("--sharded-smoke", action="store_true",
                     help="run the scatter-gather bit-identity gate")
     ap.add_argument("--calibration-smoke", action="store_true",
@@ -697,9 +871,18 @@ def main(argv=None) -> int:
     ap.add_argument("--strategy", choices=("round_robin", "balanced"),
                     default="balanced")
     ap.add_argument("--json", default=None, help="JSON output path")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the traced leg's Chrome trace here "
+                         "(default: benchmarks/out/serving_trace.json; "
+                         ".jsonl = structured event log)")
+    ap.add_argument("--trace-sample", type=float, default=1.0,
+                    help="fraction of requests traced in the traced leg "
+                         "(deterministic per-request hash)")
     args = ap.parse_args(argv)
     if args.smoke:
         return smoke()
+    if args.obs_smoke:
+        return obs_smoke()
     if args.sharded_smoke:
         return sharded_smoke()
     if args.calibration_smoke:
@@ -718,7 +901,7 @@ def main(argv=None) -> int:
                          batch_sizes=tuple(args.batch_sizes),
                          json_path=args.json)
     else:
-        rows = run()
+        rows = run(trace_out=args.trace_out, trace_sample=args.trace_sample)
     for r in rows:
         print(r)
     return 0

@@ -1,0 +1,158 @@
+#!/usr/bin/env python3
+"""Top-N-slowest breakdown of a recorded serving trace.
+
+Reads either trace artifact the observability exporters produce
+(docs/observability.md) — the Chrome ``trace_event`` JSON
+(``--trace-out serving_trace.json``) or the structured JSONL event log
+(``--trace-out serving_events.jsonl``) — and prints, with no repo or
+third-party imports (stdlib only, no PYTHONPATH needed):
+
+  * the top-N slowest requests, each split into queue-wait vs compute
+    (vs cache lookup), with priority class and source;
+  * per-priority-class totals (count, mean/max latency, mean wait share);
+  * per-shard scan accounting (count, total/mean ms) and the gather-merge
+    total — where the scatter-gather wall time actually went.
+
+Usage:
+  python scripts/tracereport.py benchmarks/out/serving_trace.json
+  python scripts/tracereport.py benchmarks/out/serving_events.jsonl --top 10
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _load_spans(path: str) -> list[dict]:
+    """Normalise either artifact into span dicts: ``name``, ``trace_id``,
+    ``dur_ms``, ``attrs`` (Chrome events: X-phase only; JSONL: header
+    line skipped, ``kind == "span"`` only)."""
+    spans = []
+    if path.endswith(".jsonl"):
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                rec = json.loads(line)
+                if "header" in rec or rec.get("kind") != "span":
+                    continue
+                spans.append({
+                    "name": rec["name"],
+                    "trace_id": rec.get("trace_id"),
+                    "dur_ms": float(rec.get("dur_ms") or 0.0),
+                    "attrs": rec.get("attrs") or {},
+                })
+        return spans
+    with open(path) as f:
+        doc = json.load(f)
+    events = doc["traceEvents"] if isinstance(doc, dict) else doc
+    for ev in events:
+        if ev.get("ph") != "X":
+            continue
+        args = ev.get("args") or {}
+        spans.append({
+            "name": ev["name"],
+            "trace_id": args.get("trace_id"),
+            "dur_ms": float(ev.get("dur", 0.0)) / 1e3,
+            "attrs": args,
+        })
+    return spans
+
+
+def report(spans: list[dict], top: int = 5) -> str:
+    requests, waits, computes, lookups = [], {}, {}, {}
+    per_shard: dict[int, list[float]] = {}
+    merge_ms, merge_n = 0.0, 0
+    for s in spans:
+        rid = s["trace_id"]
+        if s["name"] == "request":
+            requests.append(s)
+        elif s["name"] == "queue.wait" and rid is not None:
+            waits[rid] = s["dur_ms"]
+        elif s["name"] == "compute" and rid is not None:
+            computes[rid] = s["dur_ms"]
+        elif s["name"] == "cache.lookup" and rid is not None:
+            lookups[rid] = s["dur_ms"]
+        elif s["name"] == "shard.scan":
+            per_shard.setdefault(
+                int(s["attrs"].get("shard", -1)), []
+            ).append(s["dur_ms"])
+        elif s["name"] == "gather.merge":
+            merge_ms += s["dur_ms"]
+            merge_n += 1
+    lines = [f"== trace report: {len(spans)} spans, "
+             f"{len(requests)} traced requests =="]
+    if not requests:
+        lines.append("(no request spans — was the replay traced with "
+                     "sample > 0?)")
+        return "\n".join(lines)
+
+    requests.sort(key=lambda s: -s["dur_ms"])
+    lines.append(f"-- top {min(top, len(requests))} slowest requests "
+                 "(wait vs compute) --")
+    for s in requests[:top]:
+        rid = s["trace_id"]
+        total = s["dur_ms"]
+        wait = waits.get(rid, 0.0)
+        comp = computes.get(rid, 0.0)
+        share = wait / total if total else 0.0
+        lines.append(
+            f"rid={rid:<6} class={s['attrs'].get('priority', '?'):<12} "
+            f"total={total:8.2f} ms  wait={wait:8.2f} ms ({share:4.0%})  "
+            f"compute={comp:8.2f} ms  "
+            f"source={s['attrs'].get('source', '?')}"
+        )
+
+    by_class: dict[str, list[dict]] = {}
+    for s in requests:
+        by_class.setdefault(s["attrs"].get("priority", "?"), []).append(s)
+    lines.append("-- per class --")
+    for name in sorted(by_class):
+        rs = by_class[name]
+        tot = [s["dur_ms"] for s in rs]
+        ws = [waits.get(s["trace_id"], 0.0) for s in rs]
+        wait_share = sum(ws) / sum(tot) if sum(tot) else 0.0
+        lines.append(
+            f"{name:<12} n={len(rs):<5} mean={sum(tot) / len(tot):8.2f} ms  "
+            f"max={max(tot):8.2f} ms  wait-share={wait_share:4.0%}"
+        )
+
+    if per_shard:
+        lines.append("-- per shard --")
+        for shard in sorted(per_shard):
+            ds = per_shard[shard]
+            lines.append(
+                f"shard {shard}: scans={len(ds):<5} "
+                f"total={sum(ds):9.1f} ms  mean={sum(ds) / len(ds):7.2f} ms  "
+                f"max={max(ds):7.2f} ms"
+            )
+        if merge_n:
+            lines.append(
+                f"gather.merge: n={merge_n} total={merge_ms:.1f} ms  "
+                f"mean={merge_ms / merge_n:.2f} ms"
+            )
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="top-N-slowest breakdown of a serving trace artifact"
+    )
+    ap.add_argument("trace", help="serving_trace.json (Chrome) or "
+                                  "serving_events.jsonl (structured log)")
+    ap.add_argument("--top", type=int, default=5,
+                    help="how many slowest requests to show")
+    args = ap.parse_args(argv)
+    spans = _load_spans(args.trace)
+    if not spans:
+        print(f"error: no spans in {args.trace}", file=sys.stderr)
+        return 1
+    print(report(spans, top=args.top))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

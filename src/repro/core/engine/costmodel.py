@@ -157,6 +157,9 @@ class CalibrationStore:
         self._seq += 1
         o["seq"] = self._seq
         self._dirty = True
+        from repro.obs import get_registry
+
+        get_registry().counter("calibration.records").inc()
 
     def merge(self, other: "CalibrationStore") -> None:
         """Fold another store's records into this one (stats summed)."""

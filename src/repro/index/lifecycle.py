@@ -55,6 +55,7 @@ from repro.index import manifest as manifest_lib
 from repro.index.manifest import Manifest
 from repro.index.segment import Segment, masked_view, next_seq, segment_name
 from repro.index.sharding import ShardPlan
+from repro.obs import get_registry, get_tracer
 
 
 # the pre-segment serving.persist format (one monolithic checkpoint);
@@ -508,17 +509,21 @@ class Index:
                 f"descriptor id {int(ids.max())} exceeds int32 — the id "
                 "space is full; compact() after deletes or re-id the corpus"
             )
-        built = build_index(
-            jnp.asarray(vecs),
-            self.tree,
-            self.mesh,
-            ids=jnp.asarray(ids.astype(np.int32)),
-            wave_rows=wave_rows,
-            capacity_factor=capacity_factor,
-            wire_dtype=self.wire_dtype,
-        )
-        jax.block_until_ready(built.vecs)
-        name = self.append_built(built)
+        with get_tracer().span("index.append", rows=n):
+            built = build_index(
+                jnp.asarray(vecs),
+                self.tree,
+                self.mesh,
+                ids=jnp.asarray(ids.astype(np.int32)),
+                wave_rows=wave_rows,
+                capacity_factor=capacity_factor,
+                wire_dtype=self.wire_dtype,
+            )
+            jax.block_until_ready(built.vecs)
+            name = self.append_built(built)
+        reg = get_registry()
+        reg.counter("index.appends").inc()
+        reg.counter("index.rows_appended").inc(n)
         return name
 
     def append_built(self, built: DistributedIndex, *, name=None) -> str:
@@ -569,6 +574,7 @@ class Index:
         self._tombstones = np.sort(np.concatenate([self._tombstones, ids]))
         self._tombstones_dirty = True
         self._views = None
+        get_registry().counter("index.tombstoned").inc(int(ids.size))
         return int(ids.size)
 
     def commit(self) -> int:
@@ -601,17 +607,20 @@ class Index:
         version = self._version + 1
         segments = self._committed + self._staged
         plan = self._plan_for(segments)
-        if self.directory:
-            rel = None
-            if len(self._tombstones):
-                rel = manifest_lib.write_tombstones(
-                    self.directory, version, self._tombstones
+        with get_tracer().span("index.commit", version=version,
+                               staged=len(self._staged)):
+            if self.directory:
+                rel = None
+                if len(self._tombstones):
+                    rel = manifest_lib.write_tombstones(
+                        self.directory, version, self._tombstones
+                    )
+                manifest_lib.write(
+                    self.directory,
+                    self._manifest(rel, version=version, segments=segments,
+                                   shard_plan=plan),
                 )
-            manifest_lib.write(
-                self.directory,
-                self._manifest(rel, version=version, segments=segments,
-                               shard_plan=plan),
-            )
+        get_registry().counter("index.commits").inc()
         self._version = version
         self._committed = segments
         self._staged = []
@@ -642,6 +651,8 @@ class Index:
           Exception: a failed rebuild/write propagates with segments AND
             tombstones exactly as committed (no resurrection, no loss).
         """
+        tr = get_tracer()
+        t_start = tr.now() if tr.enabled else 0.0
         old = self.segments
         keep_v, keep_i = [], []
         for seg in old:
@@ -694,6 +705,13 @@ class Index:
         self._views = None
         if self.directory:
             self._gc_segments(old)
+        if tr.enabled:
+            tr.add_span(
+                "index.compact", t_start, tr.now(),
+                segments_in=len(old), rows_out=int(all_i.size),
+                version=version,
+            )
+        get_registry().counter("index.compacts").inc()
         return new_committed[0].name if new_committed else None
 
     def _gc_segments(self, old: Sequence[Segment]) -> None:

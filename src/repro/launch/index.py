@@ -78,9 +78,38 @@ def main(argv=None) -> int:
         help="cost model for the verification search's auto layout "
         "(consults the index's persisted calibration; docs/cost_model.md)",
     )
+    ap.add_argument(
+        "--trace-out", default=None,
+        help="record index-lifecycle spans (append/commit/compact) and "
+        "write them here: .jsonl = structured log, else Chrome "
+        "trace_event JSON (docs/observability.md)",
+    )
+    ap.add_argument(
+        "--trace-sample", type=float, default=1.0,
+        help="trace sample rate (lifecycle spans are process-scoped and "
+        "always kept; this only thins request-scoped spans)",
+    )
+    ap.add_argument(
+        "--metrics-out", default=None,
+        help="dump the unified metrics registry snapshot (index.appends/"
+        "commits/compacts, calibration.records, ...) as JSON here",
+    )
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
+    from repro.obs import NULL_TRACER, Tracer, tracing
+
+    tracer = (
+        Tracer(sample=args.trace_sample, seed=args.seed)
+        if args.trace_out else NULL_TRACER
+    )
+    # scoped install: main() is called in-process by benchmarks/tests, so
+    # the previous tracer must come back whatever happens below
+    with tracing(tracer):
+        return _run(args, tracer)
+
+
+def _run(args, tracer) -> int:
     from repro.core.tree import build_tree
     from repro.data.store import VirtualStore
     from repro.distributed.failure import FailureInjector
@@ -233,6 +262,19 @@ def main(argv=None) -> int:
             f"recall@1 {recall:.3f} pairs {float(res.pairs):.3g} "
             f"q_cap_overflow {int(res.q_cap_overflow)}"
         )
+
+    if args.trace_out:
+        from repro.obs import export_trace
+
+        export_trace(tracer, args.trace_out)
+        d = tracer.describe()
+        print(f"trace -> {args.trace_out} ({d['spans']} spans, "
+              f"{d['events']} events)")
+    if args.metrics_out:
+        from repro.obs import get_registry
+
+        get_registry().dump(args.metrics_out)
+        print(f"metrics registry -> {args.metrics_out}")
     return 0
 
 

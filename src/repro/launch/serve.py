@@ -141,11 +141,40 @@ def main(argv=None) -> int:
     ap.add_argument("--no-recall", action="store_true")
     ap.add_argument("--json", default=None,
                     help="dump the metrics JSON here")
+    # observability
+    ap.add_argument("--trace-out", default=None,
+                    help="record a per-request span timeline and write it "
+                         "here: .jsonl = structured event log, anything "
+                         "else = Chrome trace_event JSON (open in "
+                         "ui.perfetto.dev / chrome://tracing; "
+                         "docs/observability.md). Tracing never changes "
+                         "results — ids/dists are bit-identical on or off")
+    ap.add_argument("--trace-sample", type=float, default=1.0,
+                    help="fraction of requests traced (deterministic "
+                         "per-request hash under --seed, so the same "
+                         "subset is traced every replay)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="dump the unified metrics registry snapshot "
+                         "(serving + cache + index + calibration series) "
+                         "as JSON here")
     # legacy fixed-batch protocol
     ap.add_argument("--batches", type=int, default=None)
     ap.add_argument("--batch-images", type=int, default=256)
     args = ap.parse_args(argv)
 
+    from repro.obs import NULL_TRACER, Tracer, tracing
+
+    tracer = (
+        Tracer(sample=args.trace_sample, seed=args.seed)
+        if args.trace_out else NULL_TRACER
+    )
+    # scoped install: main() is called in-process by benchmarks/tests, so
+    # the previous tracer must come back whatever happens below
+    with tracing(tracer):
+        return _serve(args, tracer)
+
+
+def _serve(args, tracer) -> int:
     import jax
     import jax.numpy as jnp
 
@@ -479,6 +508,21 @@ def main(argv=None) -> int:
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=1)
         print(f"metrics JSON -> {args.json}")
+
+    if args.trace_out:
+        from repro.obs import export_trace, summary as trace_summary
+
+        export_trace(tracer, args.trace_out)
+        d = tracer.describe()
+        print(f"trace -> {args.trace_out} ({d['spans']} spans, "
+              f"{d['events']} events, {d['dropped']} dropped, "
+              f"sample={d['sample']})")
+        print(trace_summary(tracer, top=3))
+    if args.metrics_out:
+        from repro.obs import get_registry
+
+        get_registry().dump(args.metrics_out)
+        print(f"metrics registry -> {args.metrics_out}")
     return 0 if n_recomp == 0 else 1
 
 

@@ -1,0 +1,101 @@
+"""Cross-layer observability: per-request span timelines + a unified
+metrics registry + exportable trace artifacts.
+
+The paper's headline claim (~210 ms/image at 100M images) is a
+*distribution* property, and our serving benchmarks show the tail is
+queueing, not compute — which aggregate percentiles can describe but
+never *explain*. This package is the substrate that explains one slow
+request: where it waited, which dispatch it coalesced into, which shard
+was the straggler, and what the registry counters were doing meanwhile.
+
+Three pieces (one module each):
+
+  * :mod:`repro.obs.tracer` — ``Tracer`` records per-request span trees
+    (queue wait → admission → coalesce → cache → per-shard engine scan →
+    gather merge) on one timeline; the process-wide default is the no-op
+    ``NULL_TRACER`` (near-zero cost when disabled, deterministic
+    sampling when enabled, never perturbs results);
+  * :mod:`repro.obs.registry` — ``MetricsRegistry`` of named counters /
+    gauges / histograms with labeled series, unifying the serving,
+    cache, index-lifecycle, and calibration accounting under one
+    namespace (one dump = the whole system's health);
+  * :mod:`repro.obs.export` — JSONL structured log, Chrome
+    ``trace_event`` JSON (Perfetto / ``chrome://tracing``), and a
+    human-readable summary; ``scripts/tracereport.py`` turns either
+    trace format into a top-N-slowest breakdown.
+
+Process-wide accessors: :func:`get_tracer` / :func:`set_tracer` /
+:func:`tracing` for the tracer (default disabled), :func:`get_registry`
+/ :func:`set_registry` for the registry (always on — a registry is cheap
+enough to never gate). See docs/observability.md.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+from repro.obs.export import (  # noqa: F401
+    chrome_trace_events,
+    export_trace,
+    summary,
+    write_chrome_trace,
+    write_jsonl,
+)
+from repro.obs.registry import (  # noqa: F401
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+)
+from repro.obs.tracer import (  # noqa: F401
+    NULL_SPAN,
+    NULL_TRACER,
+    NullTracer,
+    Span,
+    Tracer,
+)
+
+_tracer = NULL_TRACER
+_registry = MetricsRegistry()
+
+
+def get_tracer():
+    """The process-wide active tracer (default: the no-op
+    :data:`NULL_TRACER` — instrumentation costs nothing until a real
+    :class:`Tracer` is installed)."""
+    return _tracer
+
+
+def set_tracer(tracer):
+    """Install ``tracer`` (or :data:`NULL_TRACER` to disable) as the
+    process-wide tracer; returns the previous one so callers can
+    restore it."""
+    global _tracer
+    prev = _tracer
+    _tracer = tracer if tracer is not None else NULL_TRACER
+    return prev
+
+
+@contextlib.contextmanager
+def tracing(tracer):
+    """Scoped :func:`set_tracer`: install for the block, restore after —
+    the always-restores form CLIs and tests use."""
+    prev = set_tracer(tracer)
+    try:
+        yield tracer
+    finally:
+        set_tracer(prev)
+
+
+def get_registry() -> MetricsRegistry:
+    """The process-wide metrics registry (always on)."""
+    return _registry
+
+
+def set_registry(registry: MetricsRegistry | None) -> MetricsRegistry:
+    """Install a registry (``None`` = a fresh empty one); returns the
+    previous one. Tests isolate through this."""
+    global _registry
+    prev = _registry
+    _registry = registry if registry is not None else MetricsRegistry()
+    return prev

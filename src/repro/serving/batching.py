@@ -44,6 +44,7 @@ from collections import deque
 
 import numpy as np
 
+from repro.obs import get_tracer
 from repro.serving.session import SearchSession
 from repro.serving.slo import SLOPolicy, class_rank
 from repro.serving.trace import Request
@@ -147,6 +148,20 @@ class MicroBatcher:
             r.priority, wait_ms=wait_ms, compute_ms=dt * 1e3,
             deadline_ms=self.policy.deadlines_ms.get(r.priority),
         )
+        tr = get_tracer()
+        if tr.enabled and tr.sampled(r.rid):
+            finish = lat_start + dt
+            req = tr.add_span(
+                "request", r.arrival, finish, trace_id=r.rid,
+                priority=r.priority, source="cache", rows=r.rows,
+                cache_hit=True,
+            )
+            tr.add_span("queue.wait", r.arrival, lat_start,
+                        trace_id=r.rid, parent=req)
+            comp = tr.add_span("compute", lat_start, finish,
+                               trace_id=r.rid, parent=req, source="cache")
+            tr.add_span("cache.lookup", lat_start, finish,
+                        trace_id=r.rid, parent=comp, hit=True)
         return True
 
     def _dispatch(self, batch: list[Request], now: float,
@@ -156,18 +171,33 @@ class MicroBatcher:
         engine Completion per request."""
         s = self.session
         m = s.metrics
+        tr = get_tracer()
         busy0 = m.engine_ms
-        if batch[0].rows > s.max_batch_rows:
-            # a single request bigger than the top bucket: session.search
-            # splits it across dispatches (it can never coalesce anyway)
-            ids, dists = s.search(batch[0].queries, n_images=1)
-            results = [(ids, dists)]
-        else:
-            results = s.serve_many([r.queries for r in batch])
-        # advance the virtual clock by the measured engine wall time
         dispatch_t = now
+        # pin the tracer's clock to virtual time for the dispatch, so the
+        # session's wall-measured spans (engine.execute, shard.scan, ...)
+        # land at the dispatch's virtual timestamp on one timeline
+        with tr.timebase(dispatch_t):
+            if batch[0].rows > s.max_batch_rows:
+                # a single request bigger than the top bucket:
+                # session.search splits it across dispatches (it can
+                # never coalesce anyway)
+                ids, dists = s.search(batch[0].queries, n_images=1)
+                results = [(ids, dists)]
+            else:
+                results = s.serve_many([r.queries for r in batch])
+        # advance the virtual clock by the measured engine wall time
         now += (m.engine_ms - busy0) * 1e-3
         compute_ms = (now - dispatch_t) * 1e3
+        rows = sum(r.rows for r in batch)
+        dsp = None
+        if tr.enabled:
+            # one engine span fanning in the batch's request spans
+            dsp = tr.add_span(
+                "engine.dispatch", dispatch_t, now,
+                n_requests=len(batch), rows=rows,
+                rids=[r.rid for r in batch],
+            )
         for r, (ids, dists) in zip(batch, results):
             m.requests += 1
             wait_ms = (dispatch_t - r.arrival) * 1e3
@@ -180,6 +210,17 @@ class MicroBatcher:
                 r.priority, wait_ms=wait_ms, compute_ms=compute_ms,
                 deadline_ms=self.policy.deadlines_ms.get(r.priority),
             )
+            if tr.enabled and tr.sampled(r.rid):
+                req = tr.add_span(
+                    "request", r.arrival, now, trace_id=r.rid,
+                    priority=r.priority, source="engine", rows=r.rows,
+                    cache_hit=False, dispatch_id=dsp.span_id,
+                )
+                tr.add_span("queue.wait", r.arrival, dispatch_t,
+                            trace_id=r.rid, parent=req)
+                tr.add_span("compute", dispatch_t, now, trace_id=r.rid,
+                            parent=req, source="engine",
+                            dispatch_id=dsp.span_id)
         return now
 
     # -- fifo: the original arrival-order coalescing -------------------------
@@ -205,6 +246,10 @@ class MicroBatcher:
                     continue
                 if len(pending) >= self.max_queue:
                     m.observe_drop(r.priority, "rejected")
+                    get_tracer().event(
+                        "admission.rejected", t=r.arrival, trace_id=r.rid,
+                        priority=r.priority, queue_depth=len(pending),
+                    )
                     done.append(Completion(
                         rid=r.rid, image_id=r.image_id, arrival=r.arrival,
                         finish=r.arrival, source="rejected",
@@ -272,6 +317,10 @@ class MicroBatcher:
                         and len(heap) >= policy.shed_depth):
                     if policy.on_overload == "shed":
                         m.observe_drop(r.priority, "shed")
+                        get_tracer().event(
+                            "admission.shed", t=r.arrival, trace_id=r.rid,
+                            priority=r.priority, queue_depth=len(heap),
+                        )
                         done.append(Completion(
                             rid=r.rid, image_id=r.image_id,
                             arrival=r.arrival, finish=r.arrival,
@@ -279,9 +328,18 @@ class MicroBatcher:
                         ))
                         continue
                     m.downgraded += 1
+                    get_tracer().event(
+                        "admission.downgraded", t=r.arrival,
+                        trace_id=r.rid, priority=r.priority,
+                        queue_depth=len(heap),
+                    )
                     deadline_t += policy.deadline_s("batch")
                 if len(heap) >= self.max_queue:
                     m.observe_drop(r.priority, "rejected")
+                    get_tracer().event(
+                        "admission.rejected", t=r.arrival, trace_id=r.rid,
+                        priority=r.priority, queue_depth=len(heap),
+                    )
                     done.append(Completion(
                         rid=r.rid, image_id=r.image_id, arrival=r.arrival,
                         finish=r.arrival, source="rejected",

@@ -76,6 +76,19 @@ class HotLeafCache:
         # index-side tables (attach_index)
         self._vecs = self._ids = None
         self._order = self._starts = None
+        # unified-registry source (held weakly there): one registry dump
+        # carries the cache counters next to the serving/index series
+        from repro.obs import get_registry
+
+        get_registry().register_source(
+            f"hot_leaf_cache@{id(self):x}", self,
+            HotLeafCache.registry_series,
+        )
+
+    def registry_series(self) -> dict:
+        """The registry view of :meth:`stats` under ``cache.*`` names."""
+        s = self.stats()
+        return {f"cache.{k}": v for k, v in s.items()}
 
     # -- index attachment ---------------------------------------------------
     def attach_index(self, vecs: np.ndarray, ids: np.ndarray,

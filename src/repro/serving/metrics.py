@@ -9,6 +9,20 @@ also splits into wait-ms (arrival -> dispatch) vs compute-ms (the engine /
 cache work itself), and everything is kept per priority class so SLO
 attainment can be reported per tenant. All accounting is plain
 Python/numpy — nothing here touches a device.
+
+Every :class:`ServingMetrics` also registers itself as a *source* in the
+process-wide :class:`~repro.obs.registry.MetricsRegistry` (held weakly —
+a dead session's series vanish), so one registry dump carries the serving
+counters next to the cache/index/calibration ones under the unified
+naming scheme (docs/observability.md). ``to_dict()`` keeps its historical
+shape byte-for-byte: the registry view is additive, never a rewrite.
+
+Memory: collectors are *exact* by default (every sample kept — the
+historical behavior, and what the percentile-asserting tests pin).
+For long replays pass ``max_samples=N``: percentiles cut over to a
+deterministic reservoir (Algorithm R, seeded) of N samples while count /
+mean / max / histogram buckets stay exact — O(N) memory however many
+requests complete.
 """
 
 from __future__ import annotations
@@ -17,35 +31,93 @@ import dataclasses
 
 import numpy as np
 
+from repro.obs import get_registry
+
+# histogram bucket upper bounds for exported latency distributions (ms)
+HIST_BOUNDS_MS = (1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0, 200.0, 500.0,
+                  1000.0, 2000.0, 5000.0)
+
 
 class LatencyStats:
-    """Streaming latency collector with exact percentiles at report time."""
+    """Streaming latency collector.
 
-    def __init__(self):
+    Args:
+      max_samples: ``None`` (default) keeps every sample — report-time
+        percentiles are exact. With ``max_samples=N``, a deterministic
+        reservoir (Algorithm R under ``seed``) bounds memory at N
+        samples; percentiles become reservoir estimates while ``count``,
+        ``mean_ms``, ``max_ms``, and :meth:`histogram` buckets stay
+        exact.
+      seed: reservoir rng seed (same seed + same add sequence = same
+        reservoir, so bounded replays stay reproducible).
+
+    Raises:
+      ValueError: a non-positive ``max_samples``.
+    """
+
+    def __init__(self, max_samples: int | None = None, *, seed: int = 0):
+        if max_samples is not None and max_samples < 1:
+            raise ValueError(f"max_samples={max_samples} must be >= 1")
         self._ms: list[float] = []
+        self.max_samples = max_samples
+        self._rng = (np.random.default_rng(seed)
+                     if max_samples is not None else None)
+        # exact running stats (bounded mode keeps these exact even when
+        # the sample reservoir is lossy)
+        self._count = 0
+        self._total = 0.0
+        self._max = float("-inf")
+        self._hist = [0] * (len(HIST_BOUNDS_MS) + 1)  # + overflow bucket
 
     def add(self, ms: float) -> None:
-        self._ms.append(float(ms))
+        ms = float(ms)
+        self._count += 1
+        self._total += ms
+        self._max = max(self._max, ms)
+        i = 0
+        for b in HIST_BOUNDS_MS:
+            if ms <= b:
+                break
+            i += 1
+        self._hist[i] += 1
+        if self.max_samples is None or len(self._ms) < self.max_samples:
+            self._ms.append(ms)
+        else:
+            # Algorithm R: keep each of the n samples seen so far with
+            # probability max_samples/n
+            j = int(self._rng.integers(0, self._count))
+            if j < self.max_samples:
+                self._ms[j] = ms
 
     def __len__(self) -> int:
-        return len(self._ms)
+        """Samples *observed* (not retained — bounded mode retains
+        ``max_samples``)."""
+        return self._count
 
     def percentile(self, p: float) -> float:
         if not self._ms:
             return float("nan")
         return float(np.percentile(np.asarray(self._ms), p))
 
+    def histogram(self) -> dict:
+        """Exact fixed-bucket counts for export (registry / artifacts):
+        ``{"bounds_ms": [...], "counts": [...]}`` where ``counts`` has
+        one overflow bucket past the last bound. Exact in both modes —
+        this is the bounded-memory distribution long replays export."""
+        return {"bounds_ms": list(HIST_BOUNDS_MS),
+                "counts": list(self._hist)}
+
     def summary(self) -> dict:
-        if not self._ms:
+        if not self._count:
             return {"count": 0}
         a = np.asarray(self._ms)
         return {
-            "count": int(a.size),
-            "mean_ms": float(a.mean()),
+            "count": self._count,
+            "mean_ms": self._total / self._count,
             "p50_ms": float(np.percentile(a, 50)),
             "p95_ms": float(np.percentile(a, 95)),
             "p99_ms": float(np.percentile(a, 99)),
-            "max_ms": float(a.max()),
+            "max_ms": self._max,
         }
 
 
@@ -61,6 +133,13 @@ class ClassMetrics:
     shed: int = 0  # admission-control drops
     rejected: int = 0  # hard max_queue drops
     deadline_ms: float | None = None
+
+    @classmethod
+    def make(cls, max_samples: int | None = None) -> "ClassMetrics":
+        """A ClassMetrics whose collectors share the owner's bound."""
+        return cls(latency=LatencyStats(max_samples),
+                   wait=LatencyStats(max_samples),
+                   compute=LatencyStats(max_samples))
 
     @property
     def slo_attainment(self) -> float:
@@ -88,7 +167,12 @@ class ClassMetrics:
 
 @dataclasses.dataclass
 class ServingMetrics:
-    """Counters + distributions for one serving session/replay."""
+    """Counters + distributions for one serving session/replay.
+
+    ``max_samples`` bounds every latency collector and the queue-depth
+    sample list for long replays (exact when ``None``, the default — see
+    :class:`LatencyStats`).
+    """
 
     latency: LatencyStats = dataclasses.field(default_factory=LatencyStats)
     wait: LatencyStats = dataclasses.field(default_factory=LatencyStats)
@@ -107,14 +191,38 @@ class ServingMetrics:
     recompiles_after_warmup: int = 0  # steady-state recompiles (want: 0)
     queue_depth: list = dataclasses.field(default_factory=list)  # samples
     per_class: dict = dataclasses.field(default_factory=dict)
+    max_samples: int | None = None  # bound per-collector memory (None=exact)
+
+    def __post_init__(self):
+        if self.max_samples is not None:
+            self.latency = LatencyStats(self.max_samples)
+            self.wait = LatencyStats(self.max_samples)
+            self.compute = LatencyStats(self.max_samples)
+            self._qd_rng = np.random.default_rng(1)
+        self._qd_seen = len(self.queue_depth)
+        # unified-registry source: held weakly, so a dropped session's
+        # series disappear from later snapshots instead of leaking
+        get_registry().register_source(
+            f"serving_metrics@{id(self):x}", self,
+            ServingMetrics.registry_series,
+        )
 
     def observe_queue_depth(self, depth: int) -> None:
-        self.queue_depth.append(int(depth))
+        self._qd_seen += 1
+        if (self.max_samples is None
+                or len(self.queue_depth) < self.max_samples):
+            self.queue_depth.append(int(depth))
+        else:
+            j = int(self._qd_rng.integers(0, self._qd_seen))
+            if j < self.max_samples:
+                self.queue_depth[j] = int(depth)
 
     def _class(self, priority: str) -> ClassMetrics:
         cm = self.per_class.get(priority)
         if cm is None:
-            cm = self.per_class[priority] = ClassMetrics()
+            cm = self.per_class[priority] = ClassMetrics.make(
+                self.max_samples
+            )
         return cm
 
     def observe_latency(self, priority: str, *, wait_ms: float,
@@ -159,17 +267,53 @@ class ServingMetrics:
         return self.engine_ms / self.engine_images
 
     def queue_summary(self) -> dict:
-        """Queue-depth distribution at dispatch time (p50/p95/max/mean)."""
+        """Queue-depth distribution at dispatch time (p50/p95/max/mean).
+        ``count`` is depths *observed* (bounded mode retains at most
+        ``max_samples`` of them for the percentiles)."""
         if not self.queue_depth:
             return {"count": 0, "mean": 0.0, "p50": 0, "p95": 0, "max": 0}
         qd = np.asarray(self.queue_depth)
         return {
-            "count": int(qd.size),
+            "count": self._qd_seen,
             "mean": float(qd.mean()),
             "p50": int(np.percentile(qd, 50)),
             "p95": int(np.percentile(qd, 95)),
             "max": int(qd.max()),
         }
+
+    def registry_series(self) -> dict:
+        """The unified-registry view: flat ``{series: value}`` under the
+        ``serving.*`` namespace (labeled per class), histograms from the
+        exact bucket counts. Additive — ``to_dict()`` is unchanged."""
+        q = self.queue_summary()
+        out = {
+            "serving.requests": self.requests,
+            "serving.rejected": self.rejected,
+            "serving.shed": self.shed,
+            "serving.downgraded": self.downgraded,
+            "serving.query_rows": self.query_rows,
+            "serving.engine.batches": self.engine_batches,
+            "serving.engine.ms": self.engine_ms,
+            "serving.engine.images": self.engine_images,
+            "serving.cache.images": self.cache_images,
+            "serving.q_cap_overflow": self.q_cap_overflow,
+            "serving.warmup_ms": self.warmup_ms,
+            "serving.recompiles_after_warmup": self.recompiles_after_warmup,
+            "serving.queue_depth.mean": q["mean"],
+            "serving.queue_depth.p95": q["p95"],
+            "serving.queue_depth.max": q["max"],
+            "serving.latency.hist": self.latency.histogram(),
+            "serving.wait.hist": self.wait.histogram(),
+            "serving.compute.hist": self.compute.histogram(),
+        }
+        for name, cm in sorted(self.per_class.items()):
+            lbl = f"{{class={name}}}"
+            out[f"serving.class.completed{lbl}"] = cm.completed
+            out[f"serving.class.shed{lbl}"] = cm.shed
+            out[f"serving.class.rejected{lbl}"] = cm.rejected
+            out[f"serving.class.attained{lbl}"] = cm.attained
+            out[f"serving.class.latency.hist{lbl}"] = cm.latency.histogram()
+        return out
 
     def to_dict(self) -> dict:
         q = self.queue_summary()

@@ -53,8 +53,10 @@ from repro.core.engine.executors import SearchResult, pad_lookup
 from repro.core.index_build import DistributedIndex
 from repro.core.lookup import build_lookup_bucketed
 from repro.core.search import lookup_q_total
+from repro.core.engine.costmodel import plan_signature, signature_key
 from repro.core.tree import VocabTree
 from repro.distributed.meshutil import data_axis_size, local_mesh
+from repro.obs import get_tracer
 from repro.serving.cache import HotLeafCache
 from repro.serving.metrics import ServingMetrics
 
@@ -467,12 +469,15 @@ class SearchSession:
         requests then only ever replay warmed programs. Returns the wall
         milliseconds spent compiling (also folded into the metrics)."""
         d = self.index.dim
-        t0 = time.perf_counter()
-        for rt in self._runtimes.values():
-            dummy = jnp.zeros((rt.bucket, d), jnp.float32)
-            res, leaves = rt.fn(self._segments, self.tree, dummy, np.int32(0))
-            jax.block_until_ready((res.ids, leaves))
-        dt_ms = (time.perf_counter() - t0) * 1e3
+        with get_tracer().span("session.warmup", buckets=len(self.buckets)):
+            t0 = time.perf_counter()
+            for rt in self._runtimes.values():
+                dummy = jnp.zeros((rt.bucket, d), jnp.float32)
+                res, leaves = rt.fn(
+                    self._segments, self.tree, dummy, np.int32(0)
+                )
+                jax.block_until_ready((res.ids, leaves))
+            dt_ms = (time.perf_counter() - t0) * 1e3
         self.metrics.warmup_ms += dt_ms
         self._warmed_compiles = self.recompiles()
         return dt_ms
@@ -509,6 +514,15 @@ class SearchSession:
         ids = np.asarray(res.ids[:n])
         dists = np.asarray(res.dists[:n])
         leaves_np = np.asarray(leaves[:n])
+        tr = get_tracer()
+        if tr.enabled:
+            t1 = tr.now()
+            tr.add_span(
+                "engine.execute", t1 - dt, t1, rows=n, bucket=rt.bucket,
+                layout=rt.plan.layout, segments=len(rt.plans),
+                plan=signature_key(plan_signature(rt.plan)),
+                cost_model=self.active_cost_model(),
+            )
         self.metrics.engine_batches += 1
         self.metrics.engine_ms += dt * 1e3
         self.metrics.query_rows += n

@@ -47,12 +47,14 @@ from repro.core.engine import (
     snap_to_bucket,
 )
 from repro.distributed.meshutil import data_axis_size
+from repro.core.engine.costmodel import plan_signature, signature_key
 from repro.index.sharding import (
     ShardedIndex,
     ShardPlan,
     fitted_shard_scales,
     gather_merge,
 )
+from repro.obs import get_tracer
 from repro.serving.session import (
     SearchSession,
     _jit_cache_size,
@@ -237,16 +239,18 @@ class ShardedSearchSession(SearchSession):
         """Compile every shard's every bucket rung once (dummy batch);
         steady state then replays warmed programs only. Returns wall ms."""
         d = self.index.dim
-        t0 = time.perf_counter()
-        for rtb in self._runtimes.values():
-            dummy = jnp.zeros((rtb.bucket, d), jnp.float32)
-            outs = [
-                rt.fn(views, self.tree, dummy, np.int32(0))
-                for _, views, rt in rtb.parts
-            ]
-            for res, leaves, _slots in outs:
-                jax.block_until_ready((res.ids, leaves))
-        dt_ms = (time.perf_counter() - t0) * 1e3
+        with get_tracer().span("session.warmup", buckets=len(self.buckets),
+                               shards=self.n_shards):
+            t0 = time.perf_counter()
+            for rtb in self._runtimes.values():
+                dummy = jnp.zeros((rtb.bucket, d), jnp.float32)
+                outs = [
+                    rt.fn(views, self.tree, dummy, np.int32(0))
+                    for _, views, rt in rtb.parts
+                ]
+                for res, leaves, _slots in outs:
+                    jax.block_until_ready((res.ids, leaves))
+            dt_ms = (time.perf_counter() - t0) * 1e3
         self.metrics.warmup_ms += dt_ms
         self._warmed_compiles = self.recompiles()
         return dt_ms
@@ -270,25 +274,56 @@ class ShardedSearchSession(SearchSession):
         buf[:n] = queries
         jbuf = jnp.asarray(buf)
         nv = np.int32(n)
+        tr = get_tracer()
         t0 = time.perf_counter()
-        # dispatch every shard first (async), block once for the gather —
-        # on disjoint device groups the scans overlap; on one device XLA
-        # runs them back to back with identical numerics
-        outs = [rt.fn(views, self.tree, jbuf, nv) for _, views, rt in rtb.parts]
-        for res, leaves, slots in outs:
-            jax.block_until_ready((res.ids, res.dists, slots, leaves))
+        if tr.enabled:
+            # per-shard spans need per-shard completion times, so block
+            # each scatter leg in turn. The programs, inputs, and merge
+            # are untouched — numerics (ids/dists) stay bit-identical to
+            # the async path; only wall attribution differs.
+            outs = []
+            for si, views, rt in rtb.parts:
+                with tr.span(
+                    "shard.scan", shard=si, bucket=rtb.bucket,
+                    rows=sum(int(v.rows) for v in views),
+                    segments=len(views),
+                ):
+                    out = rt.fn(views, self.tree, jbuf, nv)
+                    jax.block_until_ready(
+                        (out[0].ids, out[0].dists, out[2], out[1])
+                    )
+                outs.append(out)
+        else:
+            # dispatch every shard first (async), block once for the
+            # gather — on disjoint device groups the scans overlap; on one
+            # device XLA runs them back to back with identical numerics
+            outs = [
+                rt.fn(views, self.tree, jbuf, nv)
+                for _, views, rt in rtb.parts
+            ]
+            for res, leaves, slots in outs:
+                jax.block_until_ready((res.ids, res.dists, slots, leaves))
         dt = time.perf_counter() - t0
-        ids, dists = gather_merge(
-            [
-                (
-                    np.asarray(res.ids[:n]),
-                    np.asarray(res.dists[:n]),
-                    np.asarray(slots[:n]),
-                )
-                for res, _leaves, slots in outs
-            ],
-            self.k,
-        )
+        if tr.enabled:
+            t1 = tr.now()
+            tr.add_span(
+                "engine.execute", t1 - dt, t1, rows=n, bucket=rtb.bucket,
+                layout=rtb.plan.layout, shards=len(rtb.parts),
+                plan=signature_key(plan_signature(rtb.plan)),
+                cost_model=self.active_cost_model(),
+            )
+        with tr.span("gather.merge", shards=len(rtb.parts), rows=n):
+            ids, dists = gather_merge(
+                [
+                    (
+                        np.asarray(res.ids[:n]),
+                        np.asarray(res.dists[:n]),
+                        np.asarray(slots[:n]),
+                    )
+                    for res, _leaves, slots in outs
+                ],
+                self.k,
+            )
         # every shard routes the same queries through the same tree; shard
         # 0's probe-leaf matrix is THE routing (the broadcast analog)
         leaves_np = np.asarray(outs[0][1][:n])
