@@ -45,6 +45,22 @@ def bench_header(shard_plan=None, **extra) -> dict:
     return h
 
 
+def layout_bytes(index) -> dict:
+    """Per-layout resident bytes/row for artifact headers: the dense
+    layouts hold f32 rows; ``scan_codes`` holds PQ codes (plus the shared
+    codebook, amortised across the whole index). ``compression_ratio`` is
+    dense/codes — 1.0 when the index carries no codes artifact."""
+    raw = 4 * int(index.dim)
+    per = {"point_major": raw, "query_routed": raw}
+    cs = index.codes_stats() if hasattr(index, "codes_stats") else None
+    if cs:
+        per["scan_codes"] = cs["bytes_per_row"]
+        return {"bytes_per_row": per,
+                "compression_ratio": cs["compression_ratio"],
+                "codebook_bytes": cs["codebook_bytes"]}
+    return {"bytes_per_row": per, "compression_ratio": 1.0}
+
+
 def timeit(fn, *args, warmup: int = 1, iters: int = 3):
     """Median wall-clock seconds of fn(*args) with block_until_ready."""
     for _ in range(warmup):

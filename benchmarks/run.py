@@ -40,8 +40,11 @@ def smoke() -> int:
     append ×2 → search → compact → search, identical results), the
     cost-model calibration round-trip gate, the sharded bit-identity
     gate, the SLO scheduling gate (fifo == edf results, EDF interactive
-    p95 < batch p95), and the observability gate (traced == untraced
-    bit-identity, valid Chrome trace + registry dump + tracereport) —
+    p95 < batch p95), the compressed-codes gate (train → commit →
+    reopen → auto plans scan_codes → ADC + rerank recall floor at ≥8x
+    fewer resident bytes), and the observability gate (traced ==
+    untraced bit-identity, valid Chrome trace + registry dump +
+    tracereport) —
     the per-PR gate wired into scripts/smoke.sh. Fails loudly,
     returns rc."""
     from benchmarks import indexing as indexing_bench
@@ -80,6 +83,11 @@ def smoke() -> int:
     print("# smoke: SLO scheduling (fifo == edf results, EDF interactive "
           "p95 < batch p95)", file=sys.stderr)
     rc = serving_bench.slo_smoke()
+    if rc != 0:
+        return rc
+    print("# smoke: compressed codes (train -> commit -> reopen -> auto "
+          "plans scan_codes -> ADC + rerank recall floor)", file=sys.stderr)
+    rc = serving_bench.codes_smoke()
     if rc != 0:
         return rc
     print("# smoke: observability (traced == untraced bit-identity, "

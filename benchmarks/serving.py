@@ -27,6 +27,7 @@ from benchmarks.common import (
     Corpus,
     bench_header,
     fit_payload,
+    layout_bytes,
     row,
     write_artifact,
 )
@@ -164,7 +165,8 @@ def run(*, trace_out=None, trace_sample=1.0):
         f"trace={trace_paths['trace']}",
     ))
     payload["header"] = bench_header(
-        cost_model=session.active_cost_model()
+        cost_model=session.active_cost_model(),
+        layout_bytes=layout_bytes(session.index),
     )
     payload["plan_observations"] = calibration.snapshot()
     path = write_artifact(os.path.join(out_dir, "serving.json"), payload)
@@ -824,6 +826,73 @@ def obs_smoke() -> int:
     return 0
 
 
+def codes_smoke() -> int:
+    """Compressed-codes gate: train → encode → commit → ``Index.open``
+    round-trips the codebook → ``plan(model="auto")`` picks the
+    ``scan_codes`` tier at the serving shape → the ADC scan + exact
+    rerank session meets the recall floor against a scan-exact reference
+    at the same probe width — all at a ≥8x resident-bytes reduction
+    (docs/compressed_codes.md)."""
+    import tempfile
+
+    import numpy as np
+
+    from repro.index import Index
+    from repro.serving import SearchSession
+
+    c = Corpus(rows=20_000, dim=32, fanouts=(16, 16))
+    k, probes = 10, 8
+    with tempfile.TemporaryDirectory() as d:
+        idx = Index.create(c.tree, d, mesh=c.mesh)
+        idx.append(c.vecs_np[:12_000])
+        idx.append(c.vecs_np[12_000:])
+        idx.enable_codes(m=8, bits=8)
+        idx.commit()
+        reopened = Index.open(d, mesh=c.mesh)
+        cs = reopened.codes_stats()
+        assert cs is not None, "codes artifact did not survive the commit"
+        assert cs["compression_ratio"] >= 8.0, cs
+        q, _ = c.queries(256)
+        q = np.asarray(q)
+        # scan-exact reference over the same index at the same probes —
+        # the recall floor is codes-vs-exact, not codes-vs-ground-truth
+        ref_ids = np.asarray(
+            reopened.search(q, k=k, probes=probes,
+                            layout="point_major").ids
+        )
+        session = SearchSession(reopened, mesh=c.mesh, k=k, probes=probes,
+                                buckets=(256,))
+        assert session.serving_layout == "scan_codes", (
+            f"plan(auto) served {session.serving_layout} at a shape the "
+            "codes tier should win"
+        )
+        session.warmup()
+        ids, dists = session.search(q)
+        assert session.steady_state_recompiles() == 0
+        # the warmed session and the index facade run the same tier —
+        # one ADC scan + exact rerank — and must agree bit for bit
+        res = reopened.search(q, k=k, probes=probes, layout="scan_codes")
+        np.testing.assert_array_equal(ids, np.asarray(res.ids))
+        np.testing.assert_array_equal(dists, np.asarray(res.dists))
+        recall = float(np.mean([
+            len(set(ids[i][ids[i] >= 0]) & set(ref_ids[i][ref_ids[i] >= 0]))
+            / k
+            for i in range(len(q))
+        ]))
+        assert recall >= 0.9, (
+            f"recall@{k}(scan_codes vs scan-exact) {recall:.3f} < 0.9"
+        )
+        rr = session.plan_summary()[0]["rerank"]
+    print(
+        f"# codes smoke: {cs['compression_ratio']:.0f}x resident bytes "
+        f"({cs['bytes_per_row']}B/row vs {cs['raw_bytes_per_row']}B), "
+        f"plan(auto) -> scan_codes, rerank={rr}, "
+        f"recall@{k} {recall:.3f} vs scan-exact, session == facade, "
+        f"recompiles 0"
+    )
+    return 0
+
+
 def main(argv=None) -> int:
     import argparse
 
@@ -842,6 +911,10 @@ def main(argv=None) -> int:
     ap.add_argument("--slo-smoke", action="store_true",
                     help="run the SLO scheduling gate (fifo == edf "
                          "results, EDF interactive p95 < batch p95)")
+    ap.add_argument("--codes-smoke", action="store_true",
+                    help="run the compressed-codes gate (train -> commit "
+                         "-> reopen -> auto plans scan_codes -> ADC + "
+                         "rerank recall floor at >=8x fewer bytes)")
     ap.add_argument("--slo", action="store_true",
                     help="replay the multi-tenant trace under fifo and "
                          "edf, report per-class SLO attainment and the "
@@ -889,6 +962,8 @@ def main(argv=None) -> int:
         return calibration_smoke()
     if args.slo_smoke:
         return slo_smoke()
+    if args.codes_smoke:
+        return codes_smoke()
     print("name,us_per_call,derived")
     if args.slo:
         rows = slo_run(n_requests=args.requests, rate=args.rate,

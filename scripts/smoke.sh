@@ -23,10 +23,13 @@ python -m pytest -x -q
 # bit-identical to unsharded; standalone: benchmarks.serving --sharded-smoke)
 # and the SLO scheduling gate (same trace under fifo and edf returns
 # bit-identical results, EDF interactive p95 < batch p95; standalone:
-# benchmarks.serving --slo-smoke), and the observability gate (traced ==
+# benchmarks.serving --slo-smoke), the compressed-codes gate (train ->
+# commit -> reopen -> plan(auto) picks scan_codes -> ADC scan + exact
+# rerank meets the recall floor at >=8x fewer resident bytes; standalone:
+# benchmarks.serving --codes-smoke), and the observability gate (traced ==
 # untraced bit-identity at 2 shards, valid Chrome trace, registry dump,
 # tracereport; standalone: benchmarks.serving --obs-smoke)
-echo "== serve smoke (both layouts, --probes 2) + lifecycle + session + calibration + shard + SLO + obs gates =="
+echo "== serve smoke (both layouts, --probes 2) + lifecycle + session + calibration + shard + SLO + codes + obs gates =="
 python -m benchmarks.run --smoke
 
 echo "== serving CLI smoke (zipf trace, hot-leaf cache, recompile gate) =="

@@ -1,0 +1,5 @@
+"""Compressed-codes tier: PQ encoder + exact rerank
+(docs/compressed_codes.md)."""
+
+from repro.codes.pq import CODES_FORMAT, ProductQuantizer  # noqa: F401
+from repro.codes.rerank import rerank_exact  # noqa: F401

@@ -1,0 +1,67 @@
+"""Exact rerank over codes-scan survivors (docs/compressed_codes.md).
+
+The ADC scan returns approximate per-query candidate ids; this stage
+fetches the survivors' raw rows (one batched ``read_rows`` call) and
+re-scores them with exact squared L2, so the final (ids, dists) ordering
+is exact over the candidate set. The computation is canonical and pure
+numpy — ascending (distance, id), f32 accumulation — which is what the
+bit-identity tests (and the sharded serving merge) rely on: the same
+candidate set always reranks to the same bytes.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.sentinels import INVALID_ID
+
+
+def rerank_exact(read_rows, queries, cand_ids, k: int):
+    """Exact-L2 rerank of per-query candidate ids.
+
+    Args:
+      read_rows: ``ids (n,) -> rows (n, dim)`` raw-row fetch, called once
+        with the sorted union of all surviving ids (``Index.read_rows`` /
+        ``DescriptorStore.read_rows``).
+      queries: ``(Q, dim)`` original full-precision queries.
+      cand_ids: ``(Q, R)`` candidate ids from the codes scan,
+        ``INVALID_ID`` (-1) where a slot is empty. Per-row duplicates are
+        dropped (keeps the rerank well-defined under any upstream merge).
+      k: neighbours to keep per query.
+
+    Returns:
+      ``(ids (Q, k) int32, dists (Q, k) float32)`` — exact squared L2,
+      ascending, ties broken by ascending id; ``-1``/``inf`` padding where
+      fewer than ``k`` valid candidates survived.
+    """
+    q = np.asarray(queries, np.float32)
+    cand = np.asarray(cand_ids, np.int64)
+    if cand.ndim != 2:
+        raise ValueError(f"cand_ids must be (Q, R), got {cand.shape}")
+    n_q, _ = cand.shape
+    # canonical per-row order: ascending id (so distance ties break by id),
+    # duplicates masked out
+    cand = np.sort(cand, axis=1)
+    dup = np.zeros_like(cand, dtype=bool)
+    dup[:, 1:] = cand[:, 1:] == cand[:, :-1]
+    valid = (cand >= 0) & ~dup
+    uniq = np.unique(cand[valid])
+    if uniq.size:
+        vecs = np.asarray(read_rows(uniq), np.float32)
+        pos = np.searchsorted(uniq, np.where(valid, cand, uniq[0]))
+        d = ((vecs[pos] - q[:, None, :]) ** 2).sum(-1, dtype=np.float32)
+        d = np.where(valid, d, np.float32(np.inf))
+    else:
+        d = np.full(cand.shape, np.inf, np.float32)
+    order = np.argsort(d, axis=1, kind="stable")[:, :k]
+    out_d = np.take_along_axis(d, order, axis=1)
+    out_i = np.take_along_axis(cand, order, axis=1)
+    out_i = np.where(np.isfinite(out_d), out_i, INVALID_ID).astype(np.int32)
+    out_d = out_d.astype(np.float32)
+    if out_d.shape[1] < k:
+        pad = k - out_d.shape[1]
+        out_d = np.pad(out_d, ((0, 0), (0, pad)),
+                       constant_values=np.float32(np.inf))
+        out_i = np.pad(out_i, ((0, 0), (0, pad)),
+                       constant_values=np.int32(INVALID_ID))
+    return out_i, out_d

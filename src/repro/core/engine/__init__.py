@@ -39,6 +39,7 @@ from repro.core.engine.plan import (  # noqa: F401
     LAYOUTS,
     SearchPlan,
     bucket_ladder,
+    default_rerank,
     largest_divisor_leq,
     plan,
     snap_to_bucket,

@@ -37,7 +37,12 @@ import dataclasses
 
 import numpy as np
 
-LAYOUTS = ("point_major", "query_routed")
+LAYOUTS = ("point_major", "query_routed", "scan_codes")
+
+#: the full-precision scan layouts — what calibration readiness is gated
+#: on (every index can run these; "scan_codes" needs a codes artifact and
+#: only enters the candidate set when one exists)
+DENSE_LAYOUTS = ("point_major", "query_routed")
 
 #: every field of a plan that shapes its cost (and its signature key)
 SIGNATURE_FIELDS = (
@@ -78,12 +83,15 @@ class PlanShapes:
       n_queries: query rows per batch, pre-probe-expansion.
       n_shards: device row-shards the scan splits over.
       n_leaves: vocabulary-tree leaf count.
+      dim: descriptor dimension (0 = unknown, legacy records) — what the
+        compressed-codes pricing compares code bytes/row against.
     """
 
     rows: int
     n_queries: int
     n_shards: int = 1
     n_leaves: int = 1
+    dim: int = 0
 
     def to_json(self) -> dict:
         return {
@@ -91,6 +99,7 @@ class PlanShapes:
             "n_queries": int(self.n_queries),
             "n_shards": int(self.n_shards),
             "n_leaves": int(self.n_leaves),
+            "dim": int(self.dim),
         }
 
     @classmethod
@@ -100,6 +109,7 @@ class PlanShapes:
             n_queries=int(d["n_queries"]),
             n_shards=int(d.get("n_shards", 1)),
             n_leaves=int(d.get("n_leaves", 1)),
+            dim=int(d.get("dim", 0)),
         )
 
 
@@ -380,6 +390,25 @@ class HeuristicModel(CostModel):
 
         shard_rows = max(1, shapes.rows // max(1, shapes.n_shards))
         q_rows = max(1, shapes.n_queries * plan.probes)
+        if plan.layout == "scan_codes":
+            # codes-scan pairs are m/(4*dim) the cost of full-precision
+            # pairs (uint8 codes vs f32 rows); the LUT build
+            # (q_rows * C * dim mults) and the exact rerank over
+            # ``rerank`` survivors are what a small corpus can't amortise
+            # — so scan-exact wins small shapes and codes wins large ones
+            dim = shapes.dim or 64
+            rerank = plan.rerank or plan.k
+            ratio = (plan.code_m or dim) / (4.0 * dim)
+            n_waves = shard_rows // plan.block_rows
+            tile_pairs = shard_rows * plan.q_cap * ratio
+            carry = n_waves * q_rows * rerank  # running-best table per wave
+            # LUT build + exact rerank are per *query*, not per probe-
+            # expanded scan row: the LUT is leaf-independent and the
+            # rerank runs once over the post-merge candidate list
+            nq = max(1, shapes.n_queries)
+            lut = nq * float(1 << (plan.code_bits or 8)) * dim
+            fetch = nq * rerank * 2.0  # row fetch + exact re-score
+            return float(tile_pairs + carry + lut + fetch)
         if plan.layout == "point_major":
             n_waves = shard_rows // plan.block_rows
             tile_pairs = shard_rows * plan.q_cap
@@ -408,10 +437,10 @@ class ObservedModel(CostModel):
         self.store = store
 
     def ready(self) -> bool:
-        """Both layouts measured — the minimum for this model to ever
-        rank an auto candidate pair (``describe()`` relies on this;
+        """Both dense layouts measured — the minimum for this model to
+        ever rank an auto candidate pair (``describe()`` relies on this;
         per-candidate signatures are still checked at decision time)."""
-        return set(LAYOUTS) <= self.store.layouts()
+        return set(DENSE_LAYOUTS) <= self.store.layouts()
 
     def predict_ms(self, plan, shapes: PlanShapes) -> float | None:
         return self.store.mean_ms(plan, shapes)
@@ -455,7 +484,8 @@ class FittedModel(CostModel):
 
     @staticmethod
     def _plan_tile(layout: str, block_rows, q_tile) -> int:
-        return int(block_rows if layout == "point_major" else q_tile) or 1
+        tile = q_tile if layout == "query_routed" else block_rows
+        return int(tile) if tile else 1
 
     def _fit(self) -> None:
         # plan() builds a FittedModel per call (Index.search: per segment)
@@ -552,10 +582,10 @@ class ModelChain(CostModel):
         that plan's signature/shapes — :meth:`decide` returns the exact
         per-decision answer."""
         for m in self.models:
-            # a fitted model that cannot price every layout cannot rank
-            # an auto candidate pair — don't claim it decides
+            # a fitted model that cannot price every dense layout cannot
+            # rank an auto candidate pair — don't claim it decides
             if isinstance(m, FittedModel):
-                if not (m.ready("point_major") and m.ready("query_routed")):
+                if not all(m.ready(layout) for layout in DENSE_LAYOUTS):
                     continue
             elif not m.ready():
                 continue
@@ -666,7 +696,7 @@ def scale_slab_budget(plan, scale: float, *, n_queries: int,
 
     if scale <= 1.0:
         return plan
-    if plan.layout == "point_major":
+    if plan.layout != "query_routed":  # point_major and scan_codes slab q_cap
         grown = min(
             round_up(int(plan.q_cap * scale), 8),
             max(plan.q_cap, n_queries * plan.probes),

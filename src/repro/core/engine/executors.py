@@ -316,6 +316,137 @@ def _query_routed_fn(mesh, plan: SearchPlan, *, n_leaves, shard_rows, q_total,
     return pipeline
 
 
+def _scan_codes_fn(mesh, plan: SearchPlan, *, n_leaves, shard_rows, q_total,
+                   axes):
+    """Compressed-tier scan (docs/compressed_codes.md): a point-major wave
+    sweep over uint8 PQ code slabs under the asymmetric distance. Each
+    wave folds the adcscan kernel's candidates into a running
+    ``(q_total, rerank)`` table; the emitted ``SearchResult`` carries
+    *approximate* ADC distances over ``plan.rerank`` survivors per query —
+    callers fetch those rows and rerank exactly
+    (:func:`repro.codes.rerank_exact`)."""
+    from repro.kernels.adcscan import ops as adc_ops
+
+    block_rows, q_cap = plan.block_rows, plan.q_cap
+    r, m = plan.rerank, plan.code_m
+    n_centers = 1 << plan.code_bits
+    n_shards = math.prod(mesh.shape[a] for a in axes)
+    if shard_rows % block_rows != 0:
+        raise ValueError(f"{shard_rows=} not divisible by {block_rows=}")
+    if r > block_rows:
+        raise ValueError(f"rerank {r} must be <= {block_rows=}")
+    if q_cap > q_total:
+        raise ValueError(f"{q_cap=} must be <= padded query count {q_total=}")
+    n_waves = shard_rows // block_rows
+    from repro.core.sentinels import PAD_TILE_POINT_LEAF
+
+    def shard_fn(codes, leaves, ids, lk_lut, lk_leaves, lk_offsets):
+        codes, leaves, ids = codes[0], leaves[0], ids[0]
+
+        def wave(i, c: _Carry) -> _Carry:
+            start = i * block_rows
+            pc = jax.lax.dynamic_slice(codes, (start, 0), (block_rows, m))
+            plf = jax.lax.dynamic_slice(leaves, (start,), (block_rows,))
+            pid = jax.lax.dynamic_slice(ids, (start,), (block_rows,))
+            slab = tilescan.leaf_slab(
+                lk_offsets, plf[0], n_entries=n_leaves, total_rows=q_total,
+                cap=q_cap,
+            )
+            lut = jax.lax.dynamic_slice(
+                lk_lut, (slab.start, 0), (q_cap, m * n_centers)
+            ).reshape(q_cap, m, n_centers)
+            qlf = jax.lax.dynamic_slice(lk_leaves, (slab.start,), (q_cap,))
+            # tombstoned rows keep their leaf for slab location but must
+            # never match: codes can't carry the 1e15 vec mask the dense
+            # scan uses, so mask the *match* leaves by id validity
+            plf_m = jnp.where(pid >= 0, plf, PAD_TILE_POINT_LEAF)
+            cand_d, cand_sel = adc_ops.adc_topk(
+                pc, plf_m, lut, qlf, k=r, impl=plan.impl
+            )
+            cand_i = jnp.where(
+                cand_sel >= 0, pid[jnp.clip(cand_sel, 0)], INVALID_ID
+            )
+            cand_d = jnp.where(cand_i >= 0, cand_d, jnp.inf)
+            cur_d = jax.lax.dynamic_slice(c.best_d, (slab.start, 0), (q_cap, r))
+            cur_i = jax.lax.dynamic_slice(c.best_i, (slab.start, 0), (q_cap, r))
+            new_d, new_i = tilescan.fold_topk(cur_d, cur_i, cand_d, cand_i)
+            best_d = jax.lax.dynamic_update_slice(c.best_d, new_d, (slab.start, 0))
+            best_i = jax.lax.dynamic_update_slice(c.best_i, new_i, (slab.start, 0))
+            pairs = c.pairs + tilescan.count_pairs(plf_m, qlf)
+            overflow = c.overflow + tilescan.slab_overflow(
+                lk_offsets, tilescan.last_valid_leaf(plf), slab,
+                n_entries=n_leaves,
+            )
+            return _Carry(best_d, best_i, pairs, overflow)
+
+        init = _Carry(
+            best_d=jnp.full((q_total, r), jnp.inf, jnp.float32),
+            best_i=jnp.full((q_total, r), INVALID_ID, jnp.int32),
+            pairs=jnp.zeros((), jnp.float32),
+            overflow=jnp.zeros((), jnp.int32),
+        )
+        init = jax.tree.map(lambda x: pcast_varying(x, axes), init)
+        out = jax.lax.fori_loop(0, n_waves, wave, init)
+        pairs = jax.lax.psum(out.pairs, axes)
+        overflow = jax.lax.psum(out.overflow, axes)
+        return out.best_d[None], out.best_i[None], pairs, overflow
+
+    def pipeline(index: DistributedIndex, lookup: LookupTable,
+                 codes: jax.Array, codebooks: jax.Array) -> SearchResult:
+        # per-lookup-row ADC tables: lut[q, j, c] = ||q_j - codebook[j,c]||^2
+        dsub = codebooks.shape[-1]
+        sub = lookup.vecs.astype(jnp.float32).reshape(q_total, m, dsub)
+        cb = codebooks.astype(jnp.float32)
+        cross = jnp.einsum(
+            "qmd,mcd->qmc", sub, cb, preferred_element_type=jnp.float32
+        )
+        lut = (
+            jnp.sum(sub * sub, axis=-1)[:, :, None]
+            - 2.0 * cross
+            + jnp.sum(cb * cb, axis=-1)[None]
+        ).reshape(q_total, m * n_centers)
+        codes3 = codes.astype(jnp.int32).reshape(n_shards, shard_rows, m)
+        leaves = index.leaves.reshape(n_shards, shard_rows)
+        ids = index.ids.reshape(n_shards, shard_rows)
+        row_spec = P(axes, None)
+        flat_spec = P(axes)
+        rep = P()
+        best_d, best_i, pairs, overflow = shard_map(
+            shard_fn,
+            mesh=mesh,
+            in_specs=(row_spec, flat_spec, flat_spec, rep, rep, rep),
+            out_specs=(P(axes, None, None), P(axes, None, None), rep, rep),
+        )(codes3, leaves, ids, lut, lookup.leaves, lookup.offsets)
+        # merge per-shard candidate tables; ADC distances are *full*
+        # squared estimates (the LUT carries the ||q_j - c||^2 terms), so
+        # unlike the dense scan there is no ||q||^2 add-back
+        row_sh = NamedSharding(mesh, P(axes, None))
+        all_d = jnp.transpose(best_d, (1, 0, 2)).reshape(q_total, n_shards * r)
+        all_i = jnp.transpose(best_i, (1, 0, 2)).reshape(q_total, n_shards * r)
+        all_d = jax.lax.with_sharding_constraint(all_d, row_sh)
+        all_i = jax.lax.with_sharding_constraint(all_i, row_sh)
+        neg, sel = jax.lax.top_k(-all_d, r)
+        merged_d = -neg
+        merged_i = jnp.take_along_axis(all_i, sel, axis=1)
+        merged_d = jnp.where(merged_i >= 0, merged_d, jnp.inf)
+        out_d = jnp.full_like(merged_d, jnp.inf).at[lookup.qids].set(merged_d)
+        out_i = jnp.full_like(merged_i, INVALID_ID).at[lookup.qids].set(merged_i)
+        out_d, out_i = tilescan.merge_probe_groups(out_d, out_i, plan.probes)
+        out_d = jax.lax.with_sharding_constraint(out_d, row_sh)
+        out_i = jax.lax.with_sharding_constraint(out_i, row_sh)
+        return SearchResult(ids=out_i, dists=out_d, pairs=pairs,
+                            q_cap_overflow=overflow)
+
+    return pipeline
+
+
+_LAYOUT_BUILDERS = {
+    "point_major": _point_major_fn,
+    "query_routed": _query_routed_fn,
+    "scan_codes": _scan_codes_fn,
+}
+
+
 def make_executor(
     mesh: Mesh,
     plan: SearchPlan,
@@ -331,14 +462,17 @@ def make_executor(
     rounded up); it must be a multiple of ``plan.probes`` so the final
     probe-group merge can reshape. Output tables have
     ``q_total // plan.probes`` rows (one per original query group).
+
+    The ``scan_codes`` pipeline takes two extra arguments —
+    ``(index, lookup, codes, codebooks)`` — and its result rows are
+    ``plan.rerank`` *approximate* ADC candidates per query, which the
+    caller reranks exactly (docs/compressed_codes.md).
     """
     plan = plan.resolved()
     axes = tuple(axes) if axes else batch_axes(mesh)
     if q_total % plan.probes:
         raise ValueError(f"{q_total=} must be a multiple of {plan.probes=}")
-    builder = (
-        _point_major_fn if plan.layout == "point_major" else _query_routed_fn
-    )
+    builder = _LAYOUT_BUILDERS[plan.layout]
     return builder(
         mesh, plan, n_leaves=n_leaves, shard_rows=shard_rows, q_total=q_total,
         axes=axes,

@@ -107,18 +107,23 @@ class SearchPlan:
     executors require them resolved.
     """
 
-    layout: str  # "point_major" | "query_routed"
+    layout: str  # "point_major" | "query_routed" | "scan_codes"
     k: int
     probes: int = 1  # multi-probe width T: leaves visited per query
-    impl: str = "xla"  # l2topk impl: "xla" | "pallas" | "auto"
+    impl: str = "xla"  # l2topk/adcscan impl: "xla" | "pallas" | "auto"
     wire_dtype: Any = jnp.float32  # routed-shuffle payload dtype
-    # point-major budgets
+    # point-major budgets (scan_codes shares them: its code scan is a
+    # point-major wave sweep over uint8 code slabs)
     block_rows: int | None = None  # index rows per wave tile
     q_cap: int | None = None  # query-slab rows per tile
     # query-routed budgets
     q_tile: int | None = None  # queries per wave tile
     p_cap: int | None = None  # point-slab rows per query tile
     query_capacity_factor: float = 4.0  # routing headroom for hot shards
+    # scan_codes (compressed-tier) parameters — docs/compressed_codes.md
+    rerank: int | None = None  # ADC survivors fetched for exact rerank
+    code_m: int | None = None  # PQ subvectors (code bytes per row)
+    code_bits: int | None = None  # bits per subvector (2**bits centroids)
 
     def __post_init__(self):
         if self.layout not in LAYOUTS:
@@ -127,14 +132,17 @@ class SearchPlan:
             raise ValueError(f"{self.k=} must be >= 1")
         if self.probes < 1:
             raise ValueError(f"{self.probes=} must be >= 1")
+        if self.rerank is not None and self.rerank < self.k:
+            raise ValueError(f"{self.rerank=} must be >= {self.k=}")
 
     def resolved(self) -> "SearchPlan":
         """Check the budgets this layout needs are set."""
-        need = (
-            ("block_rows", "q_cap")
-            if self.layout == "point_major"
-            else ("q_tile", "p_cap")
-        )
+        if self.layout == "query_routed":
+            need = ("q_tile", "p_cap")
+        elif self.layout == "scan_codes":
+            need = ("block_rows", "q_cap", "rerank", "code_m", "code_bits")
+        else:
+            need = ("block_rows", "q_cap")
         for f in need:
             if getattr(self, f) is None:
                 raise ValueError(f"plan field {f!r} unresolved for {self.layout}")
@@ -184,6 +192,31 @@ def _point_major_budgets(
     return dataclasses.replace(p, block_rows=block_rows, q_cap=q_cap)
 
 
+def default_rerank(k: int, rows: int) -> int:
+    """Default exact-rerank depth for the codes layout: generous relative
+    to ``k`` (8x, floored at 64) so recall survives the lossy ADC scan,
+    capped at 128 (the in-kernel top-k stays VPU-cheap) and at the corpus
+    itself."""
+    return max(k, min(rows, max(8 * k, 64), 128))
+
+
+def _scan_codes_budgets(
+    p: SearchPlan, *, shard_rows: int, n_leaves: int, q_rows: int,
+    n_shards: int
+) -> SearchPlan:
+    """The codes scan is a point-major sweep over uint8 code slabs — it
+    reuses the point-major block/slab derivation, plus a rerank depth."""
+    p = _point_major_budgets(
+        p, shard_rows=shard_rows, n_leaves=n_leaves, q_rows=q_rows,
+        n_shards=n_shards,
+    )
+    rerank = p.rerank or default_rerank(p.k, shard_rows * n_shards)
+    # the running candidate table needs rerank <= block_rows (same bound
+    # as k <= block_rows on the dense scan)
+    rerank = max(p.k, min(rerank, p.block_rows))
+    return dataclasses.replace(p, rerank=rerank)
+
+
 def _query_routed_budgets(
     p: SearchPlan, *, shard_rows: int, n_leaves: int, q_rows: int,
     n_shards: int
@@ -222,6 +255,10 @@ def plan(
     q_tile: int | None = None,
     p_cap: int | None = None,
     query_capacity_factor: float = 4.0,
+    dim: int = 0,
+    rerank: int | None = None,
+    code_m: int | None = None,
+    code_bits: int | None = None,
     model: Any = "auto",
     calibration: CalibrationStore | None = None,
     use_observations: bool | None = None,
@@ -235,11 +272,18 @@ def plan(
       n_queries: query rows per batch (pre-probe-expansion).
       n_shards: device row-shards (``meshutil.data_axis_size``).
       k: neighbours returned per query; ``probes``: multi-probe width.
-      layout: ``"point_major"``, ``"query_routed"``, or ``"auto"``.
-      impl: l2topk kernel implementation (``"xla"``/``"pallas"``/``"auto"``).
+      layout: ``"point_major"``, ``"query_routed"``, ``"scan_codes"``
+        (requires a codes artifact — ``code_m``/``code_bits`` set), or
+        ``"auto"``.
+      impl: kernel implementation (``"xla"``/``"pallas"``/``"auto"``).
       wire_dtype: routed-shuffle payload dtype.
       block_rows/q_cap/q_tile/p_cap: pin a budget instead of deriving it;
         ``query_capacity_factor``: routing headroom for hot shards.
+      dim: descriptor dimension (0 = unknown) — feeds the codes pricing.
+      rerank: exact-rerank depth for ``scan_codes`` (default: derived,
+        see :func:`default_rerank`); ``code_m``/``code_bits``: the index's
+        PQ geometry — when set, ``layout="auto"`` also prices the
+        ``scan_codes`` candidate (docs/compressed_codes.md).
       model: which cost model ranks an ``"auto"`` layout — one of
         ``"auto"`` (fitted > observed > heuristic, the default),
         ``"heuristic"``, ``"observed"``, ``"fitted"``, or a prebuilt
@@ -289,30 +333,56 @@ def plan(
         query_capacity_factor=query_capacity_factor,
     )
     shapes = dict(shard_rows=shard_rows, n_leaves=n_leaves, q_rows=q_rows)
+    has_codes = code_m is not None and code_bits is not None
+    if layout == "scan_codes" and not has_codes:
+        raise ValueError(
+            "layout='scan_codes' needs code_m/code_bits (a PQ codes "
+            "artifact on the index; docs/compressed_codes.md)"
+        )
+    if has_codes:
+        sc = _scan_codes_budgets(
+            SearchPlan(layout="scan_codes", rerank=rerank, code_m=code_m,
+                       code_bits=code_bits, **base),
+            n_shards=n_shards, **shapes,
+        )
+        if layout == "scan_codes":
+            return sc.resolved()
     pm = _point_major_budgets(
         SearchPlan(layout="point_major", **base), n_shards=n_shards, **shapes
     )
-    routable = n_leaves % n_shards == 0
-    if layout == "point_major" or (layout == "auto" and not routable):
+    if layout == "point_major":
         return pm.resolved()
-    qr = _query_routed_budgets(
-        SearchPlan(layout="query_routed", **base), n_shards=n_shards, **shapes
-    )
-    if layout == "query_routed":
-        if not routable:
-            raise ValueError(
-                f"{n_leaves=} must divide over {n_shards} shards for "
-                "layout='query_routed'"
-            )
-        return qr.resolved()
-    if layout != "auto":
+    routable = n_leaves % n_shards == 0
+    if layout == "auto" and not routable:
+        candidates = [pm.resolved()]
+        if has_codes:
+            candidates.append(sc.resolved())
+        if len(candidates) == 1:
+            return pm.resolved()
+    elif layout == "query_routed" or layout == "auto":
+        qr = _query_routed_budgets(
+            SearchPlan(layout="query_routed", **base), n_shards=n_shards,
+            **shapes
+        )
+        if layout == "query_routed":
+            if not routable:
+                raise ValueError(
+                    f"{n_leaves=} must divide over {n_shards} shards for "
+                    "layout='query_routed'"
+                )
+            return qr.resolved()
+        # candidates listed baseline-first: every model breaks ties toward
+        # the paper-faithful point-major scan
+        candidates = [pm.resolved(), qr.resolved()]
+        if has_codes:
+            candidates.append(sc.resolved())
+    else:
         raise ValueError(f"unknown layout {layout!r}")
     ctx = PlanShapes(
-        rows=rows, n_queries=n_queries, n_shards=n_shards, n_leaves=n_leaves
+        rows=rows, n_queries=n_queries, n_shards=n_shards, n_leaves=n_leaves,
+        dim=dim,
     )
-    # candidates listed baseline-first: every model breaks ties toward
-    # the paper-faithful point-major scan
     pick = costmodel_lib.resolve_model(model, calibration).choose(
-        (pm.resolved(), qr.resolved()), ctx
+        tuple(candidates), ctx
     )
     return pick

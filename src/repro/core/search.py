@@ -69,18 +69,32 @@ def search_with_lookup(
     mesh: Mesh,
     *,
     n_queries: int,
+    codes=None,
+    codebooks=None,
 ) -> SearchResult:
     """Run one resolved plan's executor over a pre-built lookup table.
 
     ``lookup`` is the unpadded ``n_queries * probes``-row table from
     :func:`~repro.core.lookup.build_lookup`; it is padded here to the
     executor's row count. Results are trimmed back to ``n_queries`` rows.
+
+    For a ``scan_codes`` plan, ``codes`` (the segment's ``(rows, m)``
+    uint8 PQ codes, row-aligned with ``index``) and ``codebooks`` (the
+    quantizer's ``(m, C, dsub)`` table) are required, and the returned
+    tables hold ``plan.rerank`` approximate ADC candidates per query —
+    the caller reranks exactly (docs/compressed_codes.md).
     """
     n_shards = data_axis_size(mesh)
     shard_rows = index.rows // n_shards
     q_total = lookup_q_total(plan, n_queries, n_shards)
     fn = _cached_executor(mesh, plan, index.n_leaves, shard_rows, q_total)
-    res = fn(index, pad_lookup(lookup, q_total))
+    padded = pad_lookup(lookup, q_total)
+    if plan.layout == "scan_codes":
+        if codes is None or codebooks is None:
+            raise ValueError("scan_codes plan needs codes + codebooks")
+        res = fn(index, padded, jnp.asarray(codes), jnp.asarray(codebooks))
+    else:
+        res = fn(index, padded)
     return SearchResult(
         ids=res.ids[:n_queries],
         dists=res.dists[:n_queries],

@@ -40,6 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.codes import CODES_FORMAT, ProductQuantizer, rerank_exact
 from repro.core.engine import (
     CalibrationStore,
     SearchPlan,
@@ -118,6 +119,9 @@ class Index:
         wire_dtype=jnp.float32,
         shard_plan: ShardPlan | None = None,
         calibration: CalibrationStore | None = None,
+        quantizer: ProductQuantizer | None = None,
+        codes: dict | None = None,
+        codes_paths: dict | None = None,
     ):
         self.directory = directory
         self.tree = tree
@@ -127,6 +131,13 @@ class Index:
         self._staged: list[Segment] = []
         self._shard_plan = shard_plan
         self._shard_plan_dirty = False
+        # compressed-codes tier: the PQ quantizer (manifest-persisted like
+        # shard_plan/calibration), per-segment (rows, m) uint8 code arrays,
+        # and the relative paths of already-published code files
+        self.quantizer = quantizer
+        self._codes: dict[str, np.ndarray] = dict(codes or {})
+        self._codes_paths: dict[str, str] = dict(codes_paths or {})
+        self._codes_dirty = False
         # index-scoped cost-model calibration: measured ms/image per plan
         # signature, persisted in the manifest (its own dirty flag drives
         # commit), consulted by search()/serving via plan(model="auto")
@@ -249,6 +260,15 @@ class Index:
                     "rebuild the index for this mesh"
                 )
         wire = jnp.dtype(tree_meta.get("wire_dtype", "float32"))
+        quantizer, codes, codes_paths = None, {}, {}
+        if m.codes:
+            quantizer = ProductQuantizer.from_json(m.codes["quantizer"])
+            codes_paths = dict(m.codes.get("segments", {}))
+            codes = {
+                name: manifest_lib.read_codes(directory, rel)
+                for name, rel in codes_paths.items()
+                if name in m.segments
+            }
         return cls(
             directory,
             tree,
@@ -266,6 +286,9 @@ class Index:
                 CalibrationStore.from_json(m.calibration)
                 if m.calibration else None
             ),
+            quantizer=quantizer,
+            codes=codes,
+            codes_paths=codes_paths,
         )
 
     @classmethod
@@ -349,6 +372,67 @@ class Index:
         self._shard_plan = plan
         self._shard_plan_dirty = True
 
+    # -- compressed-codes tier ----------------------------------------------
+    def enable_codes(
+        self,
+        *,
+        m: int = 8,
+        bits: int = 8,
+        sample: int = 65_536,
+        iters: int = 16,
+        seed: int = 0,
+    ) -> ProductQuantizer:
+        """Train a :class:`~repro.codes.ProductQuantizer` on this index's
+        live rows and encode every segment (staged; durable after
+        :meth:`commit`, versioned in the manifest like ``shard_plan``).
+
+        Once enabled, later appends and compactions re-encode their new
+        segments automatically, and ``search(layout="auto")`` may pick the
+        ``scan_codes`` layout (ADC scan + exact rerank) when the cost model
+        prices it cheaper — ``search(layout="scan_codes")`` forces it.
+
+        Raises:
+          ValueError: no live rows to train on, or ``dim`` is not
+            divisible by ``m``.
+        """
+        segs = self.segments
+        parts = []
+        for seg in segs:
+            ids = seg.host_ids()
+            parts.append(seg.host_vecs()[ids >= 0])
+        train = (
+            np.concatenate(parts) if parts
+            else np.empty((0, self.dim), np.float32)
+        )
+        if train.shape[0] == 0:
+            raise ValueError("enable_codes needs at least one indexed row")
+        with get_tracer().span("index.enable_codes", rows=train.shape[0],
+                               m=m, bits=bits):
+            self.quantizer = ProductQuantizer.train(
+                train, m=m, bits=bits, seed=seed, sample=sample, iters=iters
+            )
+            self._codes = {
+                seg.name: self.quantizer.encode(seg.host_vecs())
+                for seg in segs
+            }
+        self._codes_paths = {}
+        self._codes_dirty = True
+        return self.quantizer
+
+    def codes_stats(self) -> dict | None:
+        """Footprint of the compressed tier, or ``None`` when disabled."""
+        pq = self.quantizer
+        if pq is None:
+            return None
+        return {
+            "code_m": pq.m,
+            "code_bits": pq.bits,
+            "bytes_per_row": pq.bytes_per_row,
+            "raw_bytes_per_row": 4 * self.dim,
+            "compression_ratio": pq.compression_ratio(),
+            "codebook_bytes": pq.codebook_bytes,
+        }
+
     @property
     def rows(self) -> int:
         """Live (searchable) descriptor rows: valid minus tombstoned."""
@@ -395,6 +479,7 @@ class Index:
         version: int | None = None,
         segments: Sequence[Segment] | None = None,
         shard_plan: ShardPlan | None = None,
+        codes_paths: dict | None = None,
     ) -> Manifest:
         segs = self._committed if segments is None else segments
         return Manifest(
@@ -407,7 +492,22 @@ class Index:
             calibration=(
                 self.calibration.to_json() if len(self.calibration) else None
             ),
+            codes=self._codes_payload(segs, codes_paths),
         )
+
+    def _codes_payload(
+        self, segments: Sequence[Segment], paths: dict | None = None
+    ) -> dict | None:
+        if self.quantizer is None:
+            return None
+        paths = self._codes_paths if paths is None else paths
+        return {
+            "format": CODES_FORMAT,
+            "quantizer": self.quantizer.to_json(),
+            "segments": {
+                s.name: paths[s.name] for s in segments if s.name in paths
+            },
+        }
 
     def _plan_for(self, segments: Sequence[Segment]) -> ShardPlan | None:
         """The bound shard plan updated to ``segments``: unchanged when it
@@ -543,6 +643,11 @@ class Index:
         if self.directory:
             seg.save(self._segments_dir())  # durable *before* it is staged
         self._staged.append(seg)
+        if self.quantizer is not None:
+            # the codes tier follows every append: encode the new segment's
+            # padded rows (pad rows carry the LEAF_SENTINEL and never match)
+            self._codes[seg.name] = self.quantizer.encode(seg.host_vecs())
+            self._codes_dirty = True
         self._next_id = max(self._next_id, seg.max_id + 1)
         self._views = None
         return seg.name
@@ -599,7 +704,8 @@ class Index:
             a retried ``commit()`` re-attempts publication.
         """
         if not (self._staged or self._tombstones_dirty or self._meta_dirty
-                or self._shard_plan_dirty or self.calibration.dirty):
+                or self._shard_plan_dirty or self._codes_dirty
+                or self.calibration.dirty):
             return self._version
         # durable writes FIRST, memory state only after they succeed — a
         # failed write leaves the handle still-staged, so a retried
@@ -615,6 +721,17 @@ class Index:
                     rel = manifest_lib.write_tombstones(
                         self.directory, version, self._tombstones
                     )
+                if self.quantizer is not None:
+                    # code files are durable *before* the manifest that
+                    # references them, same as segments and tombstones
+                    for seg in segments:
+                        if seg.name not in self._codes_paths:
+                            self._codes_paths[seg.name] = (
+                                manifest_lib.write_codes(
+                                    self.directory, seg.name,
+                                    self._codes[seg.name],
+                                )
+                            )
                 manifest_lib.write(
                     self.directory,
                     self._manifest(rel, version=version, segments=segments,
@@ -628,6 +745,7 @@ class Index:
         self._tombstones_dirty = False
         self._meta_dirty = False
         self._shard_plan_dirty = False
+        self._codes_dirty = False
         self.calibration.mark_clean()
         return version
 
@@ -685,13 +803,29 @@ class Index:
             if self.directory:
                 seg.save(self._segments_dir())
             new_committed = [seg]
+        new_codes, new_codes_paths = self._codes, self._codes_paths
+        if self.quantizer is not None:
+            # the quantizer survives compaction unchanged (codebooks are
+            # trained, not positional); only the codes are re-encoded for
+            # the merged segment's new row order
+            new_codes = {
+                s.name: self.quantizer.encode(s.host_vecs())
+                for s in new_committed
+            }
+            new_codes_paths = {}
+            if self.directory:
+                new_codes_paths = {
+                    name: manifest_lib.write_codes(self.directory, name, c)
+                    for name, c in new_codes.items()
+                }
         version = self._version + 1
         plan = self._plan_for(new_committed)
         if self.directory:
             manifest_lib.write(
                 self.directory,
                 self._manifest(None, version=version,
-                               segments=new_committed, shard_plan=plan),
+                               segments=new_committed, shard_plan=plan,
+                               codes_paths=new_codes_paths),
             )
         self._committed = new_committed
         self._staged = []
@@ -700,6 +834,9 @@ class Index:
         self._tombstones = np.empty((0,), np.int64)
         self._tombstones_dirty = False
         self._meta_dirty = False
+        self._codes = new_codes
+        self._codes_paths = new_codes_paths
+        self._codes_dirty = False
         self.calibration.mark_clean()
         self._version = version
         self._views = None
@@ -715,11 +852,21 @@ class Index:
         return new_committed[0].name if new_committed else None
 
     def _gc_segments(self, old: Sequence[Segment]) -> None:
+        live = {s.name for s in self._committed}
         for seg in old:
+            if seg.name in live:
+                continue
             shutil.rmtree(
                 os.path.join(self._segments_dir(), seg.name),
                 ignore_errors=True,
             )
+            try:
+                os.remove(os.path.join(
+                    self.directory, manifest_lib.CODES_SUBDIR,
+                    f"{seg.name}.npy",
+                ))
+            except OSError:
+                pass
 
     # -- read path ----------------------------------------------------------
     def read_rows(self, ids) -> np.ndarray:
@@ -733,41 +880,46 @@ class Index:
 
         Tombstoned ids read as missing *immediately* (not only after the
         compaction that physically drops them), so the result never
-        depends on compaction timing."""
+        depends on compaction timing.
+
+        Requested ids may repeat and arrive in any order: probes are
+        deduplicated to one *sorted* unique set, each segment is gathered
+        at most once, and results scatter back to the request order — the
+        rerank fetch path hands whole candidate tables here without
+        pre-sorting."""
         ids = np.atleast_1d(np.asarray(ids, np.int64))
         if ids.size and ids.min() < 0:
             # never let a requested -1 match a padding row's -1 id
             raise IndexError(f"descriptor ids must be >= 0; got {ids.min()}")
-        out = np.empty((ids.size, self.dim), np.float32)
-        found = np.zeros(ids.size, bool)
-        dead = (
-            np.isin(ids, self._tombstones) if self._tombstones.size
-            else np.zeros(ids.size, bool)
-        )
-        if ids.size:
-            for seg in self.segments:
-                if found.all() or not seg.overlaps(ids):
-                    continue
-                sorted_ids, order = seg.id_index()
-                pos = np.searchsorted(sorted_ids, ids)
-                hit = (
-                    ~found
-                    & (pos < sorted_ids.size)
-                    & (sorted_ids[np.minimum(pos, sorted_ids.size - 1)]
-                       == ids)
-                )
-                if hit.any():
-                    out[hit] = seg.host_vecs()[order[pos[hit]]]
-                    found |= hit
-        found &= ~dead
-        if not found.all():
+        if ids.size == 0:
+            return np.empty((0, self.dim), np.float32)
+        uniq, inverse = np.unique(ids, return_inverse=True)
+        u_out = np.empty((uniq.size, self.dim), np.float32)
+        u_found = np.zeros(uniq.size, bool)
+        for seg in self.segments:
+            if u_found.all() or not seg.overlaps(uniq):
+                continue
+            sorted_ids, order = seg.id_index()
+            pos = np.searchsorted(sorted_ids, uniq)
+            hit = (
+                ~u_found
+                & (pos < sorted_ids.size)
+                & (sorted_ids[np.minimum(pos, sorted_ids.size - 1)] == uniq)
+            )
+            if hit.any():
+                u_out[hit] = seg.host_vecs()[order[pos[hit]]]
+                u_found |= hit
+        if self._tombstones.size:
+            u_found &= ~np.isin(uniq, self._tombstones)
+        if not u_found.all():
+            found = u_found[inverse]
             missing = ids[~found]
             raise IndexError(
                 f"descriptor ids not in the index (absent or deleted): "
                 f"{missing[:8].tolist()}"
                 + ("..." if missing.size > 8 else "")
             )
-        return out
+        return u_out[inverse]
 
     def segment_views(self) -> tuple[DistributedIndex, ...]:
         """Per-segment indexes with tombstones masked (cached until the
@@ -791,6 +943,7 @@ class Index:
         q_cap: int | None = None,
         q_tile: int | None = None,
         p_cap: int | None = None,
+        rerank: int | None = None,
         cost_model="auto",
         use_observations: bool | None = None,
     ) -> SearchResult:
@@ -805,7 +958,13 @@ class Index:
             arguments; budgets are still re-resolved per segment, since
             tile sizes must divide each segment's shard rows.
           layout/probes/impl/block_rows/q_cap/q_tile/p_cap: per-call plan
-            knobs, as in :func:`repro.core.engine.plan`.
+            knobs, as in :func:`repro.core.engine.plan`. ``layout`` also
+            accepts ``"scan_codes"`` (ADC scan over PQ codes + exact
+            rerank) once :meth:`enable_codes` has run; ``"auto"`` lets
+            the cost model pick the codes tier on its own.
+          rerank: ADC candidates per query to fetch + exactly rerank for
+            the ``scan_codes`` layout (default from
+            :func:`~repro.core.engine.plan.default_rerank`).
           cost_model: which model ranks an ``"auto"`` layout (``"auto"``
             / ``"heuristic"`` / ``"observed"`` / ``"fitted"``), consulting
             *this index's* manifest-persisted calibration store.
@@ -815,12 +974,15 @@ class Index:
         Returns:
           A :class:`SearchResult`: ``(q, k)`` ids (``-1`` where fewer
           than ``k`` live rows matched) and squared-L2 dists (``inf``
-          there), plus exact pairs/overflow counters. Bit-identical to a
-          one-shot build+search over the concatenated live rows.
+          there), plus exact pairs/overflow counters. Dense layouts are
+          bit-identical to a one-shot build+search over the concatenated
+          live rows; ``scan_codes`` returns the exact-reranked top-k of
+          the ADC candidate set (approximate recall, exact ordering).
 
         Raises:
           ValueError: invalid plan knobs (see
-            :func:`repro.core.engine.plan`).
+            :func:`repro.core.engine.plan`), or
+            ``layout="scan_codes"`` without :meth:`enable_codes`.
         """
         if plan is not None:
             layout, k, probes, impl = plan.layout, plan.k, plan.probes, plan.impl
@@ -828,6 +990,7 @@ class Index:
             q_cap = plan.q_cap if q_cap is None else q_cap
             q_tile = plan.q_tile if q_tile is None else q_tile
             p_cap = plan.p_cap if p_cap is None else p_cap
+            rerank = plan.rerank if rerank is None else rerank
         queries = jnp.asarray(queries, jnp.float32)
         q = queries.shape[0]
         views = self.segment_views()
@@ -839,9 +1002,46 @@ class Index:
                 q_cap_overflow=jnp.zeros((), jnp.int32),
             )
         n_shards = data_axis_size(self.mesh)
+        # ADC distances are approximations, incomparable with the dense
+        # layouts' exact partial distances, so the codes-vs-exact decision
+        # is resolved ONCE on the aggregate shape — per-segment plans then
+        # all run the same tier and the cross-segment merge stays sound
+        if layout == "scan_codes" and self.quantizer is None:
+            raise ValueError(
+                "layout='scan_codes' needs PQ codes; call "
+                "enable_codes() first"
+            )
+        use_codes = False
+        if self.quantizer is not None and layout in ("auto", "scan_codes"):
+            agg = make_plan(
+                rows=sum(v.rows for v in views),
+                n_leaves=self.n_leaves, n_queries=q, n_shards=n_shards,
+                k=k, probes=probes, layout=layout, impl=impl,
+                model=cost_model, calibration=self.calibration,
+                use_observations=use_observations,
+                dim=self.dim, rerank=rerank,
+                code_m=self.quantizer.m, code_bits=self.quantizer.bits,
+            )
+            use_codes = agg.layout == "scan_codes"
         lookup = jit_build_lookup(self.tree, queries, probes=probes)
         per = []
-        for view in views:
+        for seg, view in zip(self.segments, views):
+            if use_codes:
+                p = make_plan(
+                    rows=view.rows, n_leaves=self.n_leaves, n_queries=q,
+                    n_shards=n_shards, k=k, probes=probes,
+                    layout="scan_codes", impl=impl, block_rows=block_rows,
+                    q_cap=q_cap, model=cost_model,
+                    calibration=self.calibration,
+                    dim=self.dim, rerank=rerank,
+                    code_m=self.quantizer.m, code_bits=self.quantizer.bits,
+                )
+                per.append(search_with_lookup(
+                    view, lookup, p, self.mesh, n_queries=q,
+                    codes=self._codes[seg.name],
+                    codebooks=self.quantizer.codebooks,
+                ))
+                continue
             p = make_plan(
                 rows=view.rows,
                 n_leaves=self.n_leaves,
@@ -861,6 +1061,21 @@ class Index:
             )
             per.append(
                 search_with_lookup(view, lookup, p, self.mesh, n_queries=q)
+            )
+        if use_codes:
+            r_max = max(r.ids.shape[1] for r in per)
+            cand = per[0] if len(per) == 1 else _merge_results(per, r_max)
+            cand_ids = np.asarray(cand.ids)
+            with get_tracer().span("engine.rerank", k=k,
+                                   candidates=int(cand_ids.shape[1])):
+                ids_r, dists_r = rerank_exact(
+                    self.read_rows, np.asarray(queries), cand_ids, k
+                )
+            return SearchResult(
+                ids=jnp.asarray(ids_r),
+                dists=jnp.asarray(dists_r),
+                pairs=cand.pairs,
+                q_cap_overflow=cand.q_cap_overflow,
             )
         if len(per) == 1:
             return per[0]

@@ -25,6 +25,7 @@ _MANIFEST_RE = re.compile(r"^MANIFEST-(\d{6})\.json$")
 SEGMENTS_SUBDIR = "segments"
 TOMBSTONES_SUBDIR = "tombstones"
 TREE_SUBDIR = "tree"
+CODES_SUBDIR = "codes"
 
 FORMAT_VERSION = 1
 
@@ -45,6 +46,11 @@ class Manifest:
     # ms/image per plan signature, the cost-model calibration data);
     # versioned like shard_plan — absent on pre-calibration manifests
     calibration: dict | None = None
+    # compressed-codes tier (repro.codes): the serialized ProductQuantizer
+    # plus per-segment relative paths of the uint8 code files; versioned
+    # like shard_plan — absent on pre-codes manifests and on indexes that
+    # never called enable_codes
+    codes: dict | None = None
 
     def to_json(self) -> dict:
         return {
@@ -56,6 +62,7 @@ class Manifest:
             "meta": dict(self.meta),
             "shard_plan": self.shard_plan,
             "calibration": self.calibration,
+            "codes": self.codes,
         }
 
     @classmethod
@@ -68,6 +75,7 @@ class Manifest:
             meta=dict(d.get("meta", {})),
             shard_plan=d.get("shard_plan"),
             calibration=d.get("calibration"),
+            codes=d.get("codes"),
         )
 
 
@@ -167,6 +175,45 @@ def write_tombstones(directory: str, version: int, ids: np.ndarray) -> str:
     finally:
         os.unlink(tmp)
     return rel
+
+
+def write_codes(directory: str, name: str, codes: np.ndarray) -> str:
+    """Persist one segment's ``(rows, m)`` uint8 PQ codes; returns the
+    relative path.
+
+    Same durability contract as :func:`write_tombstones`: written *before*
+    the manifest that references it, fsynced, published with an exclusive
+    ``os.link``. Segment names are never reused (``next_seq`` reserves
+    orphans), so the only collision is the same handle retrying an
+    interrupted commit — identical bytes pass through.
+    """
+    sub = os.path.join(directory, CODES_SUBDIR)
+    os.makedirs(sub, exist_ok=True)
+    payload = np.ascontiguousarray(codes, np.uint8)
+    rel = os.path.join(CODES_SUBDIR, f"{name}.npy")
+    final = os.path.join(directory, rel)
+    tmp = final + ".tmp"
+    with open(tmp, "wb") as f:
+        np.save(f, payload)
+        f.flush()
+        os.fsync(f.fileno())
+    try:
+        os.link(tmp, final)
+    except FileExistsError:
+        if np.array_equal(np.load(final), payload):
+            return rel  # same handle retrying an interrupted commit
+        raise FileExistsError(
+            f"codes file for segment {name} already exists in {directory} "
+            "with different contents — another handle committed "
+            "concurrently; reopen the index and retry"
+        ) from None
+    finally:
+        os.unlink(tmp)
+    return rel
+
+
+def read_codes(directory: str, rel_path: str) -> np.ndarray:
+    return np.load(os.path.join(directory, rel_path)).astype(np.uint8)
 
 
 def read_tombstones(directory: str, rel_path: str | None) -> np.ndarray:

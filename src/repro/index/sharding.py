@@ -37,6 +37,7 @@ from typing import Sequence
 import jax.numpy as jnp
 import numpy as np
 
+from repro.codes import rerank_exact
 from repro.core.engine import (
     PlanShapes,
     SearchPlan,
@@ -283,6 +284,23 @@ def fitted_shard_scales(
     return [next(scales) if shard else 1.0 for shard in shard_views]
 
 
+def _pad_cols(res: SearchResult, width: int) -> SearchResult:
+    """Right-pad a candidate table to ``width`` columns with the engine's
+    absent-row sentinels (``-1``/``inf`` sort behind every candidate)."""
+    w = int(res.ids.shape[1])
+    if w == width:
+        return res
+    q = int(res.ids.shape[0])
+    ids = np.full((q, width), -1, np.int32)
+    dists = np.full((q, width), np.inf, np.float32)
+    ids[:, :w] = np.asarray(res.ids)
+    dists[:, :w] = np.asarray(res.dists)
+    return SearchResult(
+        ids=jnp.asarray(ids), dists=jnp.asarray(dists),
+        pairs=res.pairs, q_cap_overflow=res.q_cap_overflow,
+    )
+
+
 def gather_merge(
     partials: Sequence[tuple[np.ndarray, np.ndarray, np.ndarray]], k: int
 ) -> tuple[np.ndarray, np.ndarray]:
@@ -389,6 +407,7 @@ class ShardedIndex:
         q_cap: int | None = None,
         q_tile: int | None = None,
         p_cap: int | None = None,
+        rerank: int | None = None,
         cost_model="auto",
         use_observations: bool | None = None,
     ) -> SearchResult:
@@ -424,6 +443,7 @@ class ShardedIndex:
             q_cap = plan.q_cap if q_cap is None else q_cap
             q_tile = plan.q_tile if q_tile is None else q_tile
             p_cap = plan.p_cap if p_cap is None else p_cap
+            rerank = plan.rerank if rerank is None else rerank
         queries = jnp.asarray(queries, jnp.float32)
         q = queries.shape[0]
         views = self.shard_views()
@@ -434,11 +454,39 @@ class ShardedIndex:
                 pairs=jnp.zeros((), jnp.float32),
                 q_cap_overflow=jnp.zeros((), jnp.int32),
             )
+        # codes-vs-exact resolves ONCE on the aggregate shape (ADC and
+        # exact distances are incomparable), exactly like Index.search
+        pq = getattr(self.index, "quantizer", None)
+        if layout == "scan_codes" and pq is None:
+            raise ValueError(
+                "layout='scan_codes' needs PQ codes; call "
+                "enable_codes() first"
+            )
+        use_codes = False
+        if pq is not None and layout in ("auto", "scan_codes"):
+            agg = make_plan(
+                rows=sum(int(v.rows) for shard in views for _, v in shard),
+                n_leaves=self.index.n_leaves, n_queries=q,
+                n_shards=data_axis_size(self.index.mesh), k=k,
+                probes=probes, layout=layout, impl=impl, model=cost_model,
+                calibration=self.index.calibration,
+                use_observations=use_observations,
+                dim=self.index.dim, rerank=rerank,
+                code_m=pq.m, code_bits=pq.bits,
+            )
+            use_codes = agg.layout == "scan_codes"
         lookup = jit_build_lookup(self.index.tree, queries, probes=probes)
         scales = fitted_shard_scales(
             self.index, views, self._meshes, cost_model=cost_model,
-            n_queries=q, k=k, probes=probes, layout=layout, impl=impl,
+            n_queries=q, k=k, probes=probes,
+            layout="auto" if use_codes else layout, impl=impl,
         )
+        if use_codes:
+            return self._search_codes(
+                queries, k, views, lookup, scales, probes=probes,
+                impl=impl, block_rows=block_rows, q_cap=q_cap,
+                rerank=rerank, cost_model=cost_model,
+            )
         partials = []
         pairs = overflow = 0
         for shard, mesh, scale in zip(views, self._meshes, scales):
@@ -485,6 +533,74 @@ class ShardedIndex:
         return SearchResult(
             ids=jnp.asarray(ids),
             dists=jnp.asarray(dists),
+            pairs=pairs,
+            q_cap_overflow=overflow,
+        )
+
+    def _search_codes(
+        self, queries, k, views, lookup, scales, *, probes, impl,
+        block_rows, q_cap, rerank, cost_model,
+    ) -> SearchResult:
+        """Sharded ``scan_codes`` tier: every shard ADC-scans its segments,
+        the gather merges *candidate* tables (slot-tagged, so the merged
+        candidate set is deterministic at any shard count), and one global
+        exact rerank over ``Index.read_rows`` produces the final top-k —
+        the rerank is shard-count-invariant because it re-sorts candidates
+        by id before fetching."""
+        pq = self.index.quantizer
+        q = queries.shape[0]
+        shard_entries = []  # per shard: [(ordinal, SearchResult), ...]
+        pairs = overflow = 0
+        for shard, mesh, scale in zip(views, self._meshes, scales):
+            if not shard:
+                continue
+            n_shards = data_axis_size(mesh)
+            entries = []
+            for g, view in shard:
+                p = make_plan(
+                    rows=view.rows, n_leaves=self.index.n_leaves,
+                    n_queries=q, n_shards=n_shards, k=k, probes=probes,
+                    layout="scan_codes", impl=impl, block_rows=block_rows,
+                    q_cap=q_cap, model=cost_model,
+                    calibration=self.index.calibration,
+                    dim=self.index.dim, rerank=rerank,
+                    code_m=pq.m, code_bits=pq.bits,
+                )
+                # scan_codes slabs budget by q_cap (point-major family);
+                # never scale a budget the caller pinned
+                if q_cap is None:
+                    p = scale_slab_budget(
+                        p, scale, n_queries=q,
+                        shard_rows=view.rows // n_shards,
+                    )
+                name = self.index.segments[g].name
+                res = search_with_lookup(
+                    view, lookup, p, mesh, n_queries=q,
+                    codes=self.index._codes[name],
+                    codebooks=pq.codebooks,
+                )
+                entries.append((g, res))
+                pairs = pairs + res.pairs
+                overflow = overflow + res.q_cap_overflow
+            shard_entries.append(entries)
+        # per-segment candidate widths can differ (rerank clamps to each
+        # segment's block_rows); pad to one width so slots stay uniform
+        r_max = max(
+            int(res.ids.shape[1]) for e in shard_entries for _, res in e
+        )
+        partials = []
+        for entries in shard_entries:
+            per_seg = [_pad_cols(res, r_max) for _, res in entries]
+            partials.append(shard_local_partial(
+                per_seg, [g for g, _ in entries], r_max
+            ))
+        cand_ids, _ = gather_merge(partials, r_max)
+        ids_r, dists_r = rerank_exact(
+            self.index.read_rows, np.asarray(queries), cand_ids, k
+        )
+        return SearchResult(
+            ids=jnp.asarray(ids_r),
+            dists=jnp.asarray(dists_r),
             pairs=pairs,
             q_cap_overflow=overflow,
         )

@@ -1,0 +1,2 @@
+from repro.kernels.adcscan.ops import adc_topk  # noqa: F401
+from repro.kernels.adcscan.ref import adc_topk_ref  # noqa: F401

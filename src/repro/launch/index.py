@@ -64,12 +64,33 @@ def main(argv=None) -> int:
         "recall (0 = skip)",
     )
     ap.add_argument(
-        "--layout", choices=("point_major", "query_routed", "auto"),
+        "--layout",
+        choices=("point_major", "query_routed", "scan_codes", "auto"),
         default="auto", help="scan layout for the verification search",
     )
     ap.add_argument(
         "--probes", type=int, default=1,
         help="multi-probe width for the verification search",
+    )
+    ap.add_argument(
+        "--codes", action="store_true",
+        help="train product-quantized codes over the grown index and "
+        "persist them with the commit (docs/compressed_codes.md); an "
+        "index that already carries codes re-encodes appended segments "
+        "automatically, with or without this flag",
+    )
+    ap.add_argument(
+        "--subvectors", type=int, default=8,
+        help="PQ subvectors per row for --codes (= compressed bytes/row)",
+    )
+    ap.add_argument(
+        "--code-bits", type=int, default=8,
+        help="PQ bits per subvector code for --codes (8 = 256 centroids)",
+    )
+    ap.add_argument(
+        "--rerank", type=int, default=None,
+        help="ADC candidate depth for the verification search on the "
+        "codes tier (default: engine heuristic)",
     )
     ap.add_argument(
         "--cost-model",
@@ -201,6 +222,18 @@ def _run(args, tracer) -> int:
     done = {"sig": sig, "next_block": result.completed, "base_id": base_id}
     if idx.meta.get("ingest") != done:
         idx.update_meta(ingest=done)
+    if args.codes and idx.quantizer is None:
+        # train once over everything appended so far; the codes artifacts
+        # publish in the same commit as the final ingest cursor
+        t_c = time.perf_counter()
+        idx.enable_codes(m=args.subvectors, bits=args.code_bits,
+                         seed=args.seed)
+        cs = idx.codes_stats()
+        print(f"codes: trained m={cs['code_m']} bits={cs['code_bits']} "
+              f"({cs['bytes_per_row']} B/row vs "
+              f"{cs['raw_bytes_per_row']} raw, "
+              f"{cs['compression_ratio']:.1f}x) in "
+              f"{time.perf_counter() - t_c:.2f}s")
     version = idx.commit()
     dt = time.perf_counter() - t0
 
@@ -246,7 +279,8 @@ def _run(args, tracer) -> int:
             + rng.standard_normal((len(rows), args.dim)).astype(np.float32)
         )
         res = idx.search(queries, k=1, layout=args.layout,
-                         probes=args.probes, cost_model=args.cost_model)
+                         probes=args.probes, cost_model=args.cost_model,
+                         rerank=args.rerank)
         got = np.array(res.ids[:, 0])
         hit = got == base_id + rows
         # a grown index may hold exact copies of the planted row (e.g. the

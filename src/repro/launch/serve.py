@@ -65,12 +65,26 @@ def main(argv=None) -> int:
     # engine
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument(
-        "--layout", choices=("point_major", "query_routed", "auto"),
+        "--layout",
+        choices=("point_major", "query_routed", "scan_codes", "auto"),
         default="auto",
-        help="scan layout; auto lets the engine plan() heuristic pick",
+        help="scan layout; auto lets the engine plan() heuristic pick "
+             "(scan_codes requires a codes-enabled index or --codes)",
     )
     ap.add_argument("--probes", type=int, default=1,
                     help="multi-probe width: leaves visited per query")
+    ap.add_argument("--codes", action="store_true",
+                    help="train PQ codes on the index (if not already "
+                         "enabled) so auto planning may serve the "
+                         "compressed tier (docs/compressed_codes.md)")
+    ap.add_argument("--subvectors", type=int, default=8,
+                    help="PQ subvectors per row for --codes (bytes/row)")
+    ap.add_argument("--code-bits", type=int, default=8,
+                    help="PQ bits per subvector code for --codes")
+    ap.add_argument("--rerank", type=int, default=None,
+                    help="ADC candidate depth refetched for the exact "
+                         "rerank on the codes tier (default: engine "
+                         "heuristic, max(k, min(8k, 64)) clamped)")
     ap.add_argument("--impl", default="xla")
     ap.add_argument("--cost-model",
                     choices=("auto", "heuristic", "observed", "fitted"),
@@ -241,6 +255,7 @@ def _serve(args, tracer) -> int:
         max_batch_rows=args.max_batch_rows, n_buckets=args.n_buckets,
         cache_leaves=args.cache_leaves, cache_admit_after=args.cache_admit,
         cache_eviction=args.cache_eviction, cost_model=args.cost_model,
+        rerank=args.rerank,
     )
     if args.buckets:
         session_kw["buckets"] = [int(b) for b in args.buckets.split(",")]
@@ -248,6 +263,21 @@ def _serve(args, tracer) -> int:
     idx, meta = load_or_build_index(
         args.index_dir, build_fn=build_fn, mesh=mesh, rebuild=args.rebuild,
     )
+    if args.codes and idx.quantizer is None:
+        t_c = time.perf_counter()
+        idx.enable_codes(m=args.subvectors, bits=args.code_bits,
+                         seed=args.seed)
+        if args.index_dir:
+            idx.commit()
+        cs = idx.codes_stats()
+        print(f"codes: trained m={cs['code_m']} bits={cs['code_bits']} "
+              f"({cs['bytes_per_row']} B/row vs {cs['raw_bytes_per_row']} "
+              f"raw, {cs['compression_ratio']:.1f}x) in "
+              f"{time.perf_counter() - t_c:.2f}s")
+    elif idx.quantizer is not None:
+        cs = idx.codes_stats()
+        print(f"codes: restored m={cs['code_m']} bits={cs['code_bits']} "
+              f"({cs['compression_ratio']:.1f}x compression)")
     dpi = int(meta.get("desc_per_image", dpi))
     max_wait_ms = args.max_wait_ms
     if args.target_p95_ms and not args.buckets:
@@ -341,9 +371,12 @@ def _serve(args, tracer) -> int:
     print(f"cost model: {session.active_cost_model()} "
           f"({len(session.index.calibration)} calibration records)")
     for p in session.plan_summary():
+        tail = (f" rerank={p['rerank']}"
+                if p["layout"] == "scan_codes" else "")
         print(f"bucket {p['bucket']:>6} rows: layout={p['layout']} "
               f"q_total={p['q_total']} block_rows={p['block_rows']} "
-              f"q_cap={p['q_cap']} q_tile={p['q_tile']} p_cap={p['p_cap']}")
+              f"q_cap={p['q_cap']} q_tile={p['q_tile']} p_cap={p['p_cap']}"
+              + tail)
 
     warm_ms = session.warmup()
     print(f"warmup: {session.recompiles()} bucket programs compiled in "

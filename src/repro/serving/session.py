@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.codes import rerank_exact
 from repro.core.engine import (
     PlanShapes,
     SearchPlan,
@@ -77,6 +78,10 @@ class _BucketRuntime:
     q_total: int  # largest per-segment padded lookup row count
     fn: object  # jitted (segments, tree, queries, n_valid) -> (result, leaves)
     plan_rows: tuple = ()  # (plan, padded rows, n_shards) per segment
+    # scan_codes rungs only: the uniform ADC candidate width the pipeline
+    # emits (the caller reranks exactly), and the fused fn's signature
+    # grows to (segments, codes, codebooks, tree, queries, n_valid)
+    rerank: int | None = None
 
 
 def make_bucket_runtime(
@@ -94,6 +99,9 @@ def make_bucket_runtime(
     cost_model="auto",
     calibration=None,
     slab_scale: float = 1.0,
+    rerank: int | None = None,
+    codes=None,
+    codebooks=None,
 ) -> _BucketRuntime:
     """Build one warmed bucket rung over ``segments`` (masked views).
 
@@ -120,9 +128,22 @@ def make_bucket_runtime(
     if ordinals is None:
         ordinals = tuple(range(len(segments)))
     q_rows = bucket * probes
-    plans, base_plans, q_totals, execs = [], [], [], []
-    for view in segments:
-        base_p = make_plan(
+    use_codes = layout == "scan_codes"
+    code_kw = {}
+    if use_codes:
+        if codes is None or codebooks is None:
+            raise ValueError("scan_codes rungs need codes + codebooks")
+        m, n_centers, dsub = codebooks.shape
+        code_kw = dict(
+            dim=m * dsub, rerank=rerank, code_m=int(m),
+            code_bits=int(n_centers).bit_length() - 1,
+        )
+
+    def base_plan(view, rerank_override=None):
+        kw = dict(code_kw)
+        if rerank_override is not None:
+            kw["rerank"] = rerank_override
+        return make_plan(
             rows=view.rows,
             n_leaves=n_leaves,
             n_queries=bucket,
@@ -133,12 +154,26 @@ def make_bucket_runtime(
             impl=impl,
             model=cost_model,
             calibration=calibration,
+            **kw,
         )
+
+    base_plans = [base_plan(view) for view in segments]
+    r = k
+    if use_codes:
+        # one uniform ADC candidate width across segments (each plan may
+        # clamp rerank to its own block_rows): the min is valid everywhere
+        # and keeps the merge's slot arithmetic a single stride
+        r = min(p.rerank for p in base_plans)
+        base_plans = [
+            p if p.rerank == r else base_plan(view, rerank_override=r)
+            for p, view in zip(base_plans, segments)
+        ]
+    plans, q_totals, execs = [], [], []
+    for base_p, view in zip(base_plans, segments):
         p = scale_slab_budget(
             base_p, slab_scale, n_queries=bucket,
             shard_rows=view.rows // n_shards,
         )
-        base_plans.append(base_p)
         q_total = lookup_q_total(p, bucket, n_shards)
         execs.append(make_executor(
             mesh, p, n_leaves=n_leaves,
@@ -148,29 +183,23 @@ def make_bucket_runtime(
         q_totals.append(q_total)
     primary = max(range(len(plans)), key=lambda i: segments[i].rows)
     # each candidate's column in the global segment-ordered concatenation
+    # (scan_codes rungs stride by the candidate width r instead of k)
+    width = r if use_codes else k
     slot_cols = jnp.concatenate([
-        jnp.arange(g * k, g * k + k, dtype=jnp.int32) for g in ordinals
+        jnp.arange(g * width, g * width + width, dtype=jnp.int32)
+        for g in ordinals
     ])
 
-    def fused(segs, tree, queries, n_valid):
-        # ONE lookup build (probe routing + leaf sort) shared by every
-        # segment; per-segment executors only see tail padding on top
-        lookup, leaves = build_lookup_bucketed(
-            tree, queries, n_valid, probes=probes, q_total=q_rows
-        )
-        outs = [
-            fn(seg, pad_lookup(lookup, qt))
-            for seg, fn, qt in zip(segs, execs, q_totals)
-        ]
+    def merge(outs, leaves):
         if len(outs) == 1 and not emit_slots:
             return outs[0], leaves
-        all_d = jnp.concatenate([r.dists[:bucket] for r in outs], axis=1)
-        all_i = jnp.concatenate([r.ids[:bucket] for r in outs], axis=1)
-        pairs = sum(r.pairs for r in outs)
-        overflow = sum(r.q_cap_overflow for r in outs)
+        all_d = jnp.concatenate([r_.dists[:bucket] for r_ in outs], axis=1)
+        all_i = jnp.concatenate([r_.ids[:bucket] for r_ in outs], axis=1)
+        pairs = sum(r_.pairs for r_ in outs)
+        overflow = sum(r_.q_cap_overflow for r_ in outs)
         if emit_slots:
             # stable sort: ties keep concat order == ascending global slot
-            sel = jnp.argsort(all_d, axis=1, stable=True)[:, :k]
+            sel = jnp.argsort(all_d, axis=1, stable=True)[:, :width]
             merged = SearchResult(
                 ids=jnp.take_along_axis(all_i, sel, axis=1),
                 dists=jnp.take_along_axis(all_d, sel, axis=1),
@@ -180,7 +209,7 @@ def make_bucket_runtime(
             return merged, leaves, slot_cols[sel]
         # cross-segment merge: same ascending-distance fold the
         # executors use across shards (ties keep segment-major order)
-        neg, sel = jax.lax.top_k(-all_d, k)
+        neg, sel = jax.lax.top_k(-all_d, width)
         merged = SearchResult(
             ids=jnp.take_along_axis(all_i, sel, axis=1),
             dists=-neg,
@@ -188,6 +217,29 @@ def make_bucket_runtime(
             q_cap_overflow=overflow,
         )
         return merged, leaves
+
+    if use_codes:
+        def fused(segs, seg_codes, cbs, tree, queries, n_valid):
+            lookup, leaves = build_lookup_bucketed(
+                tree, queries, n_valid, probes=probes, q_total=q_rows
+            )
+            outs = [
+                fn(seg, pad_lookup(lookup, qt), c, cbs)
+                for seg, fn, qt, c in zip(segs, execs, q_totals, seg_codes)
+            ]
+            return merge(outs, leaves)
+    else:
+        def fused(segs, tree, queries, n_valid):
+            # ONE lookup build (probe routing + leaf sort) shared by every
+            # segment; per-segment executors only see tail padding on top
+            lookup, leaves = build_lookup_bucketed(
+                tree, queries, n_valid, probes=probes, q_total=q_rows
+            )
+            outs = [
+                fn(seg, pad_lookup(lookup, qt))
+                for seg, fn, qt in zip(segs, execs, q_totals)
+            ]
+            return merge(outs, leaves)
 
     return _BucketRuntime(
         bucket=bucket, plan=plans[primary], plans=tuple(plans),
@@ -199,6 +251,7 @@ def make_bucket_runtime(
             (bp, int(v.rows), n_shards)
             for bp, v in zip(base_plans, segments)
         ),
+        rerank=r if use_codes else None,
     )
 
 
@@ -277,7 +330,14 @@ class SearchSession:
       tree/mesh: only needed for the legacy pair; an ``Index`` carries
         both.
       k/layout/probes/impl: the serving plan knobs (see
-        :func:`repro.core.engine.plan`).
+        :func:`repro.core.engine.plan`). ``layout`` also accepts
+        ``"scan_codes"`` on an index with PQ codes (``enable_codes``);
+        with ``"auto"`` the cost model may pick the codes tier itself.
+        The decision is made once per session so every warmed rung
+        serves the same tier.
+      rerank: ADC candidates per query to exactly rerank on the codes
+        tier (default from
+        :func:`~repro.core.engine.plan.default_rerank`).
       cost_model: which cost model ranks an ``"auto"`` layout —
         ``"auto"`` (fitted > observed > heuristic, the default),
         ``"heuristic"``, ``"observed"``, or ``"fitted"`` — consulting the
@@ -307,6 +367,7 @@ class SearchSession:
         layout: str = "auto",
         probes: int = 1,
         impl: str = "xla",
+        rerank: int | None = None,
         max_batch_rows: int = 4096,
         n_buckets: int = 3,
         buckets: Sequence[int] | None = None,
@@ -339,12 +400,39 @@ class SearchSession:
         self.layout = layout
         self.probes = int(probes)
         self.impl = impl
+        self.rerank = rerank
         self.cost_model = cost_model
         self.buckets = (
             tuple(sorted(int(b) for b in buckets))
             if buckets
             else bucket_ladder(max_batch_rows, n_buckets=n_buckets)
         )
+        # codes-vs-exact resolves ONCE per session on the aggregate shape
+        # (ADC and exact distances are incomparable across a merge), so
+        # every rung of every ladder serves the same tier
+        pq = getattr(self.index, "quantizer", None)
+        if layout == "scan_codes" and pq is None:
+            raise ValueError(
+                "layout='scan_codes' needs PQ codes; call "
+                "index.enable_codes() first"
+            )
+        self._use_codes = False
+        if pq is not None and layout in ("auto", "scan_codes"):
+            agg = make_plan(
+                rows=sum(int(v.rows) for v in self._segments),
+                n_leaves=self.index.n_leaves,
+                n_queries=self.buckets[-1],
+                n_shards=data_axis_size(self.mesh),
+                k=self.k, probes=self.probes, layout=layout, impl=impl,
+                model=cost_model, calibration=self.index.calibration,
+                dim=self.index.dim, rerank=rerank,
+                code_m=pq.m, code_bits=pq.bits,
+            )
+            self._use_codes = agg.layout == "scan_codes"
+        self._codes_dev = None
+        self._codebooks_dev = None
+        if self._use_codes:
+            self._refresh_codes()
         self.metrics = ServingMetrics()
         self.cache = HotLeafCache(cache_leaves, admit_after=cache_admit_after,
                                   eviction=cache_eviction)
@@ -357,6 +445,21 @@ class SearchSession:
 
     def _attach_cache(self) -> None:
         attach_cache(self.cache, self._segments, self.index.n_leaves)
+
+    def _refresh_codes(self) -> None:
+        """Device copies of each segment's PQ codes + the codebook table,
+        aligned with ``self._segments`` order."""
+        self._codes_dev = tuple(
+            jnp.asarray(self.index._codes[s.name])
+            for s in self.index.segments
+        )
+        self._codebooks_dev = jnp.asarray(self.index.quantizer.codebooks)
+
+    @property
+    def serving_layout(self) -> str:
+        """The layout the warmed ladders actually execute (``layout``
+        with the session's one-time codes decision applied)."""
+        return "scan_codes" if self._use_codes else self.layout
 
     def _build_runtimes(self) -> None:
         """(Re)compile-point: one runtime per warmed bucket rung. The
@@ -394,14 +497,19 @@ class SearchSession:
         pipelines. New shapes compile at the next :meth:`warmup`."""
         self._segments = self.index.segment_views()
         self._attach_cache()
+        if self._use_codes:
+            self._refresh_codes()
         self._build_runtimes()
         self._warmed_compiles = None
 
     def _make_runtime(self, bucket: int) -> _BucketRuntime:
         return make_bucket_runtime(
             self.mesh, self.index.n_leaves, self._segments, bucket,
-            k=self.k, probes=self.probes, layout=self.layout, impl=self.impl,
+            k=self.k, probes=self.probes, layout=self.serving_layout,
+            impl=self.impl,
             cost_model=self.cost_model, calibration=self.index.calibration,
+            rerank=self.rerank, codes=self._codes_dev,
+            codebooks=self._codebooks_dev,
         )
 
     def active_cost_model(self) -> str:
@@ -436,7 +544,8 @@ class SearchSession:
                     model.predict_ms(
                         p, PlanShapes(rows=rows, n_queries=rt.bucket,
                                       n_shards=ns,
-                                      n_leaves=self.index.n_leaves),
+                                      n_leaves=self.index.n_leaves,
+                                      dim=self._shapes_dim(p)),
                     )
                     if fitted is model
                     else model.mean_ms(p)
@@ -473,9 +582,7 @@ class SearchSession:
             t0 = time.perf_counter()
             for rt in self._runtimes.values():
                 dummy = jnp.zeros((rt.bucket, d), jnp.float32)
-                res, leaves = rt.fn(
-                    self._segments, self.tree, dummy, np.int32(0)
-                )
+                res, leaves = self._dispatch(rt, dummy, np.int32(0))
                 jax.block_until_ready((res.ids, leaves))
             dt_ms = (time.perf_counter() - t0) * 1e3
         self.metrics.warmup_ms += dt_ms
@@ -486,6 +593,14 @@ class SearchSession:
     @property
     def max_batch_rows(self) -> int:
         return self.buckets[-1]
+
+    def _dispatch(self, rt: _BucketRuntime, buf, n_valid):
+        """Invoke one rung's fused pipeline (codes rungs take the device
+        codes + codebook table as extra leading arguments)."""
+        if rt.rerank is not None:
+            return rt.fn(self._segments, self._codes_dev,
+                         self._codebooks_dev, self.tree, buf, n_valid)
+        return rt.fn(self._segments, self.tree, buf, n_valid)
 
     def _execute(
         self, queries: np.ndarray, *, n_images: int | None = None
@@ -506,9 +621,7 @@ class SearchSession:
         buf = np.zeros((rt.bucket, d), np.float32)
         buf[:n] = queries
         t0 = time.perf_counter()
-        res, leaves = rt.fn(
-            self._segments, self.tree, jnp.asarray(buf), np.int32(n)
-        )
+        res, leaves = self._dispatch(rt, jnp.asarray(buf), np.int32(n))
         jax.block_until_ready((res.ids, res.dists, leaves))
         dt = time.perf_counter() - t0
         ids = np.asarray(res.ids[:n])
@@ -523,6 +636,17 @@ class SearchSession:
                 plan=signature_key(plan_signature(rt.plan)),
                 cost_model=self.active_cost_model(),
             )
+        if self._use_codes:
+            # the rung emitted rt.rerank ADC candidates per query; fetch
+            # the survivors' raw rows and rerank exactly (the rerank wall
+            # time is part of serving the request, so it stays in dt)
+            t_r = time.perf_counter()
+            with tr.span("engine.rerank", k=self.k,
+                         candidates=int(ids.shape[1])):
+                ids, dists = rerank_exact(
+                    self.index.read_rows, queries, ids, self.k
+                )
+            dt += time.perf_counter() - t_r
         self.metrics.engine_batches += 1
         self.metrics.engine_ms += dt * 1e3
         self.metrics.query_rows += n
@@ -533,9 +657,13 @@ class SearchSession:
             self._record_calibration(rt, dt * 1e3 / n_images)
             # measured engine cost refines the cache's eviction score
             self.cache.note_engine_cost(dt * 1e3 / n_images)
-        # a starved dispatch must not seed the cache: a cached full-slab
-        # scan would disagree with the truncated engine answer
-        self.cache.record(queries, leaves_np, exact=overflow == 0)
+        if not self._use_codes:
+            # a starved dispatch must not seed the cache: a cached
+            # full-slab scan would disagree with the truncated engine
+            # answer. Codes sessions never seed it at all — a cache hit
+            # would answer with an exact scan, diverging from the
+            # ADC+rerank tier the engine serves.
+            self.cache.record(queries, leaves_np, exact=overflow == 0)
         return ids, dists, leaves_np, dt
 
     def search(
@@ -614,8 +742,16 @@ class SearchSession:
                     n_queries=rt.bucket,
                     n_shards=n_shards,
                     n_leaves=self.index.n_leaves,
+                    dim=self._shapes_dim(p),
                 ),
             )
+
+    def _shapes_dim(self, p: SearchPlan) -> int:
+        """``PlanShapes.dim`` for a recorded/consulted plan: the codes
+        tier prices by dim, the dense layouts never did — keeping dense
+        shapes at ``dim=0`` preserves exact-shape matches against every
+        pre-codes record and the dense consults elsewhere."""
+        return self.index.dim if p.layout == "scan_codes" else 0
 
     def plan_summary(self) -> list[dict]:
         return [
@@ -628,6 +764,7 @@ class SearchSession:
                 "q_cap": rt.plan.q_cap,
                 "q_tile": rt.plan.q_tile,
                 "p_cap": rt.plan.p_cap,
+                "rerank": rt.plan.rerank,
                 "segments": len(rt.plans),
             }
             for rt in self._runtimes.values()

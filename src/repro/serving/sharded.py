@@ -46,6 +46,7 @@ from repro.core.engine import (
     plan as make_plan,
     snap_to_bucket,
 )
+from repro.codes import rerank_exact
 from repro.distributed.meshutil import data_axis_size
 from repro.core.engine.costmodel import plan_signature, signature_key
 from repro.index.sharding import (
@@ -135,9 +136,19 @@ class ShardedSearchSession(SearchSession):
     def _build_runtimes(self) -> None:
         self.sharded = ShardedIndex(self.index, plan=self._resolve_plan())
         shard_views = self.sharded.shard_views()
+        self._shard_codes = {}
+        if self._use_codes:
+            # device codes aligned with global segment ordinals; each
+            # shard's rung sees only its own segments' code arrays
+            for si, shard in enumerate(shard_views):
+                if shard:
+                    self._shard_codes[si] = tuple(
+                        self._codes_dev[g] for g, _ in shard
+                    )
         self._runtimes = {}
         for b in self.buckets:
             scales = self._shard_scales(shard_views, b)
+            rerank = self._global_rerank(shard_views, b)
             parts = []
             for si, (shard, mesh, scale) in enumerate(
                 zip(shard_views, self.sharded._meshes, scales)
@@ -147,13 +158,17 @@ class ShardedSearchSession(SearchSession):
                 rt = make_bucket_runtime(
                     mesh, self.index.n_leaves,
                     tuple(v for _, v in shard), b,
-                    k=self.k, probes=self.probes, layout=self.layout,
+                    k=self.k, probes=self.probes,
+                    layout=self.serving_layout,
                     impl=self.impl,
                     ordinals=tuple(g for g, _ in shard),
                     emit_slots=True,
                     cost_model=self.cost_model,
                     calibration=self.index.calibration,
                     slab_scale=scale,
+                    rerank=rerank,
+                    codes=self._shard_codes.get(si),
+                    codebooks=self._codebooks_dev,
                 )
                 parts.append((si, tuple(v for _, v in shard), rt))
             primary = max(
@@ -173,6 +188,32 @@ class ShardedSearchSession(SearchSession):
                 ),
             )
 
+    def _global_rerank(self, shard_views, bucket: int) -> int | None:
+        """One uniform ADC candidate width for EVERY shard's rung at this
+        bucket: each segment's plan clamps ``rerank`` to its own
+        ``block_rows``, and the gather's slot arithmetic (``ordinal *
+        width + column``) only stays a global total order when every
+        shard emits the same width — the min across all segments is
+        valid everywhere. ``None`` on dense tiers."""
+        if not self._use_codes:
+            return None
+        pq = self.index.quantizer
+        widths = []
+        for shard, mesh in zip(shard_views, self.sharded._meshes):
+            ns = data_axis_size(mesh)
+            for _, view in shard:
+                p = make_plan(
+                    rows=view.rows, n_leaves=self.index.n_leaves,
+                    n_queries=bucket, n_shards=ns, k=self.k,
+                    probes=self.probes, layout="scan_codes",
+                    impl=self.impl, model=self.cost_model,
+                    calibration=self.index.calibration,
+                    dim=self.index.dim, rerank=self.rerank,
+                    code_m=pq.m, code_bits=pq.bits,
+                )
+                widths.append(p.rerank)
+        return min(widths)
+
     def _shard_scales(self, shard_views, bucket: int) -> list[float]:
         """Per-shard slab-headroom multipliers for one bucket rung —
         the shared :func:`repro.index.sharding.fitted_shard_scales`
@@ -189,7 +230,12 @@ class ShardedSearchSession(SearchSession):
         return fitted_shard_scales(
             self.index, shard_views, self.sharded._meshes,
             cost_model=self.cost_model, n_queries=bucket, k=self.k,
-            probes=self.probes, layout=self.layout, impl=self.impl,
+            probes=self.probes,
+            # codes rungs budget like the dense point-major family; the
+            # probe plans only supply tile features, and grow-only scales
+            # keep any mispricing result-safe
+            layout="auto" if self._use_codes else self.layout,
+            impl=self.impl,
             max_scale=max_scale,
         )
 
@@ -245,8 +291,8 @@ class ShardedSearchSession(SearchSession):
             for rtb in self._runtimes.values():
                 dummy = jnp.zeros((rtb.bucket, d), jnp.float32)
                 outs = [
-                    rt.fn(views, self.tree, dummy, np.int32(0))
-                    for _, views, rt in rtb.parts
+                    self._dispatch_shard(si, rt, views, dummy, np.int32(0))
+                    for si, views, rt in rtb.parts
                 ]
                 for res, leaves, _slots in outs:
                     jax.block_until_ready((res.ids, leaves))
@@ -256,6 +302,14 @@ class ShardedSearchSession(SearchSession):
         return dt_ms
 
     # -- serve path ----------------------------------------------------------
+    def _dispatch_shard(self, si, rt, views, buf, n_valid):
+        """Invoke one shard's fused pipeline (codes rungs take that
+        shard's device codes + the codebook table as extra args)."""
+        if rt.rerank is not None:
+            return rt.fn(views, self._shard_codes[si],
+                         self._codebooks_dev, self.tree, buf, n_valid)
+        return rt.fn(views, self.tree, buf, n_valid)
+
     def _execute(
         self, queries: np.ndarray, *, n_images: int | None = None
     ) -> tuple[np.ndarray, np.ndarray, np.ndarray, float]:
@@ -288,7 +342,7 @@ class ShardedSearchSession(SearchSession):
                     rows=sum(int(v.rows) for v in views),
                     segments=len(views),
                 ):
-                    out = rt.fn(views, self.tree, jbuf, nv)
+                    out = self._dispatch_shard(si, rt, views, jbuf, nv)
                     jax.block_until_ready(
                         (out[0].ids, out[0].dists, out[2], out[1])
                     )
@@ -298,8 +352,8 @@ class ShardedSearchSession(SearchSession):
             # gather — on disjoint device groups the scans overlap; on one
             # device XLA runs them back to back with identical numerics
             outs = [
-                rt.fn(views, self.tree, jbuf, nv)
-                for _, views, rt in rtb.parts
+                self._dispatch_shard(si, rt, views, jbuf, nv)
+                for si, views, rt in rtb.parts
             ]
             for res, leaves, slots in outs:
                 jax.block_until_ready((res.ids, res.dists, slots, leaves))
@@ -312,6 +366,10 @@ class ShardedSearchSession(SearchSession):
                 plan=signature_key(plan_signature(rtb.plan)),
                 cost_model=self.active_cost_model(),
             )
+        # codes rungs gather CANDIDATE tables (uniform width, slot-tagged,
+        # so the merged candidate set is shard-count-invariant), then one
+        # global exact rerank produces the final top-k
+        width = rtb.parts[0][2].rerank or self.k
         with tr.span("gather.merge", shards=len(rtb.parts), rows=n):
             ids, dists = gather_merge(
                 [
@@ -322,8 +380,15 @@ class ShardedSearchSession(SearchSession):
                     )
                     for res, _leaves, slots in outs
                 ],
-                self.k,
+                width,
             )
+        if self._use_codes:
+            t_r = time.perf_counter()
+            with tr.span("engine.rerank", k=self.k, candidates=width):
+                ids, dists = rerank_exact(
+                    self.index.read_rows, queries, ids, self.k
+                )
+            dt += time.perf_counter() - t_r
         # every shard routes the same queries through the same tree; shard
         # 0's probe-leaf matrix is THE routing (the broadcast analog)
         leaves_np = np.asarray(outs[0][1][:n])
@@ -337,8 +402,10 @@ class ShardedSearchSession(SearchSession):
             self._record_calibration(rtb, dt * 1e3 / n_images)
             # measured engine cost refines the cache's eviction score
             self.cache.note_engine_cost(dt * 1e3 / n_images)
-        # a starved dispatch must not seed the cache (see SearchSession)
-        self.cache.record(queries, leaves_np, exact=overflow == 0)
+        if not self._use_codes:
+            # a starved dispatch must not seed the cache (see
+            # SearchSession; codes sessions never seed it at all)
+            self.cache.record(queries, leaves_np, exact=overflow == 0)
         return ids, dists, leaves_np, dt
 
     # -- reporting ------------------------------------------------------------
@@ -366,6 +433,7 @@ class ShardedSearchSession(SearchSession):
                 "q_cap": rtb.plan.q_cap,
                 "q_tile": rtb.plan.q_tile,
                 "p_cap": rtb.plan.p_cap,
+                "rerank": rtb.plan.rerank,
                 "segments": len(rtb.plans),
                 "shards": len(rtb.parts),
             }
