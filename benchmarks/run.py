@@ -90,6 +90,12 @@ def smoke() -> int:
     rc = serving_bench.codes_smoke()
     if rc != 0:
         return rc
+    print("# smoke: dynamicity (serve while a writer appends + "
+          "incrementally compacts: 0 drops, 0 recompiles, bounded p95, "
+          "final == fresh open)", file=sys.stderr)
+    rc = serving_bench.dynamicity_smoke()
+    if rc != 0:
+        return rc
     print("# smoke: observability (traced == untraced bit-identity, "
           "Chrome trace, registry, tracereport)", file=sys.stderr)
     return serving_bench.obs_smoke()

@@ -26,10 +26,14 @@ python -m pytest -x -q
 # benchmarks.serving --slo-smoke), the compressed-codes gate (train ->
 # commit -> reopen -> plan(auto) picks scan_codes -> ADC scan + exact
 # rerank meets the recall floor at >=8x fewer resident bytes; standalone:
-# benchmarks.serving --codes-smoke), and the observability gate (traced ==
-# untraced bit-identity at 2 shards, valid Chrome trace, registry dump,
-# tracereport; standalone: benchmarks.serving --obs-smoke)
-echo "== serve smoke (both layouts, --probes 2) + lifecycle + session + calibration + shard + SLO + codes + obs gates =="
+# benchmarks.serving --codes-smoke), the dynamicity gate (serve a trace
+# while a writer thread appends + incrementally compacts: 0 dropped
+# requests, 0 steady-state recompiles, p95 within 2x of a frozen baseline,
+# final results bit-identical to a fresh open; standalone:
+# benchmarks.serving --dynamicity-smoke), and the observability gate
+# (traced == untraced bit-identity at 2 shards, valid Chrome trace,
+# registry dump, tracereport; standalone: benchmarks.serving --obs-smoke)
+echo "== serve smoke (both layouts, --probes 2) + lifecycle + session + calibration + shard + SLO + codes + dynamicity + obs gates =="
 python -m benchmarks.run --smoke
 
 echo "== serving CLI smoke (zipf trace, hot-leaf cache, recompile gate) =="

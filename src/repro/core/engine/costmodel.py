@@ -34,6 +34,7 @@ module-level default store exists for the eager/legacy paths
 from __future__ import annotations
 
 import dataclasses
+import threading
 
 import numpy as np
 
@@ -133,6 +134,10 @@ class CalibrationStore:
         self._dirty = False
         self._seq = 0  # bumps on every mutation; also the fit-cache key
         self._fit_cache: dict[int, tuple[int, dict]] = {}
+        # a serving session records between dispatches while a writer
+        # thread's commit serializes the store into the manifest
+        # (docs/dynamicity.md): guard every dict mutation/iteration
+        self._mu = threading.RLock()
 
     @staticmethod
     def _key(plan, shapes: PlanShapes | None) -> tuple:
@@ -153,56 +158,60 @@ class CalibrationStore:
             the observation to participate in the fitted model.
         """
         ms = float(ms_per_image)
-        o = self._records.setdefault(
-            self._key(plan, shapes),
-            {"count": 0, "total_ms": 0.0, "min_ms": ms, "max_ms": ms,
-             "last_ms": ms,
-             "shapes": shapes.to_json() if shapes is not None else None},
-        )
-        o["count"] += 1
-        o["total_ms"] += ms
-        o["min_ms"] = min(o["min_ms"], ms)
-        o["max_ms"] = max(o["max_ms"], ms)
-        o["last_ms"] = ms
-        self._seq += 1
-        o["seq"] = self._seq
-        self._dirty = True
+        with self._mu:
+            o = self._records.setdefault(
+                self._key(plan, shapes),
+                {"count": 0, "total_ms": 0.0, "min_ms": ms, "max_ms": ms,
+                 "last_ms": ms,
+                 "shapes": shapes.to_json() if shapes is not None else None},
+            )
+            o["count"] += 1
+            o["total_ms"] += ms
+            o["min_ms"] = min(o["min_ms"], ms)
+            o["max_ms"] = max(o["max_ms"], ms)
+            o["last_ms"] = ms
+            self._seq += 1
+            o["seq"] = self._seq
+            self._dirty = True
         from repro.obs import get_registry
 
         get_registry().counter("calibration.records").inc()
 
     def merge(self, other: "CalibrationStore") -> None:
         """Fold another store's records into this one (stats summed)."""
-        for key, o in other._records.items():
-            mine = self._records.get(key)
-            if mine is None:
-                self._seq += 1
-                self._records[key] = dict(o, seq=self._seq)
-            else:
-                mine["count"] += o["count"]
-                mine["total_ms"] += o["total_ms"]
-                mine["min_ms"] = min(mine["min_ms"], o["min_ms"])
-                mine["max_ms"] = max(mine["max_ms"], o["max_ms"])
-                mine["last_ms"] = o["last_ms"]
-                self._seq += 1
-                mine["seq"] = self._seq
-        if len(other):
-            self._dirty = True
+        with self._mu, other._mu:
+            for key, o in other._records.items():
+                mine = self._records.get(key)
+                if mine is None:
+                    self._seq += 1
+                    self._records[key] = dict(o, seq=self._seq)
+                else:
+                    mine["count"] += o["count"]
+                    mine["total_ms"] += o["total_ms"]
+                    mine["min_ms"] = min(mine["min_ms"], o["min_ms"])
+                    mine["max_ms"] = max(mine["max_ms"], o["max_ms"])
+                    mine["last_ms"] = o["last_ms"]
+                    self._seq += 1
+                    mine["seq"] = self._seq
+            if len(other):
+                self._dirty = True
 
     def clear(self) -> None:
-        if self._records:
-            self._dirty = True
-        self._records.clear()
-        self._seq += 1  # invalidate cached fits
+        with self._mu:
+            if self._records:
+                self._dirty = True
+            self._records.clear()
+            self._seq += 1  # invalidate cached fits
 
     # -- consultation -------------------------------------------------------
     def lookup(self, plan) -> dict | None:
         """Aggregated running stats recorded under ``plan``'s exact
         signature (folded across the shapes it was measured at)."""
         sig = plan_signature(plan)
-        return self._aggregate(
-            [o for (s, _), o in self._records.items() if s == sig]
-        )
+        with self._mu:
+            return self._aggregate(
+                [o for (s, _), o in self._records.items() if s == sig]
+            )
 
     @staticmethod
     def _aggregate(entries) -> dict | None:
@@ -245,9 +254,11 @@ class CalibrationStore:
         """Observations usable by the fit: ``(signature, stats, shapes)``
         for every record that carries shapes."""
         out = []
-        for (sig, _), o in self._records.items():
-            if o.get("shapes"):
-                out.append((sig, o, PlanShapes.from_json(o["shapes"])))
+        with self._mu:
+            for (sig, _), o in self._records.items():
+                if o.get("shapes"):
+                    out.append((sig, dict(o),
+                                PlanShapes.from_json(o["shapes"])))
         return out
 
     def __len__(self) -> int:
@@ -256,11 +267,13 @@ class CalibrationStore:
     def n_measurements(self) -> int:
         """Total recorded measurements (``len(self)`` counts distinct
         (signature, shapes) records; each folds many measurements)."""
-        return sum(o["count"] for o in self._records.values())
+        with self._mu:
+            return sum(o["count"] for o in self._records.values())
 
     def layouts(self) -> set:
         """The layouts with at least one recorded measurement."""
-        return {sig[0] for (sig, _) in self._records}
+        with self._mu:
+            return {sig[0] for (sig, _) in self._records}
 
     # -- persistence --------------------------------------------------------
     @property
@@ -275,8 +288,9 @@ class CalibrationStore:
         """JSON-ready view: signature key -> aggregated stats with a
         derived ``mean_ms`` (and the shapes measured under, when any)."""
         by_sig: dict[tuple, list[dict]] = {}
-        for (sig, _), o in self._records.items():
-            by_sig.setdefault(sig, []).append(o)
+        with self._mu:
+            for (sig, _), o in self._records.items():
+                by_sig.setdefault(sig, []).append(dict(o))
         out = {}
         for sig, entries in by_sig.items():
             agg = self._aggregate(entries)
@@ -289,16 +303,17 @@ class CalibrationStore:
 
     def to_json(self) -> dict:
         """Versioned manifest payload (``calibration`` field)."""
-        return {
-            "format": CALIBRATION_FORMAT,
-            "records": [
-                {"signature": list(sig),
-                 "stats": {k: v for k, v in o.items()
-                           if k not in ("shapes", "seq")},
-                 "shapes": o.get("shapes")}
-                for (sig, _), o in self._records.items()
-            ],
-        }
+        with self._mu:
+            return {
+                "format": CALIBRATION_FORMAT,
+                "records": [
+                    {"signature": list(sig),
+                     "stats": {k: v for k, v in o.items()
+                               if k not in ("shapes", "seq")},
+                     "shapes": o.get("shapes")}
+                    for (sig, _), o in self._records.items()
+                ],
+            }
 
     @classmethod
     def from_json(cls, d: dict | None) -> "CalibrationStore":

@@ -9,7 +9,9 @@ deprecation shims around it. See docs/index_lifecycle.md.
 """
 
 from repro.index.lifecycle import (  # noqa: F401
+    CompactionPolicy,
     Index,
+    IndexSnapshot,
     has_index,
     has_legacy_index,
 )

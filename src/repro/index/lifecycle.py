@@ -32,8 +32,10 @@ tombstones); a fresh ``open`` sees only the last committed manifest.
 
 from __future__ import annotations
 
+import dataclasses
 import os
 import shutil
+import threading
 from typing import Sequence
 
 import jax
@@ -54,7 +56,13 @@ from repro.distributed.checkpoint import CheckpointManager
 from repro.distributed.meshutil import data_axis_size, local_mesh
 from repro.index import manifest as manifest_lib
 from repro.index.manifest import Manifest
-from repro.index.segment import Segment, masked_view, next_seq, segment_name
+from repro.index.segment import (
+    Segment,
+    dead_counts,
+    masked_view,
+    next_seq,
+    segment_name,
+)
 from repro.index.sharding import ShardPlan
 from repro.obs import get_registry, get_tracer
 
@@ -100,6 +108,91 @@ def _load_tree(directory: str, mesh) -> tuple[VocabTree, dict]:
     }
     out, _ = mgr.restore(skeleton, step, shardings=shardings)
     return out["tree"], meta
+
+
+@dataclasses.dataclass(frozen=True)
+class CompactionPolicy:
+    """When an *incremental* compaction step merges which segments.
+
+    ``Index.compact(incremental=True)`` asks the policy for one batch of
+    victims per call instead of merging everything:
+
+      1. **Tombstone reclamation first** — any segment whose dead/valid
+         ratio is at least ``tombstone_ratio`` is rewritten now; a
+         delete-heavy segment is reclaimed within one step regardless of
+         its size tier.
+      2. **Smallest size tier** — otherwise the segments whose live-row
+         counts sit within ``size_tier_factor`` of the smallest one are
+         merged (classic size-tiered compaction: many small segments fold
+         into one medium one, medium ones later fold into a big one, so
+         total merge work stays O(n log n) rows instead of O(n^2)).
+
+    A tier smaller than ``min_tier_segments`` is left alone — a fully
+    compacted index is a fixed point and the step publishes nothing.
+    ``max_segments_per_step`` bounds the rows any single step rewrites,
+    which bounds the stall a serving session could observe.
+    """
+
+    size_tier_factor: float = 4.0
+    min_tier_segments: int = 2
+    tombstone_ratio: float = 0.25
+    max_segments_per_step: int = 8
+
+    def select(
+        self, segments: Sequence[Segment], tombstones: np.ndarray
+    ) -> list[Segment]:
+        """The victims of one incremental step, in index order (possibly
+        empty). Pure function of committed state — callers may dry-run it."""
+        segments = list(segments)
+        if not segments:
+            return []
+        dead = dead_counts(segments, tombstones)
+        heavy = {
+            s.name
+            for s, d in zip(segments, dead)
+            if s.valid_rows and d / s.valid_rows >= self.tombstone_ratio
+        }
+        if heavy:
+            victims = [s for s in segments if s.name in heavy]
+            return victims[: self.max_segments_per_step]
+        live = {
+            s.name: int(s.valid_rows - d) for s, d in zip(segments, dead)
+        }
+        order = sorted(segments, key=lambda s: (live[s.name], s.name))
+        tier = [order[0]]
+        for s in order[1:]:
+            if live[s.name] <= self.size_tier_factor * max(
+                1, live[tier[0].name]
+            ):
+                tier.append(s)
+            else:
+                break
+        if len(tier) < self.min_tier_segments:
+            return []
+        chosen = {s.name for s in tier[: self.max_segments_per_step]}
+        return [s for s in segments if s.name in chosen]
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexSnapshot:
+    """One consistent, immutable cut of an :class:`Index`'s state.
+
+    Serving sessions pin a snapshot and keep answering from it while the
+    writer appends/deletes/compacts underneath — every array here is
+    either immutable (segments, views) or a private copy (tombstones),
+    so a pinned reader never observes a half-applied mutation. ``stamp``
+    is the index's monotone mutation counter: equal stamps mean nothing
+    changed, which is how ``maybe_refresh()`` stays O(1) when idle.
+    """
+
+    stamp: int
+    version: int
+    segments: tuple[Segment, ...]
+    views: tuple[DistributedIndex, ...]
+    tombstones: np.ndarray
+    shard_plan: ShardPlan | None
+    quantizer: ProductQuantizer | None
+    codes: dict
 
 
 class Index:
@@ -156,6 +249,12 @@ class Index:
         self._meta_dirty = False
         self._views: tuple[DistributedIndex, ...] | None = None
         self._mem_seq = 0  # segment naming for ephemeral (dir-less) indexes
+        # single-writer / many-pinned-reader support: the lock guards the
+        # (cheap) memory-state swaps, never the expensive builds; the stamp
+        # is bumped by every mutation so snapshot holders can detect
+        # staleness in O(1) (see IndexSnapshot / SearchSession.maybe_refresh)
+        self._lock = threading.RLock()
+        self._stamp = 0
 
     # -- construction -------------------------------------------------------
     @classmethod
@@ -332,6 +431,33 @@ class Index:
         return self._next_id
 
     @property
+    def stamp(self) -> int:
+        """Monotone mutation counter: bumped by every append / delete /
+        meta / plan / codes / commit / compact on this handle. Two equal
+        stamps mean the index state is unchanged between them."""
+        return self._stamp
+
+    def snapshot(self) -> "IndexSnapshot":
+        """A consistent :class:`IndexSnapshot` of the current state (this
+        handle's view: committed + staged). Taken under the writer lock,
+        so a concurrent mutator can never hand out a torn cut."""
+        with self._lock:
+            segs = self.segments
+            return IndexSnapshot(
+                stamp=self._stamp,
+                version=self._version,
+                segments=segs,
+                views=self.segment_views(),
+                tombstones=self._tombstones.copy(),
+                shard_plan=self._shard_plan,
+                quantizer=self.quantizer,
+                codes=(
+                    {s.name: self._codes[s.name] for s in segs}
+                    if self.quantizer is not None else {}
+                ),
+            )
+
+    @property
     def segments(self) -> tuple[Segment, ...]:
         """Committed + staged segments, in append order."""
         return tuple(self._committed) + tuple(self._staged)
@@ -369,8 +495,10 @@ class Index:
                 "shard plan does not cover the index's current segments; "
                 "derive one with ShardPlan.for_index"
             )
-        self._shard_plan = plan
-        self._shard_plan_dirty = True
+        with self._lock:
+            self._shard_plan = plan
+            self._shard_plan_dirty = True
+            self._stamp += 1
 
     # -- compressed-codes tier ----------------------------------------------
     def enable_codes(
@@ -408,15 +536,16 @@ class Index:
             raise ValueError("enable_codes needs at least one indexed row")
         with get_tracer().span("index.enable_codes", rows=train.shape[0],
                                m=m, bits=bits):
-            self.quantizer = ProductQuantizer.train(
+            pq = ProductQuantizer.train(
                 train, m=m, bits=bits, seed=seed, sample=sample, iters=iters
             )
-            self._codes = {
-                seg.name: self.quantizer.encode(seg.host_vecs())
-                for seg in segs
-            }
-        self._codes_paths = {}
-        self._codes_dirty = True
+            codes = {seg.name: pq.encode(seg.host_vecs()) for seg in segs}
+        with self._lock:
+            self.quantizer = pq
+            self._codes = codes
+            self._codes_paths = {}
+            self._codes_dirty = True
+            self._stamp += 1
         return self.quantizer
 
     def codes_stats(self) -> dict | None:
@@ -642,21 +771,28 @@ class Index:
         seg = Segment.from_built(name or self._next_name(), built)
         if self.directory:
             seg.save(self._segments_dir())  # durable *before* it is staged
-        self._staged.append(seg)
+        new_codes = None
         if self.quantizer is not None:
             # the codes tier follows every append: encode the new segment's
             # padded rows (pad rows carry the LEAF_SENTINEL and never match)
-            self._codes[seg.name] = self.quantizer.encode(seg.host_vecs())
-            self._codes_dirty = True
-        self._next_id = max(self._next_id, seg.max_id + 1)
-        self._views = None
+            new_codes = self.quantizer.encode(seg.host_vecs())
+        with self._lock:
+            self._staged.append(seg)
+            if new_codes is not None:
+                self._codes[seg.name] = new_codes
+                self._codes_dirty = True
+            self._next_id = max(self._next_id, seg.max_id + 1)
+            self._views = None
+            self._stamp += 1
         return seg.name
 
     def update_meta(self, **kw) -> None:
         """Stage user-metadata updates (e.g. an ingest cursor); durable at
         the next :meth:`commit` alongside whatever else is staged."""
-        self._user_meta.update(kw)
-        self._meta_dirty = True
+        with self._lock:
+            self._user_meta.update(kw)
+            self._meta_dirty = True
+            self._stamp += 1
 
     def delete(self, ids) -> int:
         """Tombstone descriptor ids (staged; durable after :meth:`commit`).
@@ -676,10 +812,16 @@ class Index:
             ids = ids[np.isin(ids, self._existing_ids(within=ids))]
         if ids.size == 0:
             return 0
-        self._tombstones = np.sort(np.concatenate([self._tombstones, ids]))
-        self._tombstones_dirty = True
-        self._views = None
-        get_registry().counter("index.tombstoned").inc(int(ids.size))
+        with self._lock:
+            self._tombstones = np.sort(
+                np.concatenate([self._tombstones, ids])
+            )
+            self._tombstones_dirty = True
+            self._views = None
+            self._stamp += 1
+        reg = get_registry()
+        reg.counter("index.tombstoned").inc(int(ids.size))
+        reg.gauge("index.tombstones_live").set(int(self._tombstones.size))
         return int(ids.size)
 
     def commit(self) -> int:
@@ -738,31 +880,57 @@ class Index:
                                    shard_plan=plan),
                 )
         get_registry().counter("index.commits").inc()
-        self._version = version
-        self._committed = segments
-        self._staged = []
-        self._shard_plan = plan
-        self._tombstones_dirty = False
-        self._meta_dirty = False
-        self._shard_plan_dirty = False
-        self._codes_dirty = False
-        self.calibration.mark_clean()
+        with self._lock:
+            self._version = version
+            self._committed = segments
+            self._staged = []
+            self._shard_plan = plan
+            self._tombstones_dirty = False
+            self._meta_dirty = False
+            self._shard_plan_dirty = False
+            self._codes_dirty = False
+            self.calibration.mark_clean()
+            self._stamp += 1
         return version
 
-    def compact(self) -> str | None:
-        """Merge every segment into one, dropping tombstoned rows.
+    def compact(
+        self,
+        incremental: bool = False,
+        policy: CompactionPolicy | None = None,
+    ) -> str | None:
+        """Merge segments into one, dropping their tombstoned rows.
 
-        Surviving rows are re-sorted by descriptor id before the rebuild,
-        so the compacted segment is the index a from-scratch
-        ``build_index`` over the remaining corpus (in original append
-        order) would produce — arrays and all. Commits atomically; old
-        segment checkpoints are garbage-collected only after the manifest
-        bump; a bound derivable shard plan is re-derived over the single
-        new segment (explicit plans are dropped).
+        ``compact()`` merges *every* segment (the stop-the-world full
+        merge); ``compact(incremental=True)`` asks the
+        :class:`CompactionPolicy` for one tier of small or
+        tombstone-heavy segments and merges only those — surviving
+        segments, their codes files, and the tombstones that belong to
+        them are carried through untouched, so each step is a small,
+        bounded unit of work that can run between serving refreshes.
+        Either way the step publishes through the same stage-then-publish
+        manifest path an append commit uses, and search results are
+        bit-identical before and after (victims' live rows reappear,
+        id-sorted, in the merged segment at the first victim's position;
+        masking already made their dead rows unmatchable).
+
+        Commits atomically; victim segment checkpoints are
+        garbage-collected only after the manifest bump; a bound derivable
+        shard plan is re-derived over the new segment set (explicit plans
+        are dropped).
+
+        Args:
+          incremental: merge only the policy-selected tier instead of
+            everything.
+          policy: the :class:`CompactionPolicy` an incremental step
+            consults (default: ``CompactionPolicy()``); ignored for a
+            full compact.
 
         Returns:
-          The new segment's name, or ``None`` for an index with no live
-          rows.
+          The new merged segment's name; ``None`` when no merged segment
+          was produced — the victims had no live rows (their space is
+          still reclaimed and a version published), or, for an
+          incremental step, no tier crossed the policy's thresholds (a
+          fixed point: nothing is published at all).
 
         Raises:
           FileExistsError: a concurrent commit won the version race.
@@ -772,8 +940,16 @@ class Index:
         tr = get_tracer()
         t_start = tr.now() if tr.enabled else 0.0
         old = self.segments
+        if incremental:
+            pol = policy if policy is not None else CompactionPolicy()
+            victims = pol.select(old, self._tombstones)
+            if not victims:
+                return None
+        else:
+            victims = list(old)
+        victim_names = {s.name for s in victims}
         keep_v, keep_i = [], []
-        for seg in old:
+        for seg in victims:
             ids = np.asarray(seg.index.ids).astype(np.int64)
             live = ids >= 0
             if self._tombstones.size:
@@ -789,7 +965,7 @@ class Index:
         # replaced once the new manifest exists, so a failed rebuild
         # leaves segments AND tombstones exactly as they were
         if all_i.size == 0:
-            new_committed = []
+            merged: list[Segment] = []
         else:
             built = build_index(
                 jnp.asarray(all_v[order], jnp.float32),
@@ -802,54 +978,99 @@ class Index:
             seg = Segment.from_built(self._next_name(), built)
             if self.directory:
                 seg.save(self._segments_dir())
-            new_committed = [seg]
+            merged = [seg]
+        # survivors keep their order; the merged segment takes the first
+        # victim's slot, so the cross-segment merge visits candidates in
+        # the same segment-major order as before (stable on ties)
+        new_committed: list[Segment] = []
+        placed = False
+        for s in old:
+            if s.name in victim_names:
+                if not placed:
+                    new_committed.extend(merged)
+                    placed = True
+                continue
+            new_committed.append(s)
+        if not placed:
+            new_committed.extend(merged)
+        # tombstones pointing into the victims died with them; the rest
+        # (ids living in surviving segments) stay masked
+        new_tombstones = np.empty((0,), np.int64)
+        if incremental and self._tombstones.size:
+            survivors = [s for s in old if s.name not in victim_names]
+            keep_ts = np.zeros(self._tombstones.shape, bool)
+            for s in survivors:
+                if not s.valid_rows or not s.overlaps(self._tombstones):
+                    continue
+                sorted_ids, _ = s.id_index()
+                pos = np.searchsorted(sorted_ids, self._tombstones)
+                keep_ts |= (pos < sorted_ids.size) & (
+                    sorted_ids[np.minimum(pos, sorted_ids.size - 1)]
+                    == self._tombstones
+                )
+            new_tombstones = self._tombstones[keep_ts]
         new_codes, new_codes_paths = self._codes, self._codes_paths
         if self.quantizer is not None:
             # the quantizer survives compaction unchanged (codebooks are
-            # trained, not positional); only the codes are re-encoded for
-            # the merged segment's new row order
+            # trained, not positional); only the merged segment's codes
+            # are re-encoded — survivors keep their code files
             new_codes = {
-                s.name: self.quantizer.encode(s.host_vecs())
-                for s in new_committed
+                name: c for name, c in self._codes.items()
+                if name not in victim_names
             }
-            new_codes_paths = {}
+            for s in merged:
+                new_codes[s.name] = self.quantizer.encode(s.host_vecs())
+            new_codes_paths = {
+                name: p for name, p in self._codes_paths.items()
+                if name not in victim_names
+            }
             if self.directory:
-                new_codes_paths = {
-                    name: manifest_lib.write_codes(self.directory, name, c)
-                    for name, c in new_codes.items()
-                }
+                for s in new_committed:
+                    if s.name not in new_codes_paths:
+                        new_codes_paths[s.name] = manifest_lib.write_codes(
+                            self.directory, s.name, new_codes[s.name]
+                        )
         version = self._version + 1
         plan = self._plan_for(new_committed)
         if self.directory:
+            rel = None
+            if new_tombstones.size:
+                rel = manifest_lib.write_tombstones(
+                    self.directory, version, new_tombstones
+                )
             manifest_lib.write(
                 self.directory,
-                self._manifest(None, version=version,
+                self._manifest(rel, version=version,
                                segments=new_committed, shard_plan=plan,
                                codes_paths=new_codes_paths),
             )
-        self._committed = new_committed
-        self._staged = []
-        self._shard_plan = plan
-        self._shard_plan_dirty = False
-        self._tombstones = np.empty((0,), np.int64)
-        self._tombstones_dirty = False
-        self._meta_dirty = False
-        self._codes = new_codes
-        self._codes_paths = new_codes_paths
-        self._codes_dirty = False
-        self.calibration.mark_clean()
-        self._version = version
-        self._views = None
+        with self._lock:
+            self._committed = new_committed
+            self._staged = []
+            self._shard_plan = plan
+            self._shard_plan_dirty = False
+            self._tombstones = new_tombstones
+            self._tombstones_dirty = False
+            self._meta_dirty = False
+            self._codes = new_codes
+            self._codes_paths = new_codes_paths
+            self._codes_dirty = False
+            self.calibration.mark_clean()
+            self._version = version
+            self._views = None
+            self._stamp += 1
         if self.directory:
             self._gc_segments(old)
         if tr.enabled:
             tr.add_span(
                 "index.compact", t_start, tr.now(),
-                segments_in=len(old), rows_out=int(all_i.size),
-                version=version,
+                segments_in=len(victims), rows_out=int(all_i.size),
+                version=version, incremental=bool(incremental),
             )
-        get_registry().counter("index.compacts").inc()
-        return new_committed[0].name if new_committed else None
+        reg = get_registry()
+        reg.counter("index.compacts").inc()
+        reg.gauge("index.tombstones_live").set(int(new_tombstones.size))
+        return merged[0].name if merged else None
 
     def _gc_segments(self, old: Sequence[Segment]) -> None:
         live = {s.name for s in self._committed}
@@ -868,8 +1089,82 @@ class Index:
             except OSError:
                 pass
 
+    def gc(self, *, dry_run: bool = False) -> dict:
+        """Collect artifacts unreachable from the newest *on-disk* manifest:
+        superseded manifest versions, orphan segment checkpoints from
+        interrupted appends/compactions, unreferenced tombstone/code
+        files, and stray ``*.tmp`` files from crashed publications.
+
+        This handle's own staged (not-yet-committed) segments are never
+        collected — only orphans no live handle can still publish.
+        Removing an orphan segment directory un-reserves its name;
+        that is safe because its code file (if any) is removed in the
+        same pass.
+
+        Args:
+          dry_run: report what *would* be removed without touching disk.
+
+        Returns:
+          ``{"manifests": [...], "segments": [...], "tombstones": [...],
+          "codes": [...], "tmp": [...]}`` — relative paths, collected (or
+          merely listed, under ``dry_run``). All lists empty for an
+          ephemeral index.
+        """
+        report: dict[str, list[str]] = {
+            "manifests": [], "segments": [], "tombstones": [],
+            "codes": [], "tmp": [],
+        }
+        d = self.directory
+        if not d:
+            return report
+        m = manifest_lib.latest(d)
+        if m is None:
+            return report
+        keep_segments = set(m.segments) | {s.name for s in self._staged}
+        keep_files = {m.tombstones} if m.tombstones else set()
+        if m.codes:
+            keep_files |= set(m.codes.get("segments", {}).values())
+        for v in manifest_lib.list_versions(d):
+            if v != m.version:
+                report["manifests"].append(
+                    os.path.basename(manifest_lib.manifest_path(d, v))
+                )
+        seg_dir = os.path.join(d, manifest_lib.SEGMENTS_SUBDIR)
+        if os.path.isdir(seg_dir):
+            for name in sorted(os.listdir(seg_dir)):
+                if name.startswith("seg_") and name not in keep_segments:
+                    report["segments"].append(
+                        os.path.join(manifest_lib.SEGMENTS_SUBDIR, name)
+                    )
+        for sub, key in (
+            (manifest_lib.TOMBSTONES_SUBDIR, "tombstones"),
+            (manifest_lib.CODES_SUBDIR, "codes"),
+        ):
+            p = os.path.join(d, sub)
+            if not os.path.isdir(p):
+                continue
+            for name in sorted(os.listdir(p)):
+                rel = os.path.join(sub, name)
+                if name.endswith(".tmp"):
+                    report["tmp"].append(rel)
+                elif rel not in keep_files:
+                    report[key].append(rel)
+        for name in sorted(os.listdir(d)):
+            if name.endswith(".tmp") and os.path.isfile(os.path.join(d, name)):
+                report["tmp"].append(name)
+        if not dry_run:
+            for rel in report["segments"]:
+                shutil.rmtree(os.path.join(d, rel), ignore_errors=True)
+            for key in ("manifests", "tombstones", "codes", "tmp"):
+                for rel in report[key]:
+                    try:
+                        os.remove(os.path.join(d, rel))
+                    except OSError:
+                        pass
+        return report
+
     # -- read path ----------------------------------------------------------
-    def read_rows(self, ids) -> np.ndarray:
+    def read_rows(self, ids, *, segments=None, tombstones=None) -> np.ndarray:
         """Host gather of stored descriptor vectors by id — the corpus
         rows live inside the segments, so anything that consumes a
         ``read_rows``/``dim`` block store (e.g. the serving trace
@@ -886,7 +1181,18 @@ class Index:
         deduplicated to one *sorted* unique set, each segment is gathered
         at most once, and results scatter back to the request order — the
         rerank fetch path hands whole candidate tables here without
-        pre-sorting."""
+        pre-sorting.
+
+        ``segments`` / ``tombstones`` override the live state with a
+        pinned :class:`IndexSnapshot`'s cut — serving sessions rerank
+        against the exact state their candidates came from, so a
+        concurrent delete or compaction can never make an in-flight
+        request's candidate id unreadable."""
+        segs = self.segments if segments is None else tuple(segments)
+        ts = (
+            self._tombstones if tombstones is None
+            else np.asarray(tombstones, np.int64)
+        )
         ids = np.atleast_1d(np.asarray(ids, np.int64))
         if ids.size and ids.min() < 0:
             # never let a requested -1 match a padding row's -1 id
@@ -896,7 +1202,7 @@ class Index:
         uniq, inverse = np.unique(ids, return_inverse=True)
         u_out = np.empty((uniq.size, self.dim), np.float32)
         u_found = np.zeros(uniq.size, bool)
-        for seg in self.segments:
+        for seg in segs:
             if u_found.all() or not seg.overlaps(uniq):
                 continue
             sorted_ids, order = seg.id_index()
@@ -909,8 +1215,8 @@ class Index:
             if hit.any():
                 u_out[hit] = seg.host_vecs()[order[pos[hit]]]
                 u_found |= hit
-        if self._tombstones.size:
-            u_found &= ~np.isin(uniq, self._tombstones)
+        if ts.size:
+            u_found &= ~np.isin(uniq, ts)
         if not u_found.all():
             found = u_found[inverse]
             missing = ids[~found]
@@ -1025,7 +1331,43 @@ class Index:
             use_codes = agg.layout == "scan_codes"
         lookup = jit_build_lookup(self.tree, queries, probes=probes)
         per = []
-        for seg, view in zip(self.segments, views):
+        pruned = 0
+        segs_all = self.segments
+        live_counts = np.array(
+            [s.valid_rows for s in segs_all], np.int64
+        ) - dead_counts(segs_all, self._tombstones)
+        # dense-tier norm-bound pruning: a segment whose valid rows' L2
+        # norms all sit outside [kth_dist - margin] of every query's
+        # running top-k cannot contribute (||p - q||^2 >= (||p|| - ||q||)^2)
+        # — result-safe by construction, and only exact dense distances
+        # qualify (ADC distances are approximations, so the codes tier
+        # never norm-prunes). Tracking the running top-k forces each
+        # segment's result before the next dispatch, which is the price of
+        # the bound; skipped entirely when no segment carries norm stats.
+        q_norms = best_d = None
+        if not use_codes and any(s.min_norm >= 0.0 for s in segs_all):
+            q_norms = np.linalg.norm(np.asarray(queries, np.float64), axis=1)
+            best_d = np.full((q, k), np.inf)
+        for i, (seg, view) in enumerate(zip(segs_all, views)):
+            if live_counts[i] == 0:
+                # every row is padding or tombstoned: nothing to match
+                pruned += 1
+                continue
+            if (
+                best_d is not None
+                and seg.min_norm >= 0.0
+                and np.isfinite(best_d[:, -1]).all()
+            ):
+                gap = np.maximum(
+                    seg.min_norm - q_norms, q_norms - seg.max_norm
+                )
+                lb = np.maximum(gap, 0.0) ** 2
+                # margin absorbs fp32 accumulation error in the exact
+                # distances (~1e-7 relative; 1e-4 is overwhelmingly safe)
+                margin = 1e-4 * (seg.max_norm + q_norms) ** 2 + 1e-6
+                if (lb > best_d[:, -1] + margin).all():
+                    pruned += 1
+                    continue
             if use_codes:
                 p = make_plan(
                     rows=view.rows, n_leaves=self.n_leaves, n_queries=q,
@@ -1061,6 +1403,24 @@ class Index:
             )
             per.append(
                 search_with_lookup(view, lookup, p, self.mesh, n_queries=q)
+            )
+            if best_d is not None:
+                best_d = np.sort(
+                    np.concatenate(
+                        [best_d, np.asarray(per[-1].dists, np.float64)],
+                        axis=1,
+                    ),
+                    axis=1,
+                )[:, :k]
+        if pruned:
+            get_registry().counter("index.segments_pruned").inc(pruned)
+        if not per:
+            # every segment was pruned — same sentinel as an empty index
+            return SearchResult(
+                ids=jnp.full((q, k), -1, jnp.int32),
+                dists=jnp.full((q, k), jnp.inf, jnp.float32),
+                pairs=jnp.zeros((), jnp.float32),
+                q_cap_overflow=jnp.zeros((), jnp.int32),
             )
         if use_codes:
             r_max = max(r.ids.shape[1] for r in per)

@@ -121,17 +121,24 @@ def write(directory: str, manifest: Manifest) -> str:
     ``FileExistsError`` if the version was already published) — so two
     handles racing to commit the same next version cannot silently
     overwrite each other's manifest and orphan committed segments; the
-    loser gets an error and must re-open.
+    loser gets an error and must re-open. The one benign collision — the
+    same handle retrying a commit that crashed *after* the link landed —
+    re-publishes identical bytes (``json.dump`` is deterministic over the
+    same state) and passes through.
     """
     final = manifest_path(directory, manifest.version)
     tmp = final + ".tmp"
+    payload = json.dumps(manifest.to_json(), indent=1)
     with open(tmp, "w") as f:
-        json.dump(manifest.to_json(), f, indent=1)
+        f.write(payload)
         f.flush()
         os.fsync(f.fileno())
     try:
         os.link(tmp, final)
     except FileExistsError:
+        with open(final) as f:
+            if f.read() == payload:
+                return final  # same handle retrying an interrupted commit
         raise FileExistsError(
             f"manifest version {manifest.version} already exists in "
             f"{directory} — another handle committed concurrently; reopen "

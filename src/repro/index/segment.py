@@ -67,6 +67,11 @@ class Segment:
     valid_rows: int  # rows with a real descriptor id
     min_id: int  # -1 when empty
     max_id: int  # -1 when empty
+    # L2 norm range of the *valid* rows — the dense-tier pruning bound
+    # (docs/dynamicity.md). -1.0 = unknown (segment written before these
+    # stats existed, or empty); pruning is skipped for such segments.
+    min_norm: float = -1.0
+    max_norm: float = -1.0
     _ids_np: object = dataclasses.field(default=None, repr=False,
                                         compare=False)
     _id_index: object = dataclasses.field(default=None, repr=False,
@@ -108,7 +113,16 @@ class Segment:
     @classmethod
     def from_built(cls, name: str, index: DistributedIndex) -> "Segment":
         ids = np.asarray(index.ids)
-        real = ids[ids >= 0]
+        valid = ids >= 0
+        real = ids[valid]
+        if real.size:
+            norms = np.linalg.norm(
+                np.asarray(index.vecs, np.float32)[valid].astype(np.float64),
+                axis=1,
+            )
+            min_norm, max_norm = float(norms.min()), float(norms.max())
+        else:
+            min_norm = max_norm = -1.0
         return cls(
             name=name,
             index=index,
@@ -116,6 +130,8 @@ class Segment:
             valid_rows=int(real.size),
             min_id=int(real.min()) if real.size else -1,
             max_id=int(real.max()) if real.size else -1,
+            min_norm=min_norm,
+            max_norm=max_norm,
         )
 
     @property
@@ -129,6 +145,8 @@ class Segment:
             "valid_rows": self.valid_rows,
             "min_id": self.min_id,
             "max_id": self.max_id,
+            "min_norm": self.min_norm,
+            "max_norm": self.max_norm,
             "n_shards": self.n_shards,
         }
 
@@ -180,7 +198,31 @@ class Segment:
             valid_rows=int(meta["valid_rows"]),
             min_id=int(meta.get("min_id", -1)),
             max_id=int(meta.get("max_id", -1)),
+            min_norm=float(meta.get("min_norm", -1.0)),
+            max_norm=float(meta.get("max_norm", -1.0)),
         )
+
+
+def dead_counts(segments, tombstones: np.ndarray) -> np.ndarray:
+    """Per-segment count of valid rows killed by ``tombstones`` (a sorted
+    array of unique ids — each id lives in exactly one segment, so the
+    counts partition the tombstone set). Feeds the compaction policy's
+    tombstone-ratio trigger and the search-time zero-live-segment prune.
+    """
+    out = np.zeros(len(segments), np.int64)
+    ts = np.asarray(tombstones, np.int64)
+    if ts.size == 0:
+        return out
+    for i, seg in enumerate(segments):
+        if not seg.overlaps(ts):
+            continue
+        sorted_ids, _ = seg.id_index()
+        pos = np.searchsorted(sorted_ids, ts)
+        hit = (pos < sorted_ids.size) & (
+            sorted_ids[np.minimum(pos, sorted_ids.size - 1)] == ts
+        )
+        out[i] = int(hit.sum())
+    return out
 
 
 # Tombstoned rows keep their leaf (CSR offsets stay valid) but get this

@@ -49,6 +49,8 @@ from repro.core.engine import (
 from repro.core.engine.executors import SearchResult
 from repro.core.search import jit_build_lookup, search_with_lookup
 from repro.distributed.meshutil import data_axis_size, shard_submeshes
+from repro.index.segment import dead_counts
+from repro.obs import get_registry
 
 STRATEGIES = ("round_robin", "balanced", "explicit")
 
@@ -328,6 +330,12 @@ class ShardedIndex:
     with an explicit ``plan``, or give ``n_shards`` (+ ``strategy``) to
     derive one; a persisted plan on the index is picked up when neither is
     given.
+
+    ``segments`` / ``views`` / ``codes`` / ``tombstones`` pin the scatter
+    to one :class:`~repro.index.lifecycle.IndexSnapshot`'s cut instead of
+    the index's live state — the read-during-write path: a serving
+    session's sharded runtimes and its rerank fetches keep resolving
+    against the pinned state while the index mutates underneath.
     """
 
     def __init__(
@@ -337,8 +345,21 @@ class ShardedIndex:
         *,
         n_shards: int | None = None,
         strategy: str = "round_robin",
+        segments=None,
+        views=None,
+        codes=None,
+        tombstones=None,
     ):
         self.index = index
+        self._pin_segments = (
+            tuple(segments) if segments is not None else None
+        )
+        self._pin_views = tuple(views) if views is not None else None
+        self._pin_codes = dict(codes) if codes is not None else None
+        self._pin_tombstones = (
+            np.asarray(tombstones, np.int64)
+            if tombstones is not None else None
+        )
         if plan is None:
             if n_shards is not None:
                 plan = ShardPlan.for_index(index, n_shards, strategy)
@@ -349,10 +370,10 @@ class ShardedIndex:
                     "need a ShardPlan, n_shards, or an index with a "
                     "persisted shard plan"
                 )
-        if not plan.covers([s.name for s in index.segments]):
+        if not plan.covers([s.name for s in self.segments]):
             raise ValueError(
                 "shard plan does not cover the index's current segments "
-                f"({plan.describe()} vs {index.n_segments} segments); "
+                f"({plan.describe()} vs {len(self.segments)} segments); "
                 "re-derive with plan.rederived(index)"
             )
         self.plan = plan
@@ -361,6 +382,32 @@ class ShardedIndex:
     @property
     def n_shards(self) -> int:
         return self.plan.n_shards
+
+    @property
+    def segments(self) -> tuple:
+        """The segment cut this view scatters over: the pinned snapshot's
+        when given, else the index's live committed + staged set."""
+        if self._pin_segments is not None:
+            return self._pin_segments
+        return tuple(self.index.segments)
+
+    def segment_views(self) -> tuple:
+        if self._pin_views is not None:
+            return self._pin_views
+        return tuple(self.index.segment_views())
+
+    @property
+    def tombstones(self) -> np.ndarray:
+        if self._pin_tombstones is not None:
+            return self._pin_tombstones
+        return self.index.tombstones
+
+    def _codes_for(self, name: str) -> np.ndarray:
+        codes = (
+            self._pin_codes if self._pin_codes is not None
+            else self.index._codes
+        )
+        return codes[name]
 
     def persist_plan(self) -> None:
         """Stage the plan into the index manifest (durable at the next
@@ -375,7 +422,7 @@ class ShardedIndex:
         by_name = {
             s.name: (g, v)
             for g, (s, v) in enumerate(
-                zip(self.index.segments, self.index.segment_views())
+                zip(self.segments, self.segment_views())
             )
         }
         return [
@@ -383,7 +430,7 @@ class ShardedIndex:
         ]
 
     def stats(self) -> dict:
-        segs = {s.name: s for s in self.index.segments}
+        segs = {s.name: s for s in self.segments}
         per = [
             {
                 "shard": s,
@@ -489,12 +536,20 @@ class ShardedIndex:
             )
         partials = []
         pairs = overflow = 0
+        pruned = 0
+        live = self._live_counts()
         for shard, mesh, scale in zip(views, self._meshes, scales):
             if not shard:
                 continue  # more shards than segments: an empty scatter leg
             n_shards = data_axis_size(mesh)
             per_seg, ordinals = [], []
             for g, view in shard:
+                if live[g] == 0:
+                    # every row is padding or tombstoned — the segment can
+                    # only emit (-1, inf) sentinels, so skipping it is
+                    # result-identical (same prune as Index.search)
+                    pruned += 1
+                    continue
                 p = make_plan(
                     rows=view.rows,
                     n_leaves=self.index.n_leaves,
@@ -526,9 +581,20 @@ class ShardedIndex:
                     search_with_lookup(view, lookup, p, mesh, n_queries=q)
                 )
                 ordinals.append(g)
+            if not per_seg:
+                continue  # every segment of this shard was pruned
             partials.append(shard_local_partial(per_seg, ordinals, k))
             pairs = pairs + sum(r.pairs for r in per_seg)
             overflow = overflow + sum(r.q_cap_overflow for r in per_seg)
+        if pruned:
+            get_registry().counter("index.segments_pruned").inc(pruned)
+        if not partials:
+            return SearchResult(
+                ids=jnp.full((q, k), -1, jnp.int32),
+                dists=jnp.full((q, k), jnp.inf, jnp.float32),
+                pairs=jnp.zeros((), jnp.float32),
+                q_cap_overflow=jnp.zeros((), jnp.int32),
+            )
         ids, dists = gather_merge(partials, k)
         return SearchResult(
             ids=jnp.asarray(ids),
@@ -536,6 +602,13 @@ class ShardedIndex:
             pairs=pairs,
             q_cap_overflow=overflow,
         )
+
+    def _live_counts(self) -> np.ndarray:
+        """Per-segment (global ordinal order) live-row counts under the
+        active tombstone cut — the zero-live prune's input."""
+        segs = self.segments
+        valid = np.array([s.valid_rows for s in segs], np.int64)
+        return valid - dead_counts(segs, self.tombstones)
 
     def _search_codes(
         self, queries, k, views, lookup, scales, *, probes, impl,
@@ -551,12 +624,18 @@ class ShardedIndex:
         q = queries.shape[0]
         shard_entries = []  # per shard: [(ordinal, SearchResult), ...]
         pairs = overflow = 0
+        pruned = 0
+        live = self._live_counts()
+        segs = self.segments
         for shard, mesh, scale in zip(views, self._meshes, scales):
             if not shard:
                 continue
             n_shards = data_axis_size(mesh)
             entries = []
             for g, view in shard:
+                if live[g] == 0:
+                    pruned += 1
+                    continue
                 p = make_plan(
                     rows=view.rows, n_leaves=self.index.n_leaves,
                     n_queries=q, n_shards=n_shards, k=k, probes=probes,
@@ -573,16 +652,25 @@ class ShardedIndex:
                         p, scale, n_queries=q,
                         shard_rows=view.rows // n_shards,
                     )
-                name = self.index.segments[g].name
                 res = search_with_lookup(
                     view, lookup, p, mesh, n_queries=q,
-                    codes=self.index._codes[name],
+                    codes=self._codes_for(segs[g].name),
                     codebooks=pq.codebooks,
                 )
                 entries.append((g, res))
                 pairs = pairs + res.pairs
                 overflow = overflow + res.q_cap_overflow
-            shard_entries.append(entries)
+            if entries:
+                shard_entries.append(entries)
+        if pruned:
+            get_registry().counter("index.segments_pruned").inc(pruned)
+        if not shard_entries:
+            return SearchResult(
+                ids=jnp.full((q, k), -1, jnp.int32),
+                dists=jnp.full((q, k), jnp.inf, jnp.float32),
+                pairs=jnp.zeros((), jnp.float32),
+                q_cap_overflow=jnp.zeros((), jnp.int32),
+            )
         # per-segment candidate widths can differ (rerank clamps to each
         # segment's block_rows); pad to one width so slots stay uniform
         r_max = max(
@@ -595,8 +683,14 @@ class ShardedIndex:
                 per_seg, [g for g, _ in entries], r_max
             ))
         cand_ids, _ = gather_merge(partials, r_max)
+        # rerank fetches resolve against the same (possibly pinned) cut
+        # the candidates came from — a concurrent delete cannot turn a
+        # candidate id into an IndexError mid-request
         ids_r, dists_r = rerank_exact(
-            self.index.read_rows, np.asarray(queries), cand_ids, k
+            lambda ids: self.index.read_rows(
+                ids, segments=segs, tombstones=self.tombstones
+            ),
+            np.asarray(queries), cand_ids, k,
         )
         return SearchResult(
             ids=jnp.asarray(ids_r),

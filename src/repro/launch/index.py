@@ -52,6 +52,13 @@ def main(argv=None) -> int:
         help="merge all segments into one after the appends",
     )
     ap.add_argument(
+        "--compact-incremental", action="store_true",
+        help="run size-tiered incremental compaction steps (one small "
+        "tier or tombstone-heavy batch per step, docs/dynamicity.md) "
+        "until the policy reaches a fixed point, instead of one "
+        "stop-the-world merge",
+    )
+    ap.add_argument(
         "--wire-dtype", choices=("float32", "bfloat16"), default="float32",
         help="routed-shuffle payload dtype for appends. NOTE: the old CLI "
         "always used bfloat16 (build_index's default); the lifecycle "
@@ -266,6 +273,21 @@ def _run(args, tracer) -> int:
         t0 = time.perf_counter()
         name = idx.compact()
         print(f"compacted -> {name} (v{idx.version}, {idx.rows} rows) in "
+              f"{time.perf_counter() - t0:.2f}s")
+    elif args.compact_incremental:
+        # one published step per iteration; the policy's empty selection
+        # (None without a version bump) is the fixed point
+        steps = 0
+        t0 = time.perf_counter()
+        while steps < 64:
+            v0 = idx.version
+            name = idx.compact(incremental=True)
+            if idx.version == v0:  # empty selection: nothing published
+                break
+            steps += 1
+            print(f"compact step {steps}: -> {name or '(dropped dead rows)'} "
+                  f"(v{idx.version}, {len(idx.segments)} segments)")
+        print(f"incremental compaction: {steps} steps in "
               f"{time.perf_counter() - t0:.2f}s")
 
     if args.verify_queries:

@@ -112,6 +112,12 @@ def main(argv=None) -> int:
                          "shedding overload batch work; fifo is the "
                          "original arrival-order coalescing (identical "
                          "results, different latency profile)")
+    ap.add_argument("--refresh-every", type=int, default=0,
+                    help="call session.maybe_refresh() after every N "
+                         "engine dispatches, adopting index versions "
+                         "committed by a concurrent writer between "
+                         "batches (docs/dynamicity.md); 0 = serve the "
+                         "pinned version for the whole trace")
     ap.add_argument("--target-p95-ms", type=float, default=None,
                     help="closed-loop latency target: the fitted cost "
                          "model picks the bucket ladder (and per-shard "
@@ -442,7 +448,8 @@ def _serve(args, tracer) -> int:
 
     batcher = MicroBatcher(session, max_wait_ms=max_wait_ms,
                            max_queue=args.max_queue,
-                           scheduler=args.scheduler)
+                           scheduler=args.scheduler,
+                           refresh_every=args.refresh_every)
     t0 = time.perf_counter()
     completions = batcher.run(reqs)
     wall = time.perf_counter() - t0

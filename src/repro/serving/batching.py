@@ -87,6 +87,13 @@ class MicroBatcher:
         defaults to :meth:`SLOPolicy.for_session`, which derives the
         batch-shedding depth from the session's fitted cost model (no
         shedding when the index carries no usable calibration).
+      refresh_every: when > 0, call ``session.maybe_refresh()`` after
+        every N engine dispatches — the read-during-write hook
+        (``docs/dynamicity.md``): a background writer's commits are
+        adopted *between* batches, after the new snapshot's rungs are
+        warmed, so no in-flight or queued request ever observes a
+        half-adopted index. 0 (default) never refreshes: the session
+        serves its pinned version for the whole trace.
 
     Raises:
       ValueError: an unknown ``scheduler``.
@@ -100,6 +107,7 @@ class MicroBatcher:
         max_queue: int = 256,
         scheduler: str = "edf",
         policy: SLOPolicy | None = None,
+        refresh_every: int = 0,
     ):
         if scheduler not in ("edf", "fifo"):
             raise ValueError(
@@ -109,9 +117,19 @@ class MicroBatcher:
         self.max_wait = float(max_wait_ms) / 1e3
         self.max_queue = int(max_queue)
         self.scheduler = scheduler
+        self.refresh_every = int(refresh_every)
+        self._dispatches = 0
         self.policy = policy if policy is not None else SLOPolicy.for_session(
             session, base_max_wait_ms=max_wait_ms,
         )
+
+    def _after_dispatch(self) -> None:
+        """Between-batch refresh point. Warmup cost lands in
+        ``metrics.warmup_ms`` (not ``engine_ms``), so adopting a new
+        index version never distorts the replay's virtual clock."""
+        self._dispatches += 1
+        if self.refresh_every and self._dispatches % self.refresh_every == 0:
+            self.session.maybe_refresh()
 
     def run(self, requests: list[Request]) -> list[Completion]:
         """Replay a trace to completion; returns one Completion per
@@ -282,6 +300,7 @@ class MicroBatcher:
                 rows += r.rows
             rows_pending -= rows
             now = self._dispatch(batch, now, done)
+            self._after_dispatch()
         s.steady_state_recompiles()
         return done
 
@@ -377,5 +396,6 @@ class MicroBatcher:
                 rows += r.rows
             rows_pending -= rows
             now = self._dispatch(batch, now, done)
+            self._after_dispatch()
         s.steady_state_recompiles()
         return done

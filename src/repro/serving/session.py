@@ -393,7 +393,12 @@ class SearchSession:
             self.mesh = mesh if mesh is not None else local_mesh()
             self.index = Index.from_built(index, tree, mesh=self.mesh)
             self.tree = tree
-        self._segments = self.index.segment_views()
+        # pin one consistent cut of the index: every runtime, cache slab,
+        # and rerank fetch resolves against this snapshot until refresh()/
+        # maybe_refresh() adopts a newer one — mutations on the underlying
+        # Index never perturb in-flight or queued requests
+        self._pin = self.index.snapshot()
+        self._segments = self._pin.views
         if not self._segments:
             raise ValueError("cannot serve an index with no segments")
         self.k = int(k)
@@ -410,7 +415,7 @@ class SearchSession:
         # codes-vs-exact resolves ONCE per session on the aggregate shape
         # (ADC and exact distances are incomparable across a merge), so
         # every rung of every ladder serves the same tier
-        pq = getattr(self.index, "quantizer", None)
+        pq = self._pin.quantizer
         if layout == "scan_codes" and pq is None:
             raise ValueError(
                 "layout='scan_codes' needs PQ codes; call "
@@ -447,13 +452,21 @@ class SearchSession:
         attach_cache(self.cache, self._segments, self.index.n_leaves)
 
     def _refresh_codes(self) -> None:
-        """Device copies of each segment's PQ codes + the codebook table,
-        aligned with ``self._segments`` order."""
+        """Device copies of each pinned segment's PQ codes + the codebook
+        table, aligned with ``self._segments`` order."""
         self._codes_dev = tuple(
-            jnp.asarray(self.index._codes[s.name])
-            for s in self.index.segments
+            jnp.asarray(self._pin.codes[s.name])
+            for s in self._pin.segments
         )
-        self._codebooks_dev = jnp.asarray(self.index.quantizer.codebooks)
+        self._codebooks_dev = jnp.asarray(self._pin.quantizer.codebooks)
+
+    def _read_pinned_rows(self, ids) -> np.ndarray:
+        """Rerank row fetches against the pinned cut — a concurrent
+        delete or compaction cannot make an in-flight request's candidate
+        id unreadable."""
+        return self.index.read_rows(
+            ids, segments=self._pin.segments, tombstones=self._pin.tombstones
+        )
 
     @property
     def serving_layout(self) -> str:
@@ -491,11 +504,48 @@ class SearchSession:
         )
         return cls(idx, mesh=mesh, **session_kw), meta
 
+    @property
+    def pinned_version(self) -> int:
+        """The index manifest version this session is currently serving
+        (the snapshot pinned at construction or the last refresh)."""
+        return self._pin.version
+
     def refresh(self) -> None:
-        """Re-snapshot the index's segments/tombstones (after append/
+        """Re-pin the index's current segments/tombstones (after append/
         delete/compact on the underlying Index) and rebuild the bucket
-        pipelines. New shapes compile at the next :meth:`warmup`."""
-        self._segments = self.index.segment_views()
+        pipelines. New shapes compile at the next :meth:`warmup` — prefer
+        :meth:`maybe_refresh` on a serving loop, which warms before
+        swapping."""
+        self._adopt(self.index.snapshot())
+
+    def maybe_refresh(self) -> bool:
+        """Adopt the index's latest state iff it changed since the pin —
+        the serve-loop's read-during-write hook (``--refresh-every``).
+
+        O(1) when nothing changed (one stamp compare — safe to call
+        between every micro-batch). On change, the new snapshot's bucket
+        ladders are rebuilt AND warmed *before* this method returns, so
+        the caller's next dispatch replays a compiled program: requests
+        queued behind the refresh never see a half-adopted index and
+        steady-state recompiles stay at zero. An index mutated down to
+        zero segments keeps the old pin (there is nothing to serve).
+
+        Returns ``True`` when a new snapshot was adopted.
+        """
+        if self.index.stamp == self._pin.stamp:
+            return False
+        snap = self.index.snapshot()
+        if not snap.segments:
+            return False
+        self._adopt(snap)
+        self.warmup()
+        return True
+
+    def _adopt(self, snap) -> None:
+        """Swap the pinned snapshot: re-point views, cache slabs, device
+        codes, and rebuild the bucket runtimes. Callers own warmup."""
+        self._pin = snap
+        self._segments = snap.views
         self._attach_cache()
         if self._use_codes:
             self._refresh_codes()

@@ -116,25 +116,44 @@ class ShardedSearchSession(SearchSession):
         super().__init__(index, tree, mesh, **session_kw)
 
     # -- runtime construction -----------------------------------------------
+    def _derive_plan(self, n_shards: int, strategy: str) -> ShardPlan:
+        """Derive a plan over the *pinned* segment cut (not the index's
+        live segments — a concurrent append must not leak into the plan
+        this session serves). Raises for non-derivable strategies."""
+        segs = self._pin.segments
+        if strategy == "round_robin":
+            return ShardPlan.round_robin([s.name for s in segs], n_shards)
+        if strategy == "balanced":
+            return ShardPlan.balanced(
+                [s.name for s in segs], [s.valid_rows for s in segs], n_shards
+            )
+        raise ValueError(
+            f"cannot derive a {strategy!r} plan; want one of "
+            "('round_robin', 'balanced')"
+        )
+
     def _resolve_plan(self) -> ShardPlan:
         plan = self._shard_plan_arg
         if plan is None and self._n_shards_arg is not None:
-            return ShardPlan.for_index(
-                self.index, self._n_shards_arg, self._strategy_arg
-            )
+            return self._derive_plan(self._n_shards_arg, self._strategy_arg)
         if plan is None:
-            plan = self.index.shard_plan
+            plan = self._pin.shard_plan
         if plan is None:
             raise ValueError(
                 "ShardedSearchSession needs shards=N, a shard_plan, or an "
                 "index with a persisted shard plan"
             )
-        if not plan.covers([s.name for s in self.index.segments]):
-            plan = plan.rederived(self.index)  # raises for explicit plans
+        if not plan.covers([s.name for s in self._pin.segments]):
+            # raises for explicit plans (cannot follow a changed cut)
+            plan = self._derive_plan(plan.n_shards, plan.strategy)
         return plan
 
     def _build_runtimes(self) -> None:
-        self.sharded = ShardedIndex(self.index, plan=self._resolve_plan())
+        self.sharded = ShardedIndex(
+            self.index, plan=self._resolve_plan(),
+            segments=self._pin.segments, views=self._pin.views,
+            codes=self._pin.codes or None, tombstones=self._pin.tombstones,
+        )
         shard_views = self.sharded.shard_views()
         self._shard_codes = {}
         if self._use_codes:
@@ -197,7 +216,7 @@ class ShardedSearchSession(SearchSession):
         valid everywhere. ``None`` on dense tiers."""
         if not self._use_codes:
             return None
-        pq = self.index.quantizer
+        pq = self._pin.quantizer
         widths = []
         for shard, mesh in zip(shard_views, self.sharded._meshes):
             ns = data_axis_size(mesh)
@@ -386,7 +405,7 @@ class ShardedSearchSession(SearchSession):
             t_r = time.perf_counter()
             with tr.span("engine.rerank", k=self.k, candidates=width):
                 ids, dists = rerank_exact(
-                    self.index.read_rows, queries, ids, self.k
+                    self._read_pinned_rows, queries, ids, self.k
                 )
             dt += time.perf_counter() - t_r
         # every shard routes the same queries through the same tree; shard

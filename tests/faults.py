@@ -1,0 +1,158 @@
+"""Deterministic crash/fault injection for the index's write path.
+
+:class:`FaultFS` monkeypatches the process-wide write syscalls —
+``builtins.open`` (write/append/create modes), ``os.fsync``, ``os.link``,
+``os.rename``, ``os.replace``, ``os.unlink``/``os.remove`` — filtered to
+one directory tree (the index root). Every filtered call is a numbered
+*boundary*; arming ``fail_at=i`` raises :class:`InjectedFault` *before*
+the i-th call executes, which models a crash at exactly that point: all
+earlier writes are on disk, the armed one and everything after never
+happened.
+
+The enumeration protocol (see ``tests/test_durability.py``):
+
+1. **counting pass** — run the operation under an unarmed FaultFS on a
+   pristine copy; ``len(fs.boundaries)`` is the number of distinct crash
+   points ``T`` (deterministic: same initial state, same op, same
+   boundaries).
+2. **fault pass** — for each ``i < T``, restore the pristine copy, arm
+   ``fail_at=i``, run the op, catch :class:`InjectedFault`, then *reopen
+   from disk* and assert the recovery invariant: the reopened index is
+   exactly the pre-op or exactly the post-op published state — never a
+   torn hybrid, never a resurrected orphan.
+3. **retry pass** — the surviving handle retries the op with the faults
+   disarmed; it must either succeed (identical-bytes manifest passthrough)
+   or raise ``FileExistsError`` because the first attempt already landed.
+
+No threads, no randomness: the boundary list is the schedule.
+"""
+
+from __future__ import annotations
+
+import builtins
+import os
+
+_WRITE_MODE_CHARS = set("wxa+")
+
+
+class InjectedFault(OSError):
+    """The simulated crash raised at an armed write boundary."""
+
+
+class FaultFS:
+    """Context manager that intercepts write syscalls under ``root``.
+
+    Args:
+      root: directory tree to watch (the index directory). Calls whose
+        target lies outside it pass through untouched and uncounted.
+      fail_at: boundary ordinal to crash at, or ``None`` to only count.
+
+    Attributes:
+      boundaries: list of ``(kind, relative_path)`` recorded so far, in
+        call order — ``kind`` is one of ``open``/``fsync``/``link``/
+        ``rename``/``unlink``.
+    """
+
+    def __init__(self, root: str, fail_at: int | None = None):
+        self.root = os.path.abspath(root)
+        self.fail_at = fail_at
+        self.fired = False  # the armed boundary was reached and raised
+        self.boundaries: list[tuple[str, str]] = []
+        self._saved: dict = {}
+
+    # -- path filtering ------------------------------------------------------
+    def _ours(self, path) -> str | None:
+        if not isinstance(path, (str, bytes, os.PathLike)):
+            return None
+        p = os.path.abspath(os.fspath(path))
+        if isinstance(p, bytes):
+            p = os.fsdecode(p)
+        if p == self.root or p.startswith(self.root + os.sep):
+            return p
+        return None
+
+    def _hit(self, kind: str, path: str) -> None:
+        i = len(self.boundaries)
+        rel = os.path.relpath(path, self.root)
+        self.boundaries.append((kind, rel))
+        if self.fail_at is not None and i == self.fail_at:
+            self.fired = True
+            # NOTE: InjectedFault subclasses OSError on purpose — a
+            # boundary inside a best-effort cleanup (``except OSError:
+            # pass``) absorbs the crash exactly like the real filesystem
+            # error it guards against; callers detect that via `fired`
+            # without the op raising.
+            raise InjectedFault(f"injected crash at boundary #{i}: "
+                                f"{kind} {rel}")
+
+    # -- patched syscalls ----------------------------------------------------
+    def _open(self, file, mode="r", *args, **kwargs):
+        p = self._ours(file)
+        if p is not None and _WRITE_MODE_CHARS & set(mode):
+            self._hit("open", p)
+        return self._saved["open"](file, mode, *args, **kwargs)
+
+    def _fsync(self, fd):
+        # resolve the fd back to a path (Linux) so only fsyncs of files
+        # under root count as boundaries
+        try:
+            p = self._ours(os.readlink(f"/proc/self/fd/{fd}"))
+        except OSError:
+            p = None
+        if p is not None:
+            self._hit("fsync", p)
+        return self._saved["fsync"](fd)
+
+    def _link(self, src, dst, **kwargs):
+        p = self._ours(dst)
+        if p is not None:
+            self._hit("link", p)
+        return self._saved["link"](src, dst, **kwargs)
+
+    def _rename(self, src, dst, **kwargs):
+        p = self._ours(dst) or self._ours(src)
+        if p is not None:
+            self._hit("rename", p)
+        return self._saved["rename"](src, dst, **kwargs)
+
+    def _replace(self, src, dst, **kwargs):
+        p = self._ours(dst) or self._ours(src)
+        if p is not None:
+            self._hit("rename", p)
+        return self._saved["replace"](src, dst, **kwargs)
+
+    def _unlink(self, path, **kwargs):
+        p = self._ours(path)
+        if p is not None:
+            self._hit("unlink", p)
+        return self._saved["unlink"](path, **kwargs)
+
+    # -- lifecycle -----------------------------------------------------------
+    def __enter__(self) -> "FaultFS":
+        self._saved = {
+            "open": builtins.open,
+            "fsync": os.fsync,
+            "link": os.link,
+            "rename": os.rename,
+            "replace": os.replace,
+            "unlink": os.unlink,
+            "remove": os.remove,
+        }
+        builtins.open = self._open
+        os.fsync = self._fsync
+        os.link = self._link
+        os.rename = self._rename
+        os.replace = self._replace
+        os.unlink = self._unlink
+        os.remove = self._unlink
+        return self
+
+    def __exit__(self, *exc) -> None:
+        builtins.open = self._saved["open"]
+        os.fsync = self._saved["fsync"]
+        os.link = self._saved["link"]
+        os.rename = self._saved["rename"]
+        os.replace = self._saved["replace"]
+        os.unlink = self._saved["unlink"]
+        os.remove = self._saved["remove"]
+        return None

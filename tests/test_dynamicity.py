@@ -1,0 +1,308 @@
+"""Read-during-write lifecycle tests (docs/dynamicity.md).
+
+* Pinned-version serving: a (sharded) session interleaved with a seeded
+  append/delete/incremental-compact schedule keeps answering bit-identically
+  to the facade search of its pinned manifest version, adopts new versions
+  only at ``maybe_refresh()``, and never recompiles in steady state.
+* Incremental compaction: the size-tier/tombstone-ratio policy reclaims a
+  90%-deleted segment in one step without touching its neighbours and
+  without perturbing search results.
+* Recovery regressions: a staged-but-unpublished segment is invisible to
+  ``Index.open`` and does not block later appends; ``Index.gc`` lists
+  exactly the unreachable artifacts under ``dry_run`` and removes them
+  otherwise.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.tree import build_tree
+from repro.index import CompactionPolicy, Index
+from repro.obs import get_registry
+from repro.serving import SearchSession
+from repro.serving.sharded import ShardedSearchSession
+
+DIM = 16
+B = 64  # bucket == batch rows: facade and session plan identically
+K = 5
+SEARCH_KW = dict(layout="point_major", probes=2, cost_model="heuristic")
+
+_rng = np.random.default_rng(23)
+VECS = _rng.standard_normal((1200, DIM)).astype(np.float32)
+QUERIES = (VECS[:B] + 0.01 * _rng.standard_normal((B, DIM))).astype(np.float32)
+
+
+def _make_index(d: str, n_committed: int = 600) -> Index:
+    tree = build_tree(jnp.asarray(VECS[:512]), (8, 4),
+                      key=jax.random.PRNGKey(0))
+    idx = Index.create(tree, d)
+    half = n_committed // 2
+    idx.append(VECS[:half], ids=np.arange(half))
+    idx.commit()
+    idx.append(VECS[half:n_committed], ids=np.arange(half, n_committed))
+    idx.commit()
+    return idx
+
+
+def _facade(idx: Index):
+    r = idx.search(QUERIES, k=K, **SEARCH_KW)
+    return np.asarray(r.ids).copy(), np.asarray(r.dists).copy()
+
+
+# ---------------------------------------------------------------------------
+# pinned-version serving under a concurrent mutation schedule
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shards", [1, 2, 3])
+def test_mutate_while_serve_bit_identical(tmp_path, shards):
+    idx = _make_index(str(tmp_path / "idx"))
+    kw = dict(buckets=(B,), k=K, **SEARCH_KW)
+    if shards == 1:
+        session = SearchSession(idx, **kw)
+    else:
+        session = ShardedSearchSession(idx, shards=shards, **kw)
+    session.warmup()
+    v0 = session.pinned_version
+    expected = _facade(idx)
+
+    rng = np.random.default_rng(100 + shards)
+    next_row = 600  # VECS[600:] is the append reserve
+    live = list(range(600))
+    for step in range(6):
+        op = rng.choice(["append", "delete", "compact", "noop"])
+        mutated = False
+        if op == "append" and next_row + 100 <= len(VECS):
+            idx.append(VECS[next_row:next_row + 100],
+                       ids=np.arange(next_row, next_row + 100))
+            idx.commit()
+            live += list(range(next_row, next_row + 100))
+            next_row += 100
+            mutated = True
+        elif op == "delete" and len(live) > 200:
+            kill = rng.choice(live, size=40, replace=False)
+            idx.delete(kill)
+            idx.commit()
+            live = sorted(set(live) - set(int(i) for i in kill))
+            mutated = True
+        elif op == "compact":
+            v_before = idx.version
+            idx.compact(incremental=True)
+            mutated = idx.version != v_before
+
+        # the pin holds: every response equals the pinned version's
+        # facade answer no matter what just landed underneath
+        ids, dists = session.search(QUERIES)
+        assert session.pinned_version == v0, (step, op)
+        assert np.array_equal(ids, expected[0]), (step, op)
+        assert np.array_equal(dists, expected[1]), (step, op)
+
+        refreshed = session.maybe_refresh()
+        assert refreshed == mutated, (step, op)
+        if refreshed:
+            v0 = session.pinned_version
+            expected = _facade(idx)
+        ids, dists = session.search(QUERIES)
+        assert np.array_equal(ids, expected[0]), (step, op, "post-refresh")
+        assert np.array_equal(dists, expected[1]), (step, op, "post-refresh")
+
+    assert session.steady_state_recompiles() == 0
+    # adopting did not desync the pin bookkeeping
+    assert session.maybe_refresh() is False
+
+
+def test_session_pin_survives_compaction_gc(tmp_path):
+    """The pinned snapshot keeps serving even after an incremental compact
+    *garbage-collects the pinned segments' directories*: views and row
+    data were captured in memory at pin time."""
+    idx = _make_index(str(tmp_path / "idx"))
+    session = SearchSession(idx, buckets=(B,), k=K, **SEARCH_KW)
+    session.warmup()
+    expected = _facade(idx)
+    old_names = {s.name for s in idx.segments}
+
+    idx.delete(np.arange(0, 120))
+    idx.commit()
+    while True:
+        v = idx.version
+        idx.compact(incremental=True)
+        if idx.version == v:
+            break
+    assert {s.name for s in idx.segments} != old_names
+
+    ids, dists = session.search(QUERIES)
+    assert np.array_equal(ids, expected[0])
+    assert np.array_equal(dists, expected[1])
+    assert session.maybe_refresh() is True
+    ids, dists = session.search(QUERIES)
+    post = _facade(idx)
+    assert np.array_equal(ids, post[0])
+
+
+# ---------------------------------------------------------------------------
+# incremental compaction policy
+# ---------------------------------------------------------------------------
+
+def test_tombstone_heavy_segment_reclaimed_in_one_step(tmp_path):
+    idx = _make_index(str(tmp_path / "idx"))
+    a_name, b_name = [s.name for s in idx.segments]
+    # kill 90% of segment B's rows
+    idx.delete(np.arange(300, 570))
+    idx.commit()
+    assert get_registry().gauge("index.tombstones_live").value == 270
+    assert get_registry().counter("index.tombstoned").value == 270
+    before = _facade(idx)
+
+    merged = idx.compact(incremental=True)
+    assert merged is not None
+    names = [s.name for s in idx.segments]
+    assert a_name in names, "untouched neighbour must survive by name"
+    assert b_name not in names, "tombstone-heavy victim must be replaced"
+    assert idx.tombstones.size == 0, "victims' tombstones are dropped"
+    assert get_registry().gauge("index.tombstones_live").value == 0
+    after = _facade(idx)
+    assert np.array_equal(before[0], after[0])
+    assert np.array_equal(before[1], after[1])
+
+    reopened = _facade(Index.open(str(tmp_path / "idx")))
+    assert np.array_equal(reopened[0], after[0])
+    assert np.array_equal(reopened[1], after[1])
+
+
+def test_policy_selects_smallest_size_tier(tmp_path):
+    idx = _make_index(str(tmp_path / "idx"))  # 300 + 300
+    idx.append(VECS[600:640], ids=np.arange(600, 640))
+    idx.commit()
+    idx.append(VECS[640:672], ids=np.arange(640, 672))
+    idx.commit()
+    pol = CompactionPolicy()
+    victims = pol.select(idx.segments, idx.tombstones)
+    assert [s.valid_rows for s in victims] == [40, 32]
+
+    merged = idx.compact(incremental=True, policy=pol)
+    assert merged is not None
+    assert sorted(s.valid_rows for s in idx.segments) == [72, 300, 300]
+    # fixed point: nothing small enough to tier together any more
+    v = idx.version
+    assert idx.compact(incremental=True, policy=pol) is None
+    assert idx.version == v
+
+
+def test_policy_empty_and_thresholds():
+    pol = CompactionPolicy(tombstone_ratio=0.5, min_tier_segments=3)
+    assert pol.select([], np.array([], np.int64)) == []
+
+
+# ---------------------------------------------------------------------------
+# recovery regressions: staged orphans + gc
+# ---------------------------------------------------------------------------
+
+def test_open_ignores_staged_unpublished_segment(tmp_path):
+    d = str(tmp_path / "idx")
+    idx = _make_index(d)
+    v = idx.version
+    committed = {s.name for s in idx.segments}
+    expected = _facade(idx)
+
+    # a second writer stages (saves) a segment but dies before commit
+    other = Index.open(d)
+    other.append(VECS[600:700], ids=np.arange(600, 700))
+    orphan = other._staged[-1].name
+    del other
+
+    reopened = Index.open(d)
+    assert reopened.version == v
+    assert {s.name for s in reopened.segments} == committed
+    got = _facade(reopened)
+    assert np.array_equal(got[0], expected[0])
+
+    # the orphan's name stays reserved: a later append can never collide
+    reopened.append(VECS[700:760], ids=np.arange(700, 760))
+    assert reopened._staged[-1].name != orphan
+    reopened.commit()
+    assert orphan not in {s.name for s in reopened.segments}
+
+
+def test_open_directory_with_only_staged_segment(tmp_path):
+    d = str(tmp_path / "empty")
+    tree = build_tree(jnp.asarray(VECS[:512]), (8, 4),
+                      key=jax.random.PRNGKey(0))
+    idx = Index.create(tree, d)
+    idx.append(VECS[:100], ids=np.arange(100))  # staged, never committed
+    del idx
+
+    reopened = Index.open(d)
+    assert reopened.segments == ()
+    reopened.append(VECS[:100], ids=np.arange(100))
+    reopened.commit()
+    assert len(reopened.segments) == 1
+    r = reopened.search(QUERIES, k=K, **SEARCH_KW)
+    assert np.asarray(r.ids).shape == (B, K)
+
+
+def test_gc_dry_run_then_collect(tmp_path):
+    d = str(tmp_path / "idx")
+    idx = _make_index(d)
+    # manufacture garbage: superseded manifests already exist (v1..v-1);
+    # add an orphan segment from a dead writer
+    other = Index.open(d)
+    other.append(VECS[600:660], ids=np.arange(600, 660))
+    del other
+
+    idx2 = Index.open(d)
+    expected = _facade(idx2)
+    report = idx2.gc(dry_run=True)
+    assert report["manifests"], "superseded manifests are collectable"
+    assert report["segments"], "orphan segment is collectable"
+    # dry run deleted nothing (order-insensitive: listdir order is free)
+    def _norm(rep):
+        return {key: sorted(v) for key, v in rep.items()}
+
+    again = idx2.gc(dry_run=True)
+    assert _norm(again) == _norm(report)
+
+    collected = idx2.gc()
+    assert _norm(collected) == _norm(report)
+    assert idx2.gc(dry_run=True) == {
+        "manifests": [], "segments": [], "tombstones": [], "codes": [],
+        "tmp": [],
+    }
+    got = _facade(Index.open(d))
+    assert np.array_equal(got[0], expected[0])
+    assert np.array_equal(got[1], expected[1])
+
+
+def test_gc_keeps_own_staged_segment(tmp_path):
+    d = str(tmp_path / "idx")
+    idx = _make_index(d)
+    idx.append(VECS[600:660], ids=np.arange(600, 660))  # staged, not committed
+    staged = idx._staged[-1].name
+    report = idx.gc()
+    assert all(staged not in rel for rel in report["segments"])
+    idx.commit()
+    assert staged in {s.name for s in idx.segments}
+
+
+# ---------------------------------------------------------------------------
+# search-time pruning
+# ---------------------------------------------------------------------------
+
+def test_zero_live_segment_pruned_result_identical(tmp_path):
+    idx = _make_index(str(tmp_path / "idx"))
+    before = _facade(idx)
+    idx.delete(np.arange(300, 600))  # all of segment B
+    idx.commit()
+    mid = _facade(idx)
+    pruned = get_registry().counter("index.segments_pruned").value
+    assert pruned >= 1
+    # B contributed nothing dead-masked either way; A's results unchanged
+    # wherever B's ids don't appear
+    assert not np.isin(mid[0], np.arange(300, 600)).any()
+
+    # sharded facade prunes too
+    from repro.index import ShardedIndex, ShardPlan
+    sh = ShardedIndex(idx, plan=ShardPlan.for_index(idx, 2))
+    r = sh.search(QUERIES, k=K, **SEARCH_KW)
+    assert np.array_equal(np.asarray(r.ids), mid[0])
+    assert np.array_equal(np.asarray(r.dists), mid[1])
