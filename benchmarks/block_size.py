@@ -3,35 +3,131 @@
 HDFS block size -> ``block_rows`` (points per search wave) and ``q_cap``
 (lookup slab budget). Bigger blocks amortise the slab re-read; smaller
 blocks tighten the leaf span each tile must cover (less wasted masking) —
-the paper's exact trade-off, three decks down the memory hierarchy."""
+the paper's exact trade-off, three decks down the memory hierarchy.
+
+Beyond the paper, the same sweep drives the fused fast path's autotuner:
+:func:`tune` times ``impl="fused"`` at each block size and persists the
+winner per ``(layout, dim, dtype)`` via
+``CalibrationStore.record_tile_config`` — into an index's manifest
+calibration blob when ``index=`` is given — which ``plan()`` then
+consults when budgeting a fused candidate (docs/kernels.md). ``run()``
+writes the whole study to ``benchmarks/out/block_size.json``.
+"""
 
 from __future__ import annotations
 
-from benchmarks.common import Corpus, row, timeit
+import os
+
+from benchmarks.common import (
+    Corpus,
+    bench_header,
+    row,
+    timeit,
+    write_artifact,
+)
+
+BLOCK_SIZES = (256, 512, 1024, 2048)
+
+
+def _sweep(c, q, *, impl, block_sizes=BLOCK_SIZES, k=10, q_cap=1024):
+    """Time one eager batch_search per block size at a pinned slab."""
+    from repro.core.search import batch_search
+
+    entries = []
+    for br in block_sizes:
+        t = timeit(
+            lambda br=br: batch_search(
+                c.index, c.tree, q, k=k, mesh=c.mesh, layout="point_major",
+                impl=impl, block_rows=br, q_cap=q_cap,
+            ),
+            warmup=1, iters=3,
+        )
+        res = batch_search(c.index, c.tree, q, k=k, mesh=c.mesh,
+                           layout="point_major", impl=impl,
+                           block_rows=br, q_cap=q_cap)
+        entries.append({
+            "block_rows": br, "impl": impl, "ms": t * 1e3,
+            "pairs": float(res.pairs),
+            "overflow": int(res.q_cap_overflow),
+        })
+    return entries
+
+
+def tune(store=None, *, index=None, corpus=None, q_n=2048, k=10,
+         block_sizes=BLOCK_SIZES, layout="point_major"):
+    """Sweep fused block sizes and persist the winning tile config.
+
+    With ``index`` (a lifecycle ``repro.index.Index``), each block size
+    times ``index.search(impl="fused")`` over queries drawn from the
+    index's own rows, and the winner lands in ``index.calibration`` +
+    ``commit()`` — the manifest calibration blob a serving process
+    reloads. Otherwise the benchmark :class:`Corpus` is swept and the
+    winner lands in ``store`` (default: the process-wide calibration
+    store), keyed ``(layout, dim, dtype)``. Returns ``(entries,
+    winner)``.
+    """
+    from repro.core.engine import default_calibration
+
+    if index is not None:
+        import numpy as np
+
+        from benchmarks.serving import _index_queries
+
+        q_np = np.asarray(_index_queries(index, q_n))
+        target = index.calibration
+        entries = []
+        for br in block_sizes:
+            t = timeit(
+                lambda br=br: index.search(
+                    q_np, k=k, layout=layout, impl="fused", block_rows=br,
+                ),
+                warmup=1, iters=3,
+            )
+            entries.append({"block_rows": br, "impl": "fused", "ms": t * 1e3})
+        dim = int(index.dim)
+        rows = sum(int(v.rows) for v in index.segment_views())
+    else:
+        c = corpus or Corpus()
+        q, _ = c.queries(q_n)
+        target = store if store is not None else default_calibration()
+        entries = _sweep(c, q, impl="fused", block_sizes=block_sizes)
+        dim, rows = int(c.dim), int(c.index.rows)
+    best = min(entries, key=lambda e: e["ms"])
+    target.record_tile_config(layout, dim, "float32",
+                              best["block_rows"], best["ms"])
+    if index is not None:
+        index.commit()
+    winner = {
+        "layout": layout, "dim": dim, "dtype": "float32", "rows": rows,
+        "block_rows": best["block_rows"], "ms": best["ms"],
+    }
+    return entries, winner
 
 
 def run():
     out = []
-    from repro.core.search import batch_search
-
     c = Corpus()
+    payload = {"sweeps": []}
     for q_n, tag in ((2048, "copydays"), (8192, "12k")):
         q, _ = c.queries(q_n)
-        for block_rows in (256, 512, 1024, 2048):
-            t = timeit(
-                lambda br=block_rows: batch_search(
-                    c.index, c.tree, q, k=10, mesh=c.mesh,
-                    block_rows=br, q_cap=1024,
-                ),
-                warmup=1, iters=3,
-            )
-            res = batch_search(c.index, c.tree, q, k=10, mesh=c.mesh,
-                               block_rows=block_rows, q_cap=1024)
-            out.append(
-                row(
-                    f"t7_{tag}_block{block_rows}", t,
-                    f"pairs={float(res.pairs):.3g} "
-                    f"overflow={int(res.q_cap_overflow)}",
-                )
-            )
+        for impl in ("xla", "fused"):
+            entries = _sweep(c, q, impl=impl)
+            payload["sweeps"].append({
+                "queries": q_n, "tag": tag, "impl": impl, "entries": entries,
+            })
+            prefix = f"t7_{tag}_" + ("" if impl == "xla" else "fused_")
+            for e in entries:
+                out.append(row(
+                    f"{prefix}block{e['block_rows']}", e["ms"] / 1e3,
+                    f"pairs={e['pairs']:.3g} overflow={e['overflow']}",
+                ))
+    entries, winner = tune(corpus=c)
+    payload["tuned"] = {"entries": entries, "winner": winner}
+    payload["header"] = bench_header(tuned_impl="fused")
+    out_dir = os.environ.get("REPRO_BENCH_OUT", "benchmarks/out")
+    path = write_artifact(os.path.join(out_dir, "block_size.json"), payload)
+    out.append(row(
+        "block_size_json", 0.0,
+        f"wrote={path} winner_block_rows={winner['block_rows']}",
+    ))
     return out

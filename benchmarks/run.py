@@ -42,7 +42,9 @@ def smoke() -> int:
     gate, the SLO scheduling gate (fifo == edf results, EDF interactive
     p95 < batch p95), the compressed-codes gate (train → commit →
     reopen → auto plans scan_codes → ADC + rerank recall floor at ≥8x
-    fewer resident bytes), and the observability gate (traced ==
+    fewer resident bytes), the fused-kernel gate (fused == xla on a
+    served trace, zero recompiles, ms/image within 1.5x), and the
+    observability gate (traced ==
     untraced bit-identity, valid Chrome trace + registry dump +
     tracereport) —
     the per-PR gate wired into scripts/smoke.sh. Fails loudly,
@@ -88,6 +90,11 @@ def smoke() -> int:
     print("# smoke: compressed codes (train -> commit -> reopen -> auto "
           "plans scan_codes -> ADC + rerank recall floor)", file=sys.stderr)
     rc = serving_bench.codes_smoke()
+    if rc != 0:
+        return rc
+    print("# smoke: fused kernel (fused == xla on a served trace, "
+          "0 recompiles, ms/image within 1.5x)", file=sys.stderr)
+    rc = serving_bench.kernel_smoke()
     if rc != 0:
         return rc
     print("# smoke: dynamicity (serve while a writer appends + "

@@ -893,6 +893,82 @@ def codes_smoke() -> int:
     return 0
 
 
+def kernel_smoke() -> int:
+    """Fused fast-path gate (docs/kernels.md): the same served trace
+    through an ``impl="xla"`` and an ``impl="fused"`` session over one
+    index. Asserts (a) every request's ids + distances are bit-identical
+    between the two impls (the fused executor contract), (b) zero
+    steady-state recompiles after warmup on both, and (c) fused ms/image
+    within 1.5x of xla — off-TPU the fused path is the pipelined wave
+    sweep, so it must not regress throughput while buying the kernel its
+    on-TPU dispatch. Writes ``serving_kernel.json`` with each leg's
+    ms/image stamped under its active impl in the header."""
+    import numpy as np  # noqa: F401 (via _identical_results)
+
+    from repro.index import Index
+    from repro.serving import MicroBatcher, SearchSession, TraceLoadGenerator
+
+    c = Corpus(rows=20_000, dim=32, fanouts=(16, 16))
+    idx = Index.create(c.tree, None, mesh=c.mesh)
+    idx.append(c.vecs_np[:12_000])
+    idx.append(c.vecs_np[12_000:])
+    idx.commit()
+    dpi = 20
+    n_images = len(c.vecs_np) // dpi
+    gen = TraceLoadGenerator(c.vecs_np, dpi, seed=3)
+    reqs = gen.from_trace(100, n_images, skew="zipf", rate=200.0)
+    by_impl, legs = {}, {}
+    for impl in ("xla", "fused"):
+        # cache OFF: a cache-served answer is a CPU recompute under a
+        # rounding contract, not the executor's bits — and this gate is
+        # exactly about the executor's bits
+        s = SearchSession(idx, mesh=c.mesh, k=10, layout="point_major",
+                          probes=2, impl=impl, buckets=(256, 1024),
+                          cache_leaves=0, cost_model="heuristic")
+        s.warmup()
+        comps = MicroBatcher(s, max_wait_ms=5.0, max_queue=4096).run(reqs)
+        m = s.metrics
+        assert m.requests == len(reqs), (
+            f"{impl}: served {m.requests}/{len(reqs)}"
+        )
+        recomp = s.steady_state_recompiles()
+        assert recomp == 0, f"{impl}: {recomp} steady-state recompiles"
+        assert all(p["impl"] == impl for p in s.plan_summary())
+        by_impl[impl] = {cc.rid: cc for cc in comps if cc.ids is not None}
+        legs[impl] = {
+            "header": bench_header(impl=impl),
+            "ms_per_image": m.ms_per_image,
+            "plans": s.plan_summary(),
+        }
+    compared, mismatches = _identical_results(by_impl["xla"],
+                                              by_impl["fused"])
+    assert compared == len(reqs) and mismatches == 0, (
+        f"fused vs xla divergence: {mismatches}/{compared} "
+        f"(of {len(reqs)} requests)"
+    )
+    ratio = legs["fused"]["ms_per_image"] / max(
+        1e-9, legs["xla"]["ms_per_image"]
+    )
+    assert ratio <= 1.5, (
+        f"fused ms/image {legs['fused']['ms_per_image']:.2f} is {ratio:.2f}x "
+        f"xla's {legs['xla']['ms_per_image']:.2f} (bound 1.5x)"
+    )
+    out_dir = os.environ.get("REPRO_BENCH_OUT", "benchmarks/out")
+    write_artifact(os.path.join(out_dir, "serving_kernel.json"), {
+        "header": bench_header(impl="fused"),
+        "legs": legs,
+        "divergence": {"compared": compared, "mismatches": mismatches},
+        "ms_per_image_ratio": ratio,
+    })
+    print(
+        f"# kernel smoke: fused == xla on {compared} requests (0 diverged); "
+        f"ms/image fused {legs['fused']['ms_per_image']:.2f} vs "
+        f"xla {legs['xla']['ms_per_image']:.2f} ({ratio:.2f}x, bound 1.5x); "
+        f"recompiles 0"
+    )
+    return 0
+
+
 def dynamicity_smoke() -> int:
     """Read-during-write gate (docs/dynamicity.md): replay a multi-tenant
     trace against a pinned-version session while a background thread
@@ -1014,6 +1090,10 @@ def main(argv=None) -> int:
                     help="run the compressed-codes gate (train -> commit "
                          "-> reopen -> auto plans scan_codes -> ADC + "
                          "rerank recall floor at >=8x fewer bytes)")
+    ap.add_argument("--kernel-smoke", action="store_true",
+                    help="run the fused fast-path gate (fused == xla on a "
+                         "served trace, 0 recompiles, ms/image within "
+                         "1.5x) -> benchmarks/out/serving_kernel.json")
     ap.add_argument("--dynamicity-smoke", action="store_true",
                     help="run the read-during-write gate (serve a trace "
                          "while a writer thread appends + incrementally "
@@ -1068,6 +1148,8 @@ def main(argv=None) -> int:
         return slo_smoke()
     if args.codes_smoke:
         return codes_smoke()
+    if args.kernel_smoke:
+        return kernel_smoke()
     if args.dynamicity_smoke:
         return dynamicity_smoke()
     print("name,us_per_call,derived")

@@ -1,10 +1,17 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Perf-loop driver: roofline breakdowns and fused-scan block tuning.
 
-"""Perf-loop driver: per-source breakdown of a dry-run cell's roofline.
+Roofline mode (per-source breakdown of a dry-run cell, on 512 faked hosts):
 
   PYTHONPATH=src python scripts/hillclimb.py --arch phi3.5-moe-42b-a6.6b \
       --shape train_4k [--multi-pod] [--key wire|hbm|flops] [--variant NAME]
+
+Tune mode (sweep fused block sizes on real devices, persist the winner
+into the calibration blob — an index manifest's when --index-dir is
+given, else the process default store; see docs/kernels.md):
+
+  PYTHONPATH=src python scripts/hillclimb.py --tune-fused \
+      [--index-dir DIR] [--queries 2048] [--block-sizes 256 512 1024 2048] \
+      [--out tune.jsonl]
 
 Variants are registered in repro.configs.variants and apply a named
 beyond-baseline change to the cell (e.g. routed_moe, flash_attn).
@@ -14,16 +21,87 @@ import argparse
 import sys
 
 
+def tune_fused(args) -> int:
+    import json
+    import os
+    import time
+
+    # `python scripts/hillclimb.py` puts scripts/ on sys.path, not the
+    # repo root where the benchmarks package lives.
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    from benchmarks.block_size import tune
+    from repro.launch import roofline as rl
+
+    index = None
+    if args.index_dir:
+        from repro.index import Index
+
+        index = Index.open(args.index_dir)
+    entries, winner = tune(
+        index=index,
+        q_n=args.queries,
+        block_sizes=tuple(args.block_sizes),
+    )
+    for e in entries:
+        print(f"  block_rows={e['block_rows']:<6d} ms={e['ms']:.2f}")
+    where = (f"manifest calibration blob at {args.index_dir}"
+             if args.index_dir else "process default calibration store")
+    print(
+        f"winner: block_rows={winner['block_rows']} ({winner['ms']:.2f} ms) "
+        f"recorded for ({winner['layout']}, dim={winner['dim']}, "
+        f"{winner['dtype']}) in the {where}"
+    )
+    est = rl.fused_scan_estimate(
+        rows=winner["rows"], dim=winner["dim"], q_rows=args.queries,
+        k=10, block_rows=winner["block_rows"],
+    )
+    print(
+        f"roofline estimate: fused_intensity={est['fused_intensity']:.1f} "
+        f"reference_intensity={est['reference_intensity']:.1f} "
+        f"flop/byte over {est['n_waves']} waves"
+    )
+    if args.out:
+        rec = dict(
+            mode="tune_fused", status="ok", ts=time.time(),
+            index_dir=args.index_dir, entries=entries, winner=winner,
+            roofline_estimate=est,
+        )
+        with open(args.out, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+    return 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--shape", required=True)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--key", default=None, choices=[None, "hbm", "wire", "flops"])
     ap.add_argument("--variant", default=None)
     ap.add_argument("--top", type=int, default=14)
+    ap.add_argument("--tune-fused", action="store_true",
+                    help="sweep fused block sizes instead of a roofline run")
+    ap.add_argument("--index-dir", default=None,
+                    help="tune against this on-disk index; winner lands in "
+                         "its manifest calibration blob")
+    ap.add_argument("--queries", type=int, default=2048)
+    ap.add_argument("--block-sizes", type=int, nargs="+",
+                    default=[256, 512, 1024, 2048])
     ap.add_argument("--out", default=None, help="append JSONL record")
     args = ap.parse_args(argv)
+
+    if args.tune_fused:
+        # Real devices: the 512-host fake below is for dry-run lowering
+        # only and would wreck a timed sweep.
+        return tune_fused(args)
+    if not args.arch or not args.shape:
+        ap.error("--arch and --shape are required (unless --tune-fused)")
+
+    import os
+
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=512"
+    )
 
     import json
     import time

@@ -26,7 +26,11 @@ python -m pytest -x -q
 # benchmarks.serving --slo-smoke), the compressed-codes gate (train ->
 # commit -> reopen -> plan(auto) picks scan_codes -> ADC scan + exact
 # rerank meets the recall floor at >=8x fewer resident bytes; standalone:
-# benchmarks.serving --codes-smoke), the dynamicity gate (serve a trace
+# benchmarks.serving --codes-smoke), the fused-kernel gate (the same
+# served trace through impl="xla" and impl="fused" sessions returns
+# bit-identical ids+dists, zero steady-state recompiles, fused ms/image
+# within 1.5x of xla; standalone: benchmarks.serving --kernel-smoke),
+# the dynamicity gate (serve a trace
 # while a writer thread appends + incrementally compacts: 0 dropped
 # requests, 0 steady-state recompiles, p95 within 2x of a frozen baseline,
 # final results bit-identical to a fresh open; standalone:

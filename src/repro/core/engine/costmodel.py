@@ -35,6 +35,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 
 import numpy as np
 
@@ -52,11 +53,36 @@ SIGNATURE_FIELDS = (
 
 MODEL_KINDS = ("auto", "heuristic", "observed", "fitted")
 
-CALIBRATION_FORMAT = 1
+#: format 2 added record timestamps (decay windowing) and the autotuned
+#: tile-config blob; ``from_json`` still accepts format-1 payloads
+#: (legacy records load as fresh — better to trust an undated measurement
+#: than to discard the only calibration an old manifest has)
+CALIBRATION_FORMAT = 2
 
 #: the FittedModel's parametric form - the single source the benchmark
 #: artifacts quote (keep in lockstep with FittedModel.features)
 FIT_FORM = "ms ~ a*(rows_scanned/tile) + b*probes*leaves + c*batch + d"
+
+#: exponential-decay half-life for calibration records: a measurement
+#: ``age`` seconds old carries weight ``0.5 ** (age / half_life)`` in the
+#: fitted model, so ms/image measured on a previous impl/hardware stops
+#: steering ``plan(model="auto")`` as fresh measurements accumulate
+CALIBRATION_HALF_LIFE_S = 7 * 24 * 3600.0
+
+#: records older than this many half-lives are dropped outright (from
+#: fits, exact-signature consults, and tuned tile configs) — their weight
+#: would be < 0.4% anyway, and a lone stale record must not decide alone
+CALIBRATION_MAX_AGE_HALF_LIVES = 8.0
+
+
+def _age_weight(ts: float, now: float) -> float:
+    """Exponential-window weight of a record last touched at ``ts``."""
+    age = max(0.0, now - ts)
+    return 0.5 ** (age / CALIBRATION_HALF_LIFE_S)
+
+
+def _is_stale(ts: float, now: float) -> bool:
+    return (now - ts) > CALIBRATION_MAX_AGE_HALF_LIVES * CALIBRATION_HALF_LIFE_S
 
 
 def plan_signature(plan) -> tuple:
@@ -131,6 +157,9 @@ class CalibrationStore:
         # signature at different corpus sizes, and those measurements
         # must stay distinct for the fit
         self._records: dict[tuple, dict] = {}
+        # autotuned fused-kernel tile configs keyed (layout, dim, dtype):
+        # the winning block size per shape class (benchmarks/block_size.py)
+        self._tile_configs: dict[tuple, dict] = {}
         self._dirty = False
         self._seq = 0  # bumps on every mutation; also the fit-cache key
         self._fit_cache: dict[int, tuple[int, dict]] = {}
@@ -148,7 +177,8 @@ class CalibrationStore:
 
     # -- recording ----------------------------------------------------------
     def record(self, plan, ms_per_image: float,
-               shapes: PlanShapes | None = None) -> None:
+               shapes: PlanShapes | None = None, *,
+               ts: float | None = None) -> None:
         """Fold one measured ms/image into ``plan``'s running stats.
 
         Args:
@@ -156,13 +186,18 @@ class CalibrationStore:
           ms_per_image: measured engine milliseconds per image.
           shapes: the shapes the measurement was taken at; required for
             the observation to participate in the fitted model.
+          ts: measurement wall-clock (``time.time()``); defaults to now.
+            The record's timestamp drives the exponential decay window —
+            stale measurements stop steering ``plan(model="auto")``
+            (tests back-date records through this).
         """
         ms = float(ms_per_image)
+        ts = time.time() if ts is None else float(ts)
         with self._mu:
             o = self._records.setdefault(
                 self._key(plan, shapes),
                 {"count": 0, "total_ms": 0.0, "min_ms": ms, "max_ms": ms,
-                 "last_ms": ms,
+                 "last_ms": ms, "ts": ts,
                  "shapes": shapes.to_json() if shapes is not None else None},
             )
             o["count"] += 1
@@ -170,6 +205,7 @@ class CalibrationStore:
             o["min_ms"] = min(o["min_ms"], ms)
             o["max_ms"] = max(o["max_ms"], ms)
             o["last_ms"] = ms
+            o["ts"] = max(float(o.get("ts", ts)), ts)
             self._seq += 1
             o["seq"] = self._seq
             self._dirty = True
@@ -177,9 +213,44 @@ class CalibrationStore:
 
         get_registry().counter("calibration.records").inc()
 
+    def record_tile_config(self, layout: str, dim: int, dtype: str,
+                           block_rows: int, ms: float, *,
+                           ts: float | None = None) -> None:
+        """Persist the autotuned fused-scan block size for a shape class.
+
+        Keyed ``(layout, dim, dtype)`` — the axes the winning tile
+        actually varies over. ``plan()`` consults this when budgeting a
+        fused candidate (unless the caller pinned ``block_rows``); the
+        sweep in ``benchmarks/block_size.py`` writes it.
+        """
+        ts = time.time() if ts is None else float(ts)
+        with self._mu:
+            self._tile_configs[(str(layout), int(dim), str(dtype))] = {
+                "block_rows": int(block_rows), "ms": float(ms), "ts": ts,
+            }
+            self._seq += 1
+            self._dirty = True
+
+    def tile_config(self, layout: str, dim: int, dtype: str) -> dict | None:
+        """The tuned ``{"block_rows", "ms", "ts"}`` for a shape class, or
+        ``None`` when never tuned (or tuned too long ago — stale tiles
+        age out on the same window as measurements)."""
+        with self._mu:
+            cfg = self._tile_configs.get((str(layout), int(dim), str(dtype)))
+            if cfg is None or _is_stale(cfg["ts"], time.time()):
+                return None
+            return dict(cfg)
+
+    def tile_configs(self) -> dict[tuple, dict]:
+        """All tuned tile configs (stale included — reporting view)."""
+        with self._mu:
+            return {k: dict(v) for k, v in self._tile_configs.items()}
+
     def merge(self, other: "CalibrationStore") -> None:
-        """Fold another store's records into this one (stats summed)."""
+        """Fold another store's records into this one (stats summed,
+        timestamps and tile configs newest-wins)."""
         with self._mu, other._mu:
+            now = time.time()
             for key, o in other._records.items():
                 mine = self._records.get(key)
                 if mine is None:
@@ -191,16 +262,24 @@ class CalibrationStore:
                     mine["min_ms"] = min(mine["min_ms"], o["min_ms"])
                     mine["max_ms"] = max(mine["max_ms"], o["max_ms"])
                     mine["last_ms"] = o["last_ms"]
+                    mine["ts"] = max(float(mine.get("ts", now)),
+                                     float(o.get("ts", now)))
                     self._seq += 1
                     mine["seq"] = self._seq
-            if len(other):
+            for key, cfg in other._tile_configs.items():
+                mine = self._tile_configs.get(key)
+                if mine is None or cfg["ts"] >= mine["ts"]:
+                    self._tile_configs[key] = dict(cfg)
+                    self._seq += 1
+            if len(other) or other._tile_configs:
                 self._dirty = True
 
     def clear(self) -> None:
         with self._mu:
-            if self._records:
+            if self._records or self._tile_configs:
                 self._dirty = True
             self._records.clear()
+            self._tile_configs.clear()
             self._seq += 1  # invalidate cached fits
 
     # -- consultation -------------------------------------------------------
@@ -242,7 +321,7 @@ class CalibrationStore:
             o = self._records.get(self._key(plan, shapes))
             if o is None:
                 o = self._records.get(self._key(plan, None))
-            if o is None:
+            if o is None or _is_stale(o.get("ts", time.time()), time.time()):
                 return None
             return o["total_ms"] / max(1, o["count"])
         o = self.lookup(plan)
@@ -252,13 +331,18 @@ class CalibrationStore:
 
     def fit_rows(self) -> list[tuple[tuple, dict, PlanShapes]]:
         """Observations usable by the fit: ``(signature, stats, shapes)``
-        for every record that carries shapes."""
+        for every record that carries shapes and is inside the decay
+        window (stale records are dropped; fresher ones are further
+        down-weighted by age inside :class:`FittedModel`)."""
         out = []
+        now = time.time()
         with self._mu:
             for (sig, _), o in self._records.items():
-                if o.get("shapes"):
-                    out.append((sig, dict(o),
-                                PlanShapes.from_json(o["shapes"])))
+                if not o.get("shapes"):
+                    continue
+                if _is_stale(o.get("ts", now), now):
+                    continue
+                out.append((sig, dict(o), PlanShapes.from_json(o["shapes"])))
         return out
 
     def __len__(self) -> int:
@@ -313,14 +397,25 @@ class CalibrationStore:
                      "shapes": o.get("shapes")}
                     for (sig, _), o in self._records.items()
                 ],
+                "tile_configs": [
+                    {"layout": layout, "dim": dim, "dtype": dtype,
+                     **cfg}
+                    for (layout, dim, dtype), cfg
+                    in self._tile_configs.items()
+                ],
             }
 
     @classmethod
     def from_json(cls, d: dict | None) -> "CalibrationStore":
         store = cls()
+        now = time.time()
         for rec in (d or {}).get("records", []):
             sig = tuple(rec["signature"])
             o = dict(rec["stats"])
+            # format-1 records carry no timestamp: load them as fresh —
+            # an undated measurement beats no calibration, and it ages
+            # out on the normal window from here
+            o["ts"] = float(o.get("ts", now))
             o["shapes"] = rec.get("shapes")
             shapes_key = (
                 dataclasses.astuple(PlanShapes.from_json(o["shapes"]))
@@ -329,6 +424,14 @@ class CalibrationStore:
             store._seq += 1
             o["seq"] = store._seq
             store._records[(sig, shapes_key)] = o
+        for cfg in (d or {}).get("tile_configs", []):
+            key = (str(cfg["layout"]), int(cfg["dim"]), str(cfg["dtype"]))
+            store._tile_configs[key] = {
+                "block_rows": int(cfg["block_rows"]),
+                "ms": float(cfg.get("ms", 0.0)),
+                "ts": float(cfg.get("ts", now)),
+            }
+            store._seq += 1
         return store
 
 
@@ -393,6 +496,14 @@ class CostModel:
         return self.kind
 
 
+#: the heuristic's flat launch/merge cost of the fused fast path (tile
+#: padding, the in-kernel sorted merge, pipeline fill) — what a small
+#: scan can't amortise. A fused candidate drops the per-wave carry
+#: traffic (its running table never leaves VMEM) and pays this instead,
+#: so the heuristic flips fused-vs-xla with scan size in both directions.
+FUSED_OVERHEAD = 32768.0
+
+
 class HeuristicModel(CostModel):
     """Today's shape rules, now one implementation among peers: first-order
     per-shard scan cost (distance pairs + carry traffic). Unitless — it
@@ -416,7 +527,12 @@ class HeuristicModel(CostModel):
             ratio = (plan.code_m or dim) / (4.0 * dim)
             n_waves = shard_rows // plan.block_rows
             tile_pairs = shard_rows * plan.q_cap * ratio
-            carry = n_waves * q_rows * rerank  # running-best table per wave
+            if plan.impl == "fused":
+                # in-kernel selection: the running table stays in VMEM —
+                # one (q, rerank) emit instead of a per-wave carry fold
+                carry = q_rows * rerank + FUSED_OVERHEAD
+            else:
+                carry = n_waves * q_rows * rerank  # running table per wave
             # LUT build + exact rerank are per *query*, not per probe-
             # expanded scan row: the LUT is leaf-independent and the
             # rerank runs once over the post-merge candidate list
@@ -427,7 +543,10 @@ class HeuristicModel(CostModel):
         if plan.layout == "point_major":
             n_waves = shard_rows // plan.block_rows
             tile_pairs = shard_rows * plan.q_cap
-            carry = n_waves * q_rows * plan.k  # running-best table per wave
+            if plan.impl == "fused":
+                carry = q_rows * plan.k + FUSED_OVERHEAD
+            else:
+                carry = n_waves * q_rows * plan.k  # running table per wave
             return float(tile_pairs + carry)
         q_cap_shard = round_up(
             max(plan.q_tile,
@@ -440,9 +559,9 @@ class HeuristicModel(CostModel):
 
 
 class ObservedModel(CostModel):
-    """Exact-signature measured ms/image (the old consult side of
-    ``plan(use_observations=True)``): decides only when every candidate
-    has been measured under its exact resolved signature — and, for
+    """Exact-signature measured ms/image (``plan(model="observed")``, and
+    the middle rung of the default chain): decides only when every
+    candidate has been measured under its exact resolved signature — and, for
     shape-carrying records, at the exact shapes being planned (see
     :meth:`CalibrationStore.mean_ms`)."""
 
@@ -462,7 +581,7 @@ class ObservedModel(CostModel):
 
 
 class FittedModel(CostModel):
-    """Per-layout least-squares fit of the parametric cost
+    """Per-(layout, impl) least-squares fit of the parametric cost
 
         ``ms ≈ a·(rows_scanned/tile) + b·probes·leaves + c·batch + d``
 
@@ -470,22 +589,27 @@ class FittedModel(CostModel):
     at one shape inform nearby unmeasured shapes. ``tile`` is the plan's
     wave tile (``block_rows`` point-major, ``q_tile`` query-routed);
     slope coefficients ``a, b, c`` are clamped ≥ 0 via an active-set
-    refit, which makes predictions monotone in ``rows_scanned``. A
-    layout's curve is usable once it has ``min_observations`` distinct
-    measured signatures; :meth:`choose` requires every candidate's
-    layout usable, else the chain falls back to the observed model.
+    refit, which makes predictions monotone in ``rows_scanned``.
+    Observations are weighted by the exponential decay window
+    (``0.5 ** (age / CALIBRATION_HALF_LIFE_S)``) so measurements from a
+    retired impl or old hardware fade instead of steering forever. A
+    curve is usable once its (layout, impl) has ``min_observations``
+    distinct measured signatures; :meth:`choose` requires every
+    candidate's curve usable, else the chain falls back to the observed
+    model.
     """
 
     kind = "fitted"
 
-    #: distinct measured signatures a layout needs before its fit is used
+    #: distinct measured signatures a curve needs before its fit is used
     DEFAULT_MIN_OBSERVATIONS = 2
 
     def __init__(self, store: CalibrationStore,
                  min_observations: int = DEFAULT_MIN_OBSERVATIONS):
         self.store = store
         self.min_observations = int(min_observations)
-        self.coefficients: dict[str, tuple[float, float, float, float]] = {}
+        # keyed (layout, impl)
+        self.coefficients: dict[tuple, tuple[float, float, float, float]] = {}
         self._fit()
 
     @staticmethod
@@ -504,35 +628,41 @@ class FittedModel(CostModel):
 
     def _fit(self) -> None:
         # plan() builds a FittedModel per call (Index.search: per segment)
-        # — reuse the store's cached coefficients until a record changes
+        # — reuse the store's cached coefficients until a record changes.
+        # (Age weights drift with wall clock between cache hits, but the
+        # half-life is days; the drift within a process run is noise.)
         cached = self.store._fit_cache.get(self.min_observations)
         if cached is not None and cached[0] == self.store._seq:
             self.coefficients = dict(cached[1])
             return
-        by_layout: dict[str, list[tuple[tuple, float]]] = {}
+        now = time.time()
+        by_curve: dict[tuple, list[tuple[tuple, float, float]]] = {}
         for sig, o, shapes in self.store.fit_rows():
             layout, k, probes, impl, block_rows, q_cap, q_tile, p_cap = sig
             tile = self._plan_tile(layout, block_rows, q_tile)
             x = self.features(layout, tile, probes, shapes)
             y = o["total_ms"] / max(1, o["count"])
-            by_layout.setdefault(layout, []).append((x, y))
-        for layout, rows in by_layout.items():
+            w = _age_weight(float(o.get("ts", now)), now)
+            by_curve.setdefault((layout, impl), []).append((x, y, w))
+        for curve, rows in by_curve.items():
             if len(rows) < self.min_observations:
                 continue
-            X = np.array([x for x, _ in rows], np.float64)
-            y = np.array([v for _, v in rows], np.float64)
-            self.coefficients[layout] = tuple(_nonneg_slope_lstsq(X, y))
+            # weighted least squares via sqrt(w) row scaling
+            sw = np.sqrt(np.array([w for _, _, w in rows], np.float64))
+            X = np.array([x for x, _, _ in rows], np.float64) * sw[:, None]
+            y = np.array([v for _, v, _ in rows], np.float64) * sw
+            self.coefficients[curve] = tuple(_nonneg_slope_lstsq(X, y))
         self.store._fit_cache[self.min_observations] = (
             self.store._seq, dict(self.coefficients)
         )
 
     def ready(self, layout: str | None = None) -> bool:
         if layout is not None:
-            return layout in self.coefficients
+            return any(curve[0] == layout for curve in self.coefficients)
         return bool(self.coefficients)
 
     def predict_ms(self, plan, shapes: PlanShapes) -> float | None:
-        coef = self.coefficients.get(plan.layout)
+        coef = self.coefficients.get((plan.layout, plan.impl))
         if coef is None:
             return None
         tile = self._plan_tile(plan.layout, plan.block_rows, plan.q_tile)
@@ -540,10 +670,11 @@ class FittedModel(CostModel):
         return float(np.dot(coef, x))
 
     def coefficients_json(self) -> dict:
-        """``layout -> {a, b, c, d}`` (the benchmark artifact payload)."""
+        """``"layout/impl" -> {a, b, c, d}`` (the benchmark artifact
+        payload)."""
         return {
-            layout: dict(zip("abcd", (float(v) for v in coef)))
-            for layout, coef in self.coefficients.items()
+            f"{layout}/{impl}": dict(zip("abcd", (float(v) for v in coef)))
+            for (layout, impl), coef in self.coefficients.items()
         }
 
 

@@ -17,12 +17,23 @@ into ``T`` rows (one per probed leaf) whose ``qids`` are *flat slots*
 ``query_id * T + probe_rank``. Both executors treat rows independently; the
 final ``merge_probe_groups`` folds each query's ``T`` disjoint candidate
 rows into one ``k``-row (see tilescan.py for why no id-dedupe is needed).
+
+Fused fast path (``plan.impl="fused"``, docs/kernels.md): the point-major
+and codes scans dispatch to fused variants that never materialize a full
+distance slab between scan and select. On TPU the whole shard goes
+through one ``kernels/fusedscan`` launch with in-kernel k-selection; off
+TPU the wave sweep is software-pipelined — the next wave's lookup/LUT
+slab is fetched into the loop carry while the current wave scans, so the
+gather and the GEMM have no data dependency and can overlap (double
+buffering, structured for async device streams on hardware). Both
+variants return ids+dists bit-identical to ``impl="xla"``.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
+import os
 from typing import NamedTuple
 
 import jax
@@ -63,6 +74,52 @@ class _Carry(NamedTuple):
     overflow: jax.Array
 
 
+class _PipedCarry(NamedTuple):
+    """Wave-loop carry for the pipelined fused executor: in addition to
+    the running table it holds the *next* wave's prefetched lookup slab
+    (``qv``/``qlf``/``slab_start``), so the slab gather issued at the end
+    of wave ``i`` has no data dependency on wave ``i+1``'s scan and the
+    two can overlap (double buffering)."""
+
+    best_d: jax.Array
+    best_i: jax.Array
+    pairs: jax.Array
+    overflow: jax.Array
+    qv: jax.Array
+    qlf: jax.Array
+    slab_start: jax.Array
+
+
+def _fused_wants_kernel() -> bool:
+    """Whether ``impl="fused"`` should launch the Pallas fusedscan kernel.
+
+    On TPU the whole-shard kernel is the point; elsewhere interpret-mode
+    Pallas is an eval loop, so the fused executor runs the pipelined XLA
+    wave sweep instead (bit-identical to ``impl="xla"``). Tests force the
+    kernel off-TPU with ``REPRO_FUSED_FORCE_KERNEL=1``.
+    """
+    if os.environ.get("REPRO_FUSED_FORCE_KERNEL", "") == "1":
+        return True
+    return jax.default_backend() == "tpu"
+
+
+def _leaf_pair_count(p_leaves, q_leaves, n_leaves: int):
+    """Analytic (point, query) leaf-collision count for the whole-shard
+    kernel path: the kernel scans every (tile, tile) cell but only
+    leaf-matching pairs survive masking, so the histogram product equals
+    the wave sweep's summed ``count_pairs`` whenever q_cap never
+    overflowed (and is the honest pair count even when it would have)."""
+    p_ok = ((p_leaves >= 0) & (p_leaves != LEAF_SENTINEL)).astype(jnp.float32)
+    q_ok = ((q_leaves >= 0) & (q_leaves != LEAF_SENTINEL)).astype(jnp.float32)
+    p_cnt = jnp.zeros((n_leaves,), jnp.float32).at[
+        jnp.clip(p_leaves, 0, n_leaves - 1)
+    ].add(p_ok)
+    q_cnt = jnp.zeros((n_leaves,), jnp.float32).at[
+        jnp.clip(q_leaves, 0, n_leaves - 1)
+    ].add(q_ok)
+    return jnp.sum(p_cnt * q_cnt)
+
+
 def pad_lookup(lookup: LookupTable, q_total: int) -> LookupTable:
     """Pad the lookup table to ``q_total`` rows; padding never matches.
 
@@ -92,6 +149,38 @@ def _shard_id(mesh: Mesh, axes) -> jax.Array:
     for a in axes:
         sid = sid * mesh.shape[a] + jax.lax.axis_index(a)
     return sid
+
+
+def _merge_shard_tables(mesh, axes, plan, lookup, best_d, best_i, pairs,
+                        overflow, *, q_total, n_shards, width, add_q_norms):
+    """Merge per-shard ``(S, Q, width)`` k-NN tables into a SearchResult.
+
+    (S, Q, w) sharded over S -> (Q, S*w) sharded over Q (all_to_all
+    reshard), then a purely local per-row top-k. Never replicated: at pod
+    scale the stacked table is tens of GB global. ``add_q_norms`` restores
+    the deferred ``||q||^2`` term (dense scans only — ADC distances are
+    already full squared estimates). Shared by the xla and fused
+    executors so the merge is op-for-op identical across impls.
+    """
+    row_sh = NamedSharding(mesh, P(axes, None))
+    all_d = jnp.transpose(best_d, (1, 0, 2)).reshape(q_total, n_shards * width)
+    all_i = jnp.transpose(best_i, (1, 0, 2)).reshape(q_total, n_shards * width)
+    all_d = jax.lax.with_sharding_constraint(all_d, row_sh)
+    all_i = jax.lax.with_sharding_constraint(all_i, row_sh)
+    neg, sel = jax.lax.top_k(-all_d, width)
+    merged_d = -neg
+    if add_q_norms:
+        merged_d = merged_d + sq_norms(lookup.vecs)[:, None]
+    merged_i = jnp.take_along_axis(all_i, sel, axis=1)
+    merged_d = jnp.where(merged_i >= 0, merged_d, jnp.inf)
+    # unsort to flat slot order, then merge probe groups
+    out_d = jnp.full_like(merged_d, jnp.inf).at[lookup.qids].set(merged_d)
+    out_i = jnp.full_like(merged_i, INVALID_ID).at[lookup.qids].set(merged_i)
+    out_d, out_i = tilescan.merge_probe_groups(out_d, out_i, plan.probes)
+    out_d = jax.lax.with_sharding_constraint(out_d, row_sh)
+    out_i = jax.lax.with_sharding_constraint(out_i, row_sh)
+    return SearchResult(ids=out_i, dists=out_d, pairs=pairs,
+                        q_cap_overflow=overflow)
 
 
 def _point_major_fn(mesh, plan: SearchPlan, *, n_leaves, shard_rows, q_total,
@@ -167,27 +256,10 @@ def _point_major_fn(mesh, plan: SearchPlan, *, n_leaves, shard_rows, q_total,
             in_specs=(row_spec, flat_spec, flat_spec, rep, rep, rep),
             out_specs=(P(axes, None, None), P(axes, None, None), rep, rep),
         )(vecs, leaves, ids, lookup.vecs, lookup.leaves, lookup.offsets)
-        # ---- reduce: merge per-shard k-NN tables --------------------------
-        # (S, Q, k) sharded over S -> (Q, S*k) sharded over Q (all_to_all
-        # reshard), then a purely local per-row top-k. Never replicated:
-        # at pod scale the stacked table is tens of GB global.
-        row_sh = NamedSharding(mesh, P(axes, None))
-        all_d = jnp.transpose(best_d, (1, 0, 2)).reshape(q_total, n_shards * k)
-        all_i = jnp.transpose(best_i, (1, 0, 2)).reshape(q_total, n_shards * k)
-        all_d = jax.lax.with_sharding_constraint(all_d, row_sh)
-        all_i = jax.lax.with_sharding_constraint(all_i, row_sh)
-        neg, sel = jax.lax.top_k(-all_d, k)
-        merged_d = -neg + sq_norms(lookup.vecs)[:, None]  # add back ||q||^2
-        merged_i = jnp.take_along_axis(all_i, sel, axis=1)
-        merged_d = jnp.where(merged_i >= 0, merged_d, jnp.inf)
-        # ---- unsort to flat slot order, then merge probe groups -----------
-        out_d = jnp.full_like(merged_d, jnp.inf).at[lookup.qids].set(merged_d)
-        out_i = jnp.full_like(merged_i, INVALID_ID).at[lookup.qids].set(merged_i)
-        out_d, out_i = tilescan.merge_probe_groups(out_d, out_i, plan.probes)
-        out_d = jax.lax.with_sharding_constraint(out_d, row_sh)
-        out_i = jax.lax.with_sharding_constraint(out_i, row_sh)
-        return SearchResult(ids=out_i, dists=out_d, pairs=pairs,
-                            q_cap_overflow=overflow)
+        return _merge_shard_tables(
+            mesh, axes, plan, lookup, best_d, best_i, pairs, overflow,
+            q_total=q_total, n_shards=n_shards, width=k, add_q_norms=True,
+        )
 
     return pipeline
 
@@ -316,6 +388,23 @@ def _query_routed_fn(mesh, plan: SearchPlan, *, n_leaves, shard_rows, q_total,
     return pipeline
 
 
+def _build_adc_lut(lookup_vecs, codebooks, *, q_total: int, m: int,
+                   n_centers: int):
+    """Per-lookup-row ADC tables, flattened to (Q, m * n_centers):
+    ``lut[q, j, c] = ||q_j - codebook[j, c]||^2``."""
+    dsub = codebooks.shape[-1]
+    sub = lookup_vecs.astype(jnp.float32).reshape(q_total, m, dsub)
+    cb = codebooks.astype(jnp.float32)
+    cross = jnp.einsum(
+        "qmd,mcd->qmc", sub, cb, preferred_element_type=jnp.float32
+    )
+    return (
+        jnp.sum(sub * sub, axis=-1)[:, :, None]
+        - 2.0 * cross
+        + jnp.sum(cb * cb, axis=-1)[None]
+    ).reshape(q_total, m * n_centers)
+
+
 def _scan_codes_fn(mesh, plan: SearchPlan, *, n_leaves, shard_rows, q_total,
                    axes):
     """Compressed-tier scan (docs/compressed_codes.md): a point-major wave
@@ -393,18 +482,8 @@ def _scan_codes_fn(mesh, plan: SearchPlan, *, n_leaves, shard_rows, q_total,
 
     def pipeline(index: DistributedIndex, lookup: LookupTable,
                  codes: jax.Array, codebooks: jax.Array) -> SearchResult:
-        # per-lookup-row ADC tables: lut[q, j, c] = ||q_j - codebook[j,c]||^2
-        dsub = codebooks.shape[-1]
-        sub = lookup.vecs.astype(jnp.float32).reshape(q_total, m, dsub)
-        cb = codebooks.astype(jnp.float32)
-        cross = jnp.einsum(
-            "qmd,mcd->qmc", sub, cb, preferred_element_type=jnp.float32
-        )
-        lut = (
-            jnp.sum(sub * sub, axis=-1)[:, :, None]
-            - 2.0 * cross
-            + jnp.sum(cb * cb, axis=-1)[None]
-        ).reshape(q_total, m * n_centers)
+        lut = _build_adc_lut(lookup.vecs, codebooks, q_total=q_total, m=m,
+                             n_centers=n_centers)
         codes3 = codes.astype(jnp.int32).reshape(n_shards, shard_rows, m)
         leaves = index.leaves.reshape(n_shards, shard_rows)
         ids = index.ids.reshape(n_shards, shard_rows)
@@ -417,25 +496,263 @@ def _scan_codes_fn(mesh, plan: SearchPlan, *, n_leaves, shard_rows, q_total,
             in_specs=(row_spec, flat_spec, flat_spec, rep, rep, rep),
             out_specs=(P(axes, None, None), P(axes, None, None), rep, rep),
         )(codes3, leaves, ids, lut, lookup.leaves, lookup.offsets)
-        # merge per-shard candidate tables; ADC distances are *full*
-        # squared estimates (the LUT carries the ||q_j - c||^2 terms), so
-        # unlike the dense scan there is no ||q||^2 add-back
-        row_sh = NamedSharding(mesh, P(axes, None))
-        all_d = jnp.transpose(best_d, (1, 0, 2)).reshape(q_total, n_shards * r)
-        all_i = jnp.transpose(best_i, (1, 0, 2)).reshape(q_total, n_shards * r)
-        all_d = jax.lax.with_sharding_constraint(all_d, row_sh)
-        all_i = jax.lax.with_sharding_constraint(all_i, row_sh)
-        neg, sel = jax.lax.top_k(-all_d, r)
-        merged_d = -neg
-        merged_i = jnp.take_along_axis(all_i, sel, axis=1)
-        merged_d = jnp.where(merged_i >= 0, merged_d, jnp.inf)
-        out_d = jnp.full_like(merged_d, jnp.inf).at[lookup.qids].set(merged_d)
-        out_i = jnp.full_like(merged_i, INVALID_ID).at[lookup.qids].set(merged_i)
-        out_d, out_i = tilescan.merge_probe_groups(out_d, out_i, plan.probes)
-        out_d = jax.lax.with_sharding_constraint(out_d, row_sh)
-        out_i = jax.lax.with_sharding_constraint(out_i, row_sh)
-        return SearchResult(ids=out_i, dists=out_d, pairs=pairs,
-                            q_cap_overflow=overflow)
+        # ADC distances are *full* squared estimates (the LUT carries the
+        # ||q_j - c||^2 terms), so unlike the dense scan no ||q||^2 add-back
+        return _merge_shard_tables(
+            mesh, axes, plan, lookup, best_d, best_i, pairs, overflow,
+            q_total=q_total, n_shards=n_shards, width=r, add_q_norms=False,
+        )
+
+    return pipeline
+
+
+def _kernel_tile_p(block_rows: int) -> int | None:
+    """The autotuned ``plan.block_rows`` doubles as the fusedscan point
+    tile when it is lane-aligned; otherwise fall back to the kernel's own
+    default tiling (the ops layer pads the shard up regardless)."""
+    return block_rows if block_rows % 128 == 0 else None
+
+
+def _point_major_fused_fn(mesh, plan: SearchPlan, *, n_leaves, shard_rows,
+                          q_total, axes):
+    """Fused point-major executor (docs/kernels.md).
+
+    TPU (or forced): the whole shard goes through one
+    ``fusedscan.fused_topk`` launch — per-tile top-k kept in VMEM and
+    merged across point tiles in-kernel, so no (rows, q) distance slab or
+    per-wave candidate list ever lands in HBM between scan and select.
+
+    Off-TPU: a software-pipelined wave sweep with the same per-tile math
+    as ``impl="xla"`` — the next wave's query slab is prefetched into the
+    loop carry while the current wave scans (double buffering), keeping
+    results bit-identical to the reference executor.
+    """
+    block_rows, q_cap, k = plan.block_rows, plan.q_cap, plan.k
+    n_shards = math.prod(mesh.shape[a] for a in axes)
+    if shard_rows % block_rows != 0:
+        raise ValueError(f"{shard_rows=} not divisible by {block_rows=}")
+    if k > block_rows:
+        raise ValueError(f"{k=} must be <= {block_rows=}")
+    if q_cap > q_total:
+        raise ValueError(f"{q_cap=} must be <= padded query count {q_total=}")
+    n_waves = shard_rows // block_rows
+    use_kernel = _fused_wants_kernel()
+
+    def kernel_shard_fn(vecs, leaves, ids, lk_vecs, lk_leaves, lk_offsets):
+        from repro.kernels.fusedscan import ops as fused_ops
+
+        vecs, leaves, ids = vecs[0], leaves[0], ids[0]
+        best_d, best_i = fused_ops.fused_topk(
+            vecs, leaves, ids, lk_vecs, lk_leaves, k=k, impl="pallas",
+            tile_p=_kernel_tile_p(block_rows),
+        )
+        pairs = jax.lax.psum(
+            _leaf_pair_count(leaves, lk_leaves, n_leaves), axes
+        )
+        # whole-shard scan: every leaf-matching query row is visible to
+        # every point tile — the q_cap slab budget cannot be exceeded
+        overflow = jax.lax.psum(jnp.zeros((), jnp.int32), axes)
+        return best_d[None], best_i[None], pairs, overflow
+
+    def piped_shard_fn(vecs, leaves, ids, lk_vecs, lk_leaves, lk_offsets):
+        vecs, leaves, ids = vecs[0], leaves[0], ids[0]
+
+        def fetch(i):
+            first = jax.lax.dynamic_slice(leaves, (i * block_rows,), (1,))[0]
+            slab = tilescan.leaf_slab(
+                lk_offsets, first, n_entries=n_leaves, total_rows=q_total,
+                cap=q_cap,
+            )
+            qv = jax.lax.dynamic_slice(
+                lk_vecs, (slab.start, 0), (q_cap, lk_vecs.shape[1])
+            )
+            qlf = jax.lax.dynamic_slice(lk_leaves, (slab.start,), (q_cap,))
+            return qv, qlf, slab.start
+
+        def wave(i, c: _PipedCarry) -> _PipedCarry:
+            start = i * block_rows
+            pv = jax.lax.dynamic_slice(vecs, (start, 0), (block_rows, vecs.shape[1]))
+            plf = jax.lax.dynamic_slice(leaves, (start,), (block_rows,))
+            pid = jax.lax.dynamic_slice(ids, (start,), (block_rows,))
+            # scan the slab prefetched by the previous iteration
+            cand_d, cand_i = tilescan.scan_tile(
+                pv, plf, pid, c.qv, c.qlf, k=k, impl="xla"
+            )
+            cur_d = jax.lax.dynamic_slice(c.best_d, (c.slab_start, 0), (q_cap, k))
+            cur_i = jax.lax.dynamic_slice(c.best_i, (c.slab_start, 0), (q_cap, k))
+            new_d, new_i = tilescan.fold_topk(cur_d, cur_i, cand_d, cand_i)
+            best_d = jax.lax.dynamic_update_slice(c.best_d, new_d, (c.slab_start, 0))
+            best_i = jax.lax.dynamic_update_slice(c.best_i, new_i, (c.slab_start, 0))
+            pairs = c.pairs + tilescan.count_pairs(plf, c.qlf)
+            overflow = c.overflow + tilescan.slab_overflow(
+                lk_offsets, tilescan.last_valid_leaf(plf),
+                tilescan.Slab(start=c.slab_start, cap=q_cap),
+                n_entries=n_leaves,
+            )
+            # prefetch wave i+1's slab (clamped on the last wave)
+            qv, qlf, slab_start = fetch(jnp.minimum(i + 1, n_waves - 1))
+            return _PipedCarry(best_d, best_i, pairs, overflow, qv, qlf,
+                               slab_start)
+
+        qv0, qlf0, start0 = fetch(0)
+        init = _PipedCarry(
+            best_d=jnp.full((q_total, k), jnp.inf, jnp.float32),
+            best_i=jnp.full((q_total, k), INVALID_ID, jnp.int32),
+            pairs=jnp.zeros((), jnp.float32),
+            overflow=jnp.zeros((), jnp.int32),
+            qv=qv0, qlf=qlf0, slab_start=start0,
+        )
+        init = jax.tree.map(lambda x: pcast_varying(x, axes), init)
+        out = jax.lax.fori_loop(0, n_waves, wave, init)
+        pairs = jax.lax.psum(out.pairs, axes)
+        overflow = jax.lax.psum(out.overflow, axes)
+        return out.best_d[None], out.best_i[None], pairs, overflow
+
+    shard_fn = kernel_shard_fn if use_kernel else piped_shard_fn
+
+    def pipeline(index: DistributedIndex, lookup: LookupTable) -> SearchResult:
+        d = index.vecs.shape[-1]
+        vecs = index.vecs.reshape(n_shards, shard_rows, d)
+        leaves = index.leaves.reshape(n_shards, shard_rows)
+        ids = index.ids.reshape(n_shards, shard_rows)
+        row_spec = P(axes, None)
+        flat_spec = P(axes)
+        rep = P()
+        best_d, best_i, pairs, overflow = shard_map(
+            shard_fn,
+            mesh=mesh,
+            in_specs=(row_spec, flat_spec, flat_spec, rep, rep, rep),
+            out_specs=(P(axes, None, None), P(axes, None, None), rep, rep),
+        )(vecs, leaves, ids, lookup.vecs, lookup.leaves, lookup.offsets)
+        return _merge_shard_tables(
+            mesh, axes, plan, lookup, best_d, best_i, pairs, overflow,
+            q_total=q_total, n_shards=n_shards, width=k, add_q_norms=True,
+        )
+
+    return pipeline
+
+
+def _scan_codes_fused_fn(mesh, plan: SearchPlan, *, n_leaves, shard_rows,
+                         q_total, axes):
+    """Fused compressed-tier executor: same dispatch split as
+    :func:`_point_major_fused_fn` but over PQ code slabs under the
+    asymmetric distance — the kernel path is one whole-shard
+    ``fusedscan.fused_adc_topk`` launch; the pipelined path prefetches
+    the next wave's LUT slab into the loop carry."""
+    from repro.core.sentinels import PAD_TILE_POINT_LEAF
+
+    block_rows, q_cap = plan.block_rows, plan.q_cap
+    r, m = plan.rerank, plan.code_m
+    n_centers = 1 << plan.code_bits
+    n_shards = math.prod(mesh.shape[a] for a in axes)
+    if shard_rows % block_rows != 0:
+        raise ValueError(f"{shard_rows=} not divisible by {block_rows=}")
+    if r > block_rows:
+        raise ValueError(f"rerank {r} must be <= {block_rows=}")
+    if q_cap > q_total:
+        raise ValueError(f"{q_cap=} must be <= padded query count {q_total=}")
+    n_waves = shard_rows // block_rows
+    use_kernel = _fused_wants_kernel()
+
+    def kernel_shard_fn(codes, leaves, ids, lk_lut, lk_leaves, lk_offsets):
+        from repro.kernels.fusedscan import ops as fused_ops
+
+        codes, leaves, ids = codes[0], leaves[0], ids[0]
+        # tombstoned rows must never match (see _scan_codes_fn)
+        plf_m = jnp.where(ids >= 0, leaves, PAD_TILE_POINT_LEAF)
+        best_d, best_i = fused_ops.fused_adc_topk(
+            codes, plf_m, ids, lk_lut.reshape(q_total, m, n_centers),
+            lk_leaves, k=r, impl="pallas",
+            tile_p=_kernel_tile_p(block_rows),
+        )
+        pairs = jax.lax.psum(
+            _leaf_pair_count(plf_m, lk_leaves, n_leaves), axes
+        )
+        overflow = jax.lax.psum(jnp.zeros((), jnp.int32), axes)
+        return best_d[None], best_i[None], pairs, overflow
+
+    def piped_shard_fn(codes, leaves, ids, lk_lut, lk_leaves, lk_offsets):
+        codes, leaves, ids = codes[0], leaves[0], ids[0]
+
+        def fetch(i):
+            first = jax.lax.dynamic_slice(leaves, (i * block_rows,), (1,))[0]
+            slab = tilescan.leaf_slab(
+                lk_offsets, first, n_entries=n_leaves, total_rows=q_total,
+                cap=q_cap,
+            )
+            lut = jax.lax.dynamic_slice(
+                lk_lut, (slab.start, 0), (q_cap, m * n_centers)
+            )
+            qlf = jax.lax.dynamic_slice(lk_leaves, (slab.start,), (q_cap,))
+            return lut, qlf, slab.start
+
+        def wave(i, c: _PipedCarry) -> _PipedCarry:
+            from repro.kernels.adcscan import ops as adc_ops
+
+            start = i * block_rows
+            pc = jax.lax.dynamic_slice(codes, (start, 0), (block_rows, m))
+            plf = jax.lax.dynamic_slice(leaves, (start,), (block_rows,))
+            pid = jax.lax.dynamic_slice(ids, (start,), (block_rows,))
+            plf_m = jnp.where(pid >= 0, plf, PAD_TILE_POINT_LEAF)
+            cand_d, cand_sel = adc_ops.adc_topk(
+                pc, plf_m, c.qv.reshape(q_cap, m, n_centers), c.qlf, k=r,
+                impl="xla",
+            )
+            cand_i = jnp.where(
+                cand_sel >= 0, pid[jnp.clip(cand_sel, 0)], INVALID_ID
+            )
+            cand_d = jnp.where(cand_i >= 0, cand_d, jnp.inf)
+            cur_d = jax.lax.dynamic_slice(c.best_d, (c.slab_start, 0), (q_cap, r))
+            cur_i = jax.lax.dynamic_slice(c.best_i, (c.slab_start, 0), (q_cap, r))
+            new_d, new_i = tilescan.fold_topk(cur_d, cur_i, cand_d, cand_i)
+            best_d = jax.lax.dynamic_update_slice(c.best_d, new_d, (c.slab_start, 0))
+            best_i = jax.lax.dynamic_update_slice(c.best_i, new_i, (c.slab_start, 0))
+            pairs = c.pairs + tilescan.count_pairs(plf_m, c.qlf)
+            overflow = c.overflow + tilescan.slab_overflow(
+                lk_offsets, tilescan.last_valid_leaf(plf),
+                tilescan.Slab(start=c.slab_start, cap=q_cap),
+                n_entries=n_leaves,
+            )
+            lut, qlf, slab_start = fetch(jnp.minimum(i + 1, n_waves - 1))
+            return _PipedCarry(best_d, best_i, pairs, overflow, lut, qlf,
+                               slab_start)
+
+        lut0, qlf0, start0 = fetch(0)
+        init = _PipedCarry(
+            best_d=jnp.full((q_total, r), jnp.inf, jnp.float32),
+            best_i=jnp.full((q_total, r), INVALID_ID, jnp.int32),
+            pairs=jnp.zeros((), jnp.float32),
+            overflow=jnp.zeros((), jnp.int32),
+            qv=lut0, qlf=qlf0, slab_start=start0,
+        )
+        init = jax.tree.map(lambda x: pcast_varying(x, axes), init)
+        out = jax.lax.fori_loop(0, n_waves, wave, init)
+        pairs = jax.lax.psum(out.pairs, axes)
+        overflow = jax.lax.psum(out.overflow, axes)
+        return out.best_d[None], out.best_i[None], pairs, overflow
+
+    shard_fn = kernel_shard_fn if use_kernel else piped_shard_fn
+
+    def pipeline(index: DistributedIndex, lookup: LookupTable,
+                 codes: jax.Array, codebooks: jax.Array) -> SearchResult:
+        lut = _build_adc_lut(lookup.vecs, codebooks, q_total=q_total, m=m,
+                             n_centers=n_centers)
+        codes3 = codes.astype(jnp.int32).reshape(n_shards, shard_rows, m)
+        leaves = index.leaves.reshape(n_shards, shard_rows)
+        ids = index.ids.reshape(n_shards, shard_rows)
+        row_spec = P(axes, None)
+        flat_spec = P(axes)
+        rep = P()
+        best_d, best_i, pairs, overflow = shard_map(
+            shard_fn,
+            mesh=mesh,
+            in_specs=(row_spec, flat_spec, flat_spec, rep, rep, rep),
+            out_specs=(P(axes, None, None), P(axes, None, None), rep, rep),
+        )(codes3, leaves, ids, lut, lookup.leaves, lookup.offsets)
+        return _merge_shard_tables(
+            mesh, axes, plan, lookup, best_d, best_i, pairs, overflow,
+            q_total=q_total, n_shards=n_shards, width=r, add_q_norms=False,
+        )
 
     return pipeline
 
@@ -444,6 +761,11 @@ _LAYOUT_BUILDERS = {
     "point_major": _point_major_fn,
     "query_routed": _query_routed_fn,
     "scan_codes": _scan_codes_fn,
+}
+
+_FUSED_BUILDERS = {
+    "point_major": _point_major_fused_fn,
+    "scan_codes": _scan_codes_fused_fn,
 }
 
 
@@ -472,7 +794,14 @@ def make_executor(
     axes = tuple(axes) if axes else batch_axes(mesh)
     if q_total % plan.probes:
         raise ValueError(f"{q_total=} must be a multiple of {plan.probes=}")
-    builder = _LAYOUT_BUILDERS[plan.layout]
+    if plan.impl == "fused":
+        if plan.layout not in _FUSED_BUILDERS:
+            raise ValueError(
+                f"impl='fused' is not supported for layout {plan.layout!r}"
+            )
+        builder = _FUSED_BUILDERS[plan.layout]
+    else:
+        builder = _LAYOUT_BUILDERS[plan.layout]
     return builder(
         mesh, plan, n_leaves=n_leaves, shard_rows=shard_rows, q_total=q_total,
         axes=axes,

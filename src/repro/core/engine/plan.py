@@ -30,7 +30,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-import warnings
 from typing import Any
 
 import jax.numpy as jnp
@@ -42,6 +41,9 @@ from repro.core.engine.costmodel import (
     PlanShapes,
 )
 from repro.distributed.meshutil import round_up
+
+
+IMPLS = ("xla", "pallas", "fused", "auto")
 
 
 def largest_divisor_leq(n: int, cap: int) -> int:
@@ -110,7 +112,13 @@ class SearchPlan:
     layout: str  # "point_major" | "query_routed" | "scan_codes"
     k: int
     probes: int = 1  # multi-probe width T: leaves visited per query
-    impl: str = "xla"  # l2topk/adcscan impl: "xla" | "pallas" | "auto"
+    # executor implementation (docs/kernels.md):
+    #   "xla"    — reference wave sweep (per-tile l2topk/adcscan, impl xla)
+    #   "pallas" — reference wave sweep with the per-tile Pallas kernels
+    #   "fused"  — fused fast path: whole-shard fusedscan kernel on TPU,
+    #              pipelined double-buffered wave sweep elsewhere
+    #   "auto"   — plan() prices "xla" vs "fused" via the cost model
+    impl: str = "xla"
     wire_dtype: Any = jnp.float32  # routed-shuffle payload dtype
     # point-major budgets (scan_codes shares them: its code scan is a
     # point-major wave sweep over uint8 code slabs)
@@ -128,6 +136,13 @@ class SearchPlan:
     def __post_init__(self):
         if self.layout not in LAYOUTS:
             raise ValueError(f"unknown layout {self.layout!r}; want {LAYOUTS}")
+        if self.impl not in IMPLS:
+            raise ValueError(f"unknown impl {self.impl!r}; want {IMPLS}")
+        if self.impl == "fused" and self.layout == "query_routed":
+            raise ValueError(
+                "impl='fused' is not supported for layout 'query_routed' "
+                "(the fused scan is a point-major sweep; docs/kernels.md)"
+            )
         if self.k < 1:
             raise ValueError(f"{self.k=} must be >= 1")
         if self.probes < 1:
@@ -261,7 +276,6 @@ def plan(
     code_bits: int | None = None,
     model: Any = "auto",
     calibration: CalibrationStore | None = None,
-    use_observations: bool | None = None,
 ) -> SearchPlan:
     """Resolve a full :class:`SearchPlan` from shapes.
 
@@ -275,7 +289,13 @@ def plan(
       layout: ``"point_major"``, ``"query_routed"``, ``"scan_codes"``
         (requires a codes artifact — ``code_m``/``code_bits`` set), or
         ``"auto"``.
-      impl: kernel implementation (``"xla"``/``"pallas"``/``"auto"``).
+      impl: executor implementation — ``"xla"`` (reference),
+        ``"pallas"`` (per-tile kernels), ``"fused"`` (the fused fast
+        path, docs/kernels.md), or ``"auto"`` (the cost model prices
+        ``"xla"`` vs ``"fused"`` per candidate layout; query-routed only
+        ever runs ``"xla"``). Fused candidates pick up the autotuned
+        block size persisted in the calibration store (see
+        ``benchmarks/block_size.py``) unless ``block_rows`` is pinned.
       wire_dtype: routed-shuffle payload dtype.
       block_rows/q_cap/q_tile/p_cap: pin a budget instead of deriving it;
         ``query_capacity_factor``: routing headroom for hot shards.
@@ -291,8 +311,6 @@ def plan(
       calibration: the :class:`CalibrationStore` the calibrated models
         read (an index's ``Index.calibration``); ``None`` uses the
         module-level default store.
-      use_observations: deprecated — ``True`` maps to
-        ``model="observed"``, ``False`` to ``model="heuristic"``.
 
     Returns:
       A fully resolved (budgeted) :class:`SearchPlan`.
@@ -304,41 +322,64 @@ def plan(
         per shard).
 
     ``layout="auto"`` budgets *both* layouts and asks the cost model to
-    keep the cheaper one. With no calibration data every model chain
-    falls back to the heuristic shape rules, so a cold process plans
-    exactly as it always has; once measurements exist (recorded by the
-    serving session, persisted in the index manifest) they decide.
-    Ties go to the paper-faithful point-major baseline under every model.
+    keep the cheaper one; ``impl="auto"`` additionally expands each
+    dense-scan layout into an ``"xla"`` and a ``"fused"`` candidate, so
+    the model prices impl as one more planning axis. With no calibration
+    data every model chain falls back to the heuristic shape rules, so a
+    cold process plans exactly as it always has; once measurements exist
+    (recorded by the serving session, persisted in the index manifest)
+    they decide. Ties go to the paper-faithful point-major ``"xla"``
+    baseline under every model.
     """
-    if use_observations is not None:
-        if model != "auto":
-            raise ValueError(
-                "pass either model=... or the deprecated "
-                "use_observations=..., not both"
-            )
-        warnings.warn(
-            "plan(use_observations=...) is deprecated; use "
-            "model='observed' (True) or model='heuristic' (False)",
-            DeprecationWarning,
-            stacklevel=2,
-        )
-        model = "observed" if use_observations else "heuristic"
     if probes > n_leaves:
         raise ValueError(f"{probes=} must be <= {n_leaves=}")
+    if impl not in IMPLS:
+        raise ValueError(f"unknown impl {impl!r}; want {IMPLS}")
     shard_rows = max(1, rows // max(1, n_shards))
     q_rows = max(1, n_queries * probes)  # probe-expanded lookup rows
     base = dict(
-        k=k, probes=probes, impl=impl, wire_dtype=wire_dtype,
+        k=k, probes=probes, wire_dtype=wire_dtype,
         block_rows=block_rows, q_cap=q_cap, q_tile=q_tile, p_cap=p_cap,
         query_capacity_factor=query_capacity_factor,
     )
     shapes = dict(shard_rows=shard_rows, n_leaves=n_leaves, q_rows=q_rows)
+    store = (calibration if calibration is not None
+             else costmodel_lib.default_calibration())
+
+    def impls_for(lay: str) -> tuple[str, ...]:
+        if impl != "auto":
+            return (impl,)
+        # only the point-major sweeps have a fused variant; the xla
+        # reference comes first so ties keep the baseline
+        return ("xla", "fused") if lay != "query_routed" else ("xla",)
+
+    def variants(p: SearchPlan) -> list[SearchPlan]:
+        """One resolved candidate per impl; fused candidates honor the
+        autotuned tile config persisted in the calibration store."""
+        out = []
+        for i in impls_for(p.layout):
+            v = dataclasses.replace(p, impl=i)
+            if i == "fused" and block_rows is None:
+                cfg = store.tile_config(
+                    p.layout, dim, jnp.dtype(wire_dtype).name
+                )
+                if cfg:
+                    v = dataclasses.replace(
+                        v,
+                        block_rows=largest_divisor_leq(
+                            shard_rows, int(cfg["block_rows"])
+                        ),
+                    )
+            out.append(v.resolved())
+        return out
+
     has_codes = code_m is not None and code_bits is not None
     if layout == "scan_codes" and not has_codes:
         raise ValueError(
             "layout='scan_codes' needs code_m/code_bits (a PQ codes "
             "artifact on the index; docs/compressed_codes.md)"
         )
+    candidates: list[SearchPlan] = []
     if has_codes:
         sc = _scan_codes_budgets(
             SearchPlan(layout="scan_codes", rerank=rerank, code_m=code_m,
@@ -346,38 +387,42 @@ def plan(
             n_shards=n_shards, **shapes,
         )
         if layout == "scan_codes":
-            return sc.resolved()
+            candidates = variants(sc)
     pm = _point_major_budgets(
         SearchPlan(layout="point_major", **base), n_shards=n_shards, **shapes
     )
     if layout == "point_major":
-        return pm.resolved()
+        candidates = variants(pm)
     routable = n_leaves % n_shards == 0
-    if layout == "auto" and not routable:
-        candidates = [pm.resolved()]
-        if has_codes:
-            candidates.append(sc.resolved())
-        if len(candidates) == 1:
-            return pm.resolved()
-    elif layout == "query_routed" or layout == "auto":
-        qr = _query_routed_budgets(
-            SearchPlan(layout="query_routed", **base), n_shards=n_shards,
-            **shapes
+    if layout == "query_routed":
+        if not routable:
+            raise ValueError(
+                f"{n_leaves=} must divide over {n_shards} shards for "
+                "layout='query_routed'"
+            )
+        candidates = variants(
+            _query_routed_budgets(
+                SearchPlan(layout="query_routed", **base),
+                n_shards=n_shards, **shapes,
+            )
         )
-        if layout == "query_routed":
-            if not routable:
-                raise ValueError(
-                    f"{n_leaves=} must divide over {n_shards} shards for "
-                    "layout='query_routed'"
-                )
-            return qr.resolved()
+    elif layout == "auto":
         # candidates listed baseline-first: every model breaks ties toward
-        # the paper-faithful point-major scan
-        candidates = [pm.resolved(), qr.resolved()]
+        # the paper-faithful point-major xla scan
+        candidates = variants(pm)
+        if routable and impl != "fused":
+            candidates += variants(
+                _query_routed_budgets(
+                    SearchPlan(layout="query_routed", **base),
+                    n_shards=n_shards, **shapes,
+                )
+            )
         if has_codes:
-            candidates.append(sc.resolved())
-    else:
+            candidates += variants(sc)
+    if not candidates:
         raise ValueError(f"unknown layout {layout!r}")
+    if len(candidates) == 1:
+        return candidates[0]
     ctx = PlanShapes(
         rows=rows, n_queries=n_queries, n_shards=n_shards, n_leaves=n_leaves,
         dim=dim,

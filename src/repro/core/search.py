@@ -170,7 +170,6 @@ def batch_search(
     q_tile: int | None = None,
     cost_model="auto",
     calibration=None,
-    use_observations: bool | None = None,
 ) -> SearchResult:
     """Eager convenience wrapper: plan, build lookup, pad, jit, run, trim.
 
@@ -178,8 +177,9 @@ def batch_search(
     ``query_routed`` (beyond-paper shuffle), or ``auto`` (the ``plan()``
     cost model picks — ``cost_model``/``calibration`` select which model
     and which calibration store, see
-    :mod:`repro.core.engine.costmodel`; ``use_observations`` is the
-    deprecated pre-cost-model spelling). ``probes=T`` visits each query's
+    :mod:`repro.core.engine.costmodel`). ``impl`` selects the executor
+    implementation (``"fused"`` = the fast path, ``"auto"`` = the cost
+    model prices it; docs/kernels.md). ``probes=T`` visits each query's
     T nearest leaves — the multi-probe recall lever (docs/engine.md).
     """
     n_shards = data_axis_size(mesh)
@@ -199,7 +199,6 @@ def batch_search(
         p_cap=p_cap,
         model=cost_model,
         calibration=calibration,
-        use_observations=use_observations,
     )
     lookup = jit_build_lookup(tree, queries, probes=probes)
     return search_with_lookup(index, lookup, p, mesh, n_queries=q)

@@ -1251,7 +1251,6 @@ class Index:
         p_cap: int | None = None,
         rerank: int | None = None,
         cost_model="auto",
-        use_observations: bool | None = None,
     ) -> SearchResult:
         """k-NN over every live row: one shared lookup build, one executor
         run per segment, one ascending-distance merge across segments.
@@ -1274,8 +1273,6 @@ class Index:
           cost_model: which model ranks an ``"auto"`` layout (``"auto"``
             / ``"heuristic"`` / ``"observed"`` / ``"fitted"``), consulting
             *this index's* manifest-persisted calibration store.
-          use_observations: deprecated spelling of
-            ``cost_model="observed"`` (see :func:`repro.core.engine.plan`).
 
         Returns:
           A :class:`SearchResult`: ``(q, k)`` ids (``-1`` where fewer
@@ -1324,7 +1321,6 @@ class Index:
                 n_leaves=self.n_leaves, n_queries=q, n_shards=n_shards,
                 k=k, probes=probes, layout=layout, impl=impl,
                 model=cost_model, calibration=self.calibration,
-                use_observations=use_observations,
                 dim=self.dim, rerank=rerank,
                 code_m=self.quantizer.m, code_bits=self.quantizer.bits,
             )
@@ -1399,7 +1395,6 @@ class Index:
                 p_cap=p_cap,
                 model=cost_model,
                 calibration=self.calibration,
-                use_observations=use_observations,
             )
             per.append(
                 search_with_lookup(view, lookup, p, self.mesh, n_queries=q)

@@ -456,7 +456,6 @@ class ShardedIndex:
         p_cap: int | None = None,
         rerank: int | None = None,
         cost_model="auto",
-        use_observations: bool | None = None,
     ) -> SearchResult:
         """Scatter-gather k-NN: one shared lookup build, each shard scans
         its segments with the engine's jit-cached executors, per-shard
@@ -517,7 +516,6 @@ class ShardedIndex:
                 n_shards=data_axis_size(self.index.mesh), k=k,
                 probes=probes, layout=layout, impl=impl, model=cost_model,
                 calibration=self.index.calibration,
-                use_observations=use_observations,
                 dim=self.index.dim, rerank=rerank,
                 code_m=pq.m, code_bits=pq.bits,
             )
@@ -565,7 +563,6 @@ class ShardedIndex:
                     p_cap=p_cap,
                     model=cost_model,
                     calibration=self.index.calibration,
-                    use_observations=use_observations,
                 )
                 # never scale a budget the caller pinned: a pinned
                 # slab must reproduce exactly (Args mirror Index.search)

@@ -1,0 +1,8 @@
+from repro.kernels.fusedscan.ops import (  # noqa: F401
+    fused_adc_topk,
+    fused_topk,
+)
+from repro.kernels.fusedscan.ref import (  # noqa: F401
+    fused_adc_topk_ref,
+    fused_topk_ref,
+)

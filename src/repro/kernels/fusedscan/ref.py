@@ -1,0 +1,49 @@
+"""Pure-jnp oracle for the whole-shard fused scan + k-selection.
+
+Semantics (shared by kernel and XLA fallback):
+
+  given a shard's cluster-sorted points (P, d) with leaf ids (P,) and
+  global descriptor ids (P,), and a probe-expanded lookup table
+  queries (Q, d) with leaf ids (Q,), return for every lookup row the k
+  nearest same-leaf points across the *whole shard* in one pass:
+    dists (Q, k) fp32  — partial squared distance ||p||^2 - 2 p.q
+                         (the ||q||^2 term is a per-query constant and is
+                         added back by the caller), +inf where no match
+    ids   (Q, k) int32 — global descriptor ids, -1 where no match (or
+                         where the row is tombstoned: id < 0)
+
+Selection contract: the k smallest by ``(distance, shard row)``
+lexicographic — exactly what the wave-folded ``impl="xla"`` executor
+produces (``jax.lax.top_k`` breaks distance ties toward the earlier row,
+and ``tilescan.fold_topk`` keeps earlier waves ahead of later ones), so
+the fused path is bit-identical to the reference executor.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.sentinels import INVALID_ID
+from repro.kernels.adcscan.ref import adc_topk_ref
+from repro.kernels.l2topk.ref import l2_topk_ref
+
+
+def _map_ids(dists, sel, point_ids):
+    ids = jnp.where(
+        sel >= 0, point_ids[jnp.clip(sel, 0)], jnp.int32(INVALID_ID)
+    ).astype(jnp.int32)
+    return jnp.where(ids >= 0, dists, jnp.inf), ids
+
+
+def fused_topk_ref(points, point_leaves, point_ids, queries, query_leaves,
+                   k: int):
+    dists, sel = l2_topk_ref(points, point_leaves, queries, query_leaves, k)
+    return _map_ids(dists, sel, point_ids)
+
+
+def fused_adc_topk_ref(codes, point_leaves, point_ids, lut, query_leaves,
+                       k: int):
+    """ADC variant over PQ code rows (``lut`` is (Q, m, C) f32); distances
+    are *full* squared estimates — no deferred ``||q||^2`` term."""
+    dists, sel = adc_topk_ref(codes, point_leaves, lut, query_leaves, k)
+    return _map_ids(dists, sel, point_ids)

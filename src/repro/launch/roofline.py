@@ -138,6 +138,48 @@ def analyze(compiled) -> Roofline:
     )
 
 
+def fused_scan_estimate(
+    *,
+    rows: int,
+    dim: int,
+    q_rows: int,
+    k: int,
+    block_rows: int,
+    dtype_bytes: int = 4,
+) -> dict:
+    """First-order roofline for the fused multi-probe tile scan.
+
+    The flops are layout-independent (every (point, query) pair costs one
+    ``dim``-wide MAC, times 2); what the fused kernel changes is the HBM
+    story. The reference wave sweep materialises each wave's distance
+    slab and folds a ``(q_rows, 2k)`` running table through memory once
+    per wave; the fused kernel keeps the running top-k in VMEM and emits
+    one ``(q_rows, k)`` table at the end — so its byte count is just the
+    operand stream plus the output. The intensity gap between the two is
+    the kernel's headroom, and it grows with ``rows / block_rows``
+    (docs/kernels.md). All terms are per shard.
+    """
+    n_waves = max(1, int(rows) // max(1, int(block_rows)))
+    flops = 2.0 * rows * q_rows * dim
+    stream = float(rows + q_rows) * dim * dtype_bytes  # operands, once
+    out = float(q_rows) * k * 8.0  # f32 dists + i32 ids
+    fused_bytes = stream + out
+    slab = float(rows) * q_rows * 4.0  # per-wave distance slabs, summed
+    carry = float(n_waves) * q_rows * 2 * k * 8.0  # running-table folds
+    reference_bytes = stream + out + slab + carry
+    return {
+        "flops": flops,
+        "n_waves": n_waves,
+        "fused_hbm_bytes": fused_bytes,
+        "reference_hbm_bytes": reference_bytes,
+        "fused_intensity": flops / max(1.0, fused_bytes),
+        "reference_intensity": flops / max(1.0, reference_bytes),
+        "t_compute": flops / PEAK_FLOPS_BF16,
+        "t_memory_fused": fused_bytes / HBM_BW,
+        "t_memory_reference": reference_bytes / HBM_BW,
+    }
+
+
 def memory_stats(compiled) -> dict:
     try:
         m = compiled.memory_analysis()

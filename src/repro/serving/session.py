@@ -809,6 +809,7 @@ class SearchSession:
                 "bucket": rt.bucket,
                 "cost_model": self.cost_model,
                 "layout": rt.plan.layout,
+                "impl": rt.plan.impl,
                 "q_total": rt.q_total,
                 "block_rows": rt.plan.block_rows,
                 "q_cap": rt.plan.q_cap,

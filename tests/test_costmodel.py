@@ -4,6 +4,8 @@ generalization + monotonicity, manifest-persisted index-scoped
 calibration, and the bit-identity invariant — the model picks plans,
 never results — under every cost-model setting."""
 
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -11,7 +13,9 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
+from repro.core.engine import costmodel as costmodel_lib
 from repro.core.engine import (
+    SearchPlan,
     CalibrationStore,
     FittedModel,
     HeuristicModel,
@@ -124,10 +128,11 @@ def test_describe_reports_only_models_that_can_decide():
     assert resolve_model("fitted", store).describe() == "fitted"
 
 
-def test_plan_rejects_model_and_use_observations_together():
-    with pytest.raises(ValueError, match="not both"):
-        make_plan(layout="auto", model="fitted", use_observations=True,
-                  **SHAPES)
+def test_plan_use_observations_shim_removed():
+    """The deprecated ``plan(use_observations=)`` spelling is gone (it
+    warned for several releases); ``model=`` is the only spelling."""
+    with pytest.raises(TypeError):
+        make_plan(layout="auto", use_observations=True, **SHAPES)
 
 
 def test_default_store_reset_between_tests_part1():
@@ -274,19 +279,188 @@ def test_fitted_predictions_monotone_in_rows_scanned(
     assert all(a <= b + 1e-9 for a, b in zip(preds, preds[1:])), preds
 
 
-def test_plan_use_observations_deprecation_shim():
+def test_model_spellings_replace_use_observations():
+    """``model="observed"`` / ``model="heuristic"`` cover what the removed
+    ``use_observations=True/False`` shim used to mean."""
     pm, qr = _candidates()
     default_calibration().record(pm, 100.0)
     default_calibration().record(qr, 1.0)
-    with pytest.deprecated_call():
-        shimmed = make_plan(layout="auto", use_observations=True, **SHAPES)
-    assert shimmed.layout == "query_routed"  # observed semantics
-    with pytest.deprecated_call():
-        legacy_off = make_plan(layout="auto", use_observations=False,
-                               **SHAPES)
-    assert legacy_off.layout == make_plan(
+    observed = make_plan(layout="auto", model="observed", **SHAPES)
+    assert observed.layout == "query_routed"  # data wins over shape rules
+    heuristic = make_plan(layout="auto", model="heuristic", **SHAPES)
+    assert heuristic.layout == make_plan(
         layout="auto", model="heuristic", **SHAPES
-    ).layout  # False pins the old shape-model behaviour
+    ).layout  # heuristic ignores observations entirely
+
+
+# ---------------------------------------------------------------------------
+# impl as a priced planning axis
+# ---------------------------------------------------------------------------
+
+
+def test_fused_rejected_for_query_routed():
+    with pytest.raises(ValueError, match="query_routed"):
+        SearchPlan(layout="query_routed", k=5, impl="fused")
+
+
+def test_heuristic_flips_fused_vs_xla_with_scan_size():
+    """``impl="auto"`` prices the fused fast path as one more planning
+    axis: a short sweep can't amortise the flat launch/merge overhead
+    (xla wins), a long sweep's per-wave carry traffic dominates (fused
+    wins) — at shapes no calibration record has ever seen."""
+    kw = dict(n_leaves=64, n_queries=256, n_shards=1, k=10,
+              calibration=CalibrationStore(), model="heuristic")
+    small = make_plan(layout="point_major", impl="auto", rows=8192, **kw)
+    assert small.impl == "xla"
+    big = make_plan(layout="point_major", impl="auto", rows=1_048_576, **kw)
+    assert big.impl == "fused"
+    # the codes scan flips on the same axis (rerank-deep carry per wave)
+    ckw = dict(kw, code_m=8, code_bits=8, dim=32)
+    csmall = make_plan(layout="scan_codes", impl="auto", rows=2048, **ckw)
+    assert csmall.impl == "xla"
+    cbig = make_plan(layout="scan_codes", impl="auto", rows=1_048_576, **ckw)
+    assert cbig.impl == "fused"
+
+
+def test_auto_layout_never_expands_fused_query_routed():
+    """``layout="auto", impl="auto"`` candidate sets: dense layouts get
+    xla+fused variants, query-routed stays xla-only (and an explicit
+    ``impl="fused"`` skips the routed candidate entirely)."""
+    kw = dict(SHAPES, calibration=CalibrationStore(), model="heuristic")
+    p = make_plan(layout="auto", impl="auto", **kw)
+    assert (p.layout, p.impl) != ("query_routed", "fused")
+    forced = make_plan(layout="auto", impl="fused", **kw)
+    assert forced.layout != "query_routed" and forced.impl == "fused"
+
+
+def test_fitted_prices_impl_curves_independently():
+    """FittedModel fits one curve per (layout, impl): fused measurements
+    never contaminate the xla curve, and an unmeasured impl is
+    unpriceable (the chain falls through rather than guessing)."""
+    store = CalibrationStore()
+    rows_grid = [SHAPES["rows"], SHAPES["rows"] * 4]
+    for rows in rows_grid:
+        xla = make_plan(layout="point_major", impl="xla",
+                        **dict(SHAPES, rows=rows))
+        fused = make_plan(layout="point_major", impl="fused",
+                          **dict(SHAPES, rows=rows))
+        store.record(xla, rows / 1000.0, _ctx(rows=rows))
+        store.record(fused, rows / 4000.0, _ctx(rows=rows))
+    fitted = FittedModel(store)
+    assert fitted.ready("point_major")
+    probe_rows = SHAPES["rows"] * 2
+    xla_p = make_plan(layout="point_major", impl="xla",
+                      **dict(SHAPES, rows=probe_rows))
+    fused_p = make_plan(layout="point_major", impl="fused",
+                        **dict(SHAPES, rows=probe_rows))
+    ctx = _ctx(rows=probe_rows)
+    assert fitted.predict_ms(fused_p, ctx) < fitted.predict_ms(xla_p, ctx)
+    # the pallas impl has no curve -> None, never an extrapolated guess
+    pallas_p = make_plan(layout="point_major", impl="pallas",
+                         **dict(SHAPES, rows=probe_rows))
+    assert fitted.predict_ms(pallas_p, ctx) is None
+
+
+# ---------------------------------------------------------------------------
+# calibration decay window + autotuned tile configs
+# ---------------------------------------------------------------------------
+
+STALE_AGE_S = (costmodel_lib.CALIBRATION_MAX_AGE_HALF_LIVES + 1) * \
+    costmodel_lib.CALIBRATION_HALF_LIFE_S
+
+
+def test_stale_records_age_out_of_consults_and_fits():
+    store = CalibrationStore()
+    pm, _ = _candidates()
+    store.record(pm, 10.0, shapes=_ctx(), ts=time.time() - STALE_AGE_S)
+    # stale: the exact-shape consult misses and the fit never sees it
+    assert store.mean_ms(pm, _ctx()) is None
+    assert store.fit_rows() == []
+    assert len(store) == 1  # the record itself is kept (reporting views)
+    # a fresh fold revives the record (timestamps are max-folded)
+    store.record(pm, 20.0, shapes=_ctx())
+    assert store.mean_ms(pm, _ctx()) == pytest.approx(15.0)
+    assert len(store.fit_rows()) == 1
+
+
+def test_fitted_ignores_stale_only_calibration():
+    store = CalibrationStore()
+    old = time.time() - STALE_AGE_S
+    for rows in (SHAPES["rows"], SHAPES["rows"] * 4):
+        pm, qr = _candidates(rows=rows)
+        store.record(pm, rows / 1000.0, _ctx(rows=rows), ts=old)
+        store.record(qr, rows / 1000.0, _ctx(rows=rows), ts=old)
+    assert not FittedModel(store).ready("point_major")
+
+
+def test_calibration_timestamps_roundtrip_and_legacy_loads_fresh():
+    store = CalibrationStore()
+    pm, _ = _candidates()
+    ts = time.time() - 3600.0
+    store.record(pm, 10.0, shapes=_ctx(), ts=ts)
+    payload = store.to_json()
+    restored = CalibrationStore.from_json(payload)
+    (_, stats, _), = restored.fit_rows()
+    assert stats["ts"] == pytest.approx(ts)
+    # a format-1 payload (no timestamps) loads as fresh: an undated
+    # measurement beats no calibration, and it ages out from here
+    legacy = {
+        "format": 1,
+        "records": [
+            {"signature": rec["signature"],
+             "stats": {k: v for k, v in rec["stats"].items() if k != "ts"},
+             "shapes": rec["shapes"]}
+            for rec in payload["records"]
+        ],
+    }
+    relived = CalibrationStore.from_json(legacy)
+    assert relived.mean_ms(pm, _ctx()) == pytest.approx(10.0)
+    assert len(relived.fit_rows()) == 1
+
+
+def test_tile_configs_record_consult_decay_and_roundtrip():
+    store = CalibrationStore()
+    store.mark_clean()
+    assert store.tile_config("point_major", 24, "float32") is None
+    store.record_tile_config("point_major", 24, "float32", 512, 3.5)
+    assert store.dirty  # tuned tiles alone are commit-worthy
+    cfg = store.tile_config("point_major", 24, "float32")
+    assert cfg["block_rows"] == 512 and cfg["ms"] == pytest.approx(3.5)
+    # stale tunings age out on the same window as measurements
+    store.record_tile_config("point_major", 24, "bfloat16", 2048, 1.0,
+                             ts=time.time() - STALE_AGE_S)
+    assert store.tile_config("point_major", 24, "bfloat16") is None
+    assert len(store.tile_configs()) == 2  # reporting view keeps both
+    restored = CalibrationStore.from_json(store.to_json())
+    rcfg = restored.tile_config("point_major", 24, "float32")
+    assert rcfg == cfg
+    # merge: newest tuning wins
+    newer = CalibrationStore()
+    newer.record_tile_config("point_major", 24, "float32", 1024, 2.0)
+    store.merge(newer)
+    assert store.tile_config("point_major", 24, "float32")["block_rows"] \
+        == 1024
+
+
+def test_plan_fused_candidate_honours_tuned_tile_config():
+    """A tuned block size steers the fused candidate's budget (snapped to
+    a shard-rows divisor); a caller-pinned ``block_rows`` wins over it."""
+    store = CalibrationStore()
+    kw = dict(SHAPES, calibration=store)
+    default_fused = make_plan(layout="point_major", impl="fused", **kw)
+    store.record_tile_config(
+        "point_major", 0, "float32", 512, 1.0
+    )
+    tuned = make_plan(layout="point_major", impl="fused", **kw)
+    assert tuned.block_rows == 512 != default_fused.block_rows
+    # non-divisor tunings snap down onto the shard grid
+    store.record_tile_config("point_major", 0, "float32", 3000, 1.0)
+    snapped = make_plan(layout="point_major", impl="fused", **kw)
+    assert SHAPES["rows"] % snapped.block_rows == 0
+    assert snapped.block_rows <= 3000
+    pinned = make_plan(layout="point_major", impl="fused",
+                       block_rows=2048, **kw)
+    assert pinned.block_rows == 2048
 
 
 # ---------------------------------------------------------------------------

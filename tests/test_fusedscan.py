@@ -1,0 +1,263 @@
+"""The fused whole-shard scan (kernels/fusedscan) and its executor wiring.
+
+Two parity contracts (docs/kernels.md):
+
+  * kernel vs oracle — the Pallas kernel (interpret=True off-TPU) against
+    the pure-jnp ref: **exact ids** always; dense distances ``allclose``
+    (XLA fuses ``pn - 2*dot`` into FMA form the kernel doesn't use), ADC
+    distances **bitwise** (same one-hot GEMM contraction order);
+  * executor vs executor — ``impl="fused"`` (the pipelined double-buffered
+    wave sweep off-TPU) is **bit-identical** to ``impl="xla"`` in ids and
+    dists, across layouts, probes, and shard counts.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.index_build import build_index
+from repro.core.tree import build_tree
+from repro.data import synth
+from repro.distributed.meshutil import local_mesh
+from repro.index import Index, ShardedIndex
+from repro.kernels.fusedscan.ops import fused_adc_topk, fused_topk
+
+# ---------------------------------------------------------------------------
+# kernel vs oracle (interpret-mode Pallas; small shapes — it's an eval loop)
+# ---------------------------------------------------------------------------
+
+
+def _dense_case(p, q, d, n_leaves, seed, dead_every=0):
+    kk = jax.random.split(jax.random.PRNGKey(seed), 4)
+    pts = jax.random.normal(kk[0], (p, d), jnp.float32)
+    qrs = jax.random.normal(kk[1], (q, d), jnp.float32)
+    plf = jax.random.randint(kk[2], (p,), 0, n_leaves)
+    qlf = jax.random.randint(kk[3], (q,), 0, n_leaves)
+    ids = jnp.arange(p, dtype=jnp.int32)
+    if dead_every:
+        ids = jnp.where(jnp.arange(p) % dead_every == 0, -1, ids)
+    return pts, plf, ids, qrs, qlf
+
+
+def _assert_dense_parity(ref, pal):
+    """Dense contract: exact ids, allclose finite dists (2e-4), matching
+    finite masks."""
+    d_ref, i_ref = map(np.array, ref)
+    d_pal, i_pal = map(np.array, pal)
+    np.testing.assert_array_equal(i_ref, i_pal)
+    finite = np.isfinite(d_ref)
+    np.testing.assert_array_equal(finite, np.isfinite(d_pal))
+    np.testing.assert_allclose(d_ref[finite], d_pal[finite],
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize(
+    "p,q,d,k,n_leaves,tp,tq",
+    [
+        (256, 96, 16, 4, 6, 128, 64),  # exact tile grid
+        (200, 70, 8, 8, 5, 128, 64),  # edge tiles on both axes
+        (130, 33, 24, 5, 4, 128, 32),  # one-row overhang
+        (64, 32, 8, 1, 2, 64, 32),  # k=1
+    ],
+)
+def test_fused_topk_matches_ref(p, q, d, k, n_leaves, tp, tq):
+    pts, plf, ids, qrs, qlf = _dense_case(p, q, d, n_leaves, seed=7,
+                                          dead_every=9)
+    ref = fused_topk(pts, plf, ids, qrs, qlf, k=k, impl="xla")
+    pal = fused_topk(pts, plf, ids, qrs, qlf, k=k, impl="pallas",
+                     tile_p=tp, tile_q=tq)
+    _assert_dense_parity(ref, pal)
+
+
+def test_fused_topk_duplicate_distances_stable_tiebreak():
+    """Duplicated point rows produce exact distance ties; the selection
+    contract (k smallest by (distance, shard row)) makes ids exact."""
+    pts, plf, ids, qrs, qlf = _dense_case(96, 48, 8, 3, seed=11)
+    pts = jnp.concatenate([pts, pts], axis=0)  # rows i and i+96 identical
+    plf = jnp.concatenate([plf, plf])
+    ids = jnp.arange(192, dtype=jnp.int32)
+    ref = fused_topk(pts, plf, ids, qrs, qlf, k=6, impl="xla")
+    pal = fused_topk(pts, plf, ids, qrs, qlf, k=6, impl="pallas",
+                     tile_p=64, tile_q=32)
+    _assert_dense_parity(ref, pal)
+    # on an exact tie the earlier shard row must win: every selected id in
+    # the duplicated half implies its twin (id - 96) was already taken
+    i_pal = np.array(pal[1])
+    for row in i_pal:
+        for j, sel in enumerate(row):
+            if sel >= 96:
+                assert sel - 96 in row[:j]
+
+
+def test_fused_topk_all_tombstoned_and_k_over_live():
+    pts, plf, ids, qrs, qlf = _dense_case(64, 16, 8, 2, seed=3)
+    dead = jnp.full_like(ids, -1)
+    for impl in ("xla", "pallas"):
+        d, i = fused_topk(pts, plf, dead, qrs, qlf, k=4, impl=impl)
+        assert bool((np.array(i) == -1).all())
+        assert bool(np.isinf(np.array(d)).all())
+    # k far above the live rows of any leaf: the tail pads -1/inf and the
+    # live prefix still matches the oracle exactly
+    ref = fused_topk(pts, plf, ids, qrs, qlf, k=48, impl="xla")
+    pal = fused_topk(pts, plf, ids, qrs, qlf, k=48, impl="pallas",
+                     tile_p=64, tile_q=16)
+    _assert_dense_parity(ref, pal)
+    live = np.array(pal[1]) >= 0
+    per_leaf = {lf: int((np.array(plf) == lf).sum())
+                for lf in np.unique(np.array(qlf))}
+    for qi, lf in enumerate(np.array(qlf)):
+        assert live[qi].sum() == min(48, per_leaf[int(lf)])
+
+
+@pytest.mark.parametrize("p,q,m,c,k", [(160, 48, 8, 16, 5), (64, 16, 4, 8, 3)])
+def test_fused_adc_topk_bitwise(p, q, m, c, k):
+    kk = jax.random.split(jax.random.PRNGKey(21), 4)
+    codes = jax.random.randint(kk[0], (p, m), 0, c).astype(jnp.uint8)
+    lut = jax.random.uniform(kk[1], (q, m, c), jnp.float32)
+    plf = jax.random.randint(kk[2], (p,), 0, 4)
+    qlf = jax.random.randint(kk[3], (q,), 0, 4)
+    ids = jnp.where(jnp.arange(p) % 7 == 0, -1, jnp.arange(p)).astype(
+        jnp.int32)
+    d_ref, i_ref = fused_adc_topk(codes, plf, ids, lut, qlf, k=k, impl="xla")
+    d_pal, i_pal = fused_adc_topk(codes, plf, ids, lut, qlf, k=k,
+                                  impl="pallas", tile_p=64, tile_q=16)
+    np.testing.assert_array_equal(np.array(i_ref), np.array(i_pal))
+    # ADC sums LUT lanes in the same order on both paths: bitwise equal
+    np.testing.assert_array_equal(np.array(d_ref), np.array(d_pal))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    p=st.integers(8, 96),
+    q=st.integers(4, 48),
+    k=st.sampled_from([1, 3, 5]),
+    n_leaves=st.integers(1, 8),
+    seed=st.integers(0, 2**30),
+)
+def test_fused_topk_property_sweep(p, q, k, n_leaves, seed):
+    pts, plf, ids, qrs, qlf = _dense_case(p, q, 8, n_leaves, seed=seed,
+                                          dead_every=5)
+    ref = fused_topk(pts, plf, ids, qrs, qlf, k=k, impl="xla")
+    pal = fused_topk(pts, plf, ids, qrs, qlf, k=k, impl="pallas",
+                     tile_p=64, tile_q=32)
+    _assert_dense_parity(ref, pal)
+
+
+# ---------------------------------------------------------------------------
+# executor vs executor: impl="fused" is bit-identical to impl="xla"
+# ---------------------------------------------------------------------------
+
+DIM = 24
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    vecs_np, _ = synth.sample_descriptors(3000, DIM, seed=0, n_centers=50)
+    tree = build_tree(jnp.asarray(vecs_np), (8, 4),
+                      key=jax.random.PRNGKey(1))
+    mesh = local_mesh()
+    q_np = np.array(vecs_np[:48]) + np.random.default_rng(2) \
+        .standard_normal((48, DIM)).astype(np.float32)
+    idx = Index.create(tree, None, mesh=mesh)
+    idx.append(vecs_np[:1200])
+    idx.append(vecs_np[1200:2100])
+    idx.append(vecs_np[2100:])
+    idx.enable_codes(m=8, bits=8, seed=0)
+    idx.commit()
+    return idx, q_np
+
+
+@pytest.mark.parametrize("probes", [1, 2])
+def test_fused_executor_bit_identical_dense(corpus, probes):
+    idx, q_np = corpus
+    ref = idx.search(q_np, k=5, probes=probes, layout="point_major",
+                     impl="xla")
+    got = idx.search(q_np, k=5, probes=probes, layout="point_major",
+                     impl="fused")
+    np.testing.assert_array_equal(np.asarray(got.ids), np.asarray(ref.ids))
+    np.testing.assert_array_equal(np.asarray(got.dists),
+                                  np.asarray(ref.dists))
+    for shards in (2, 3):
+        res = ShardedIndex(idx, n_shards=shards).search(
+            q_np, k=5, probes=probes, layout="point_major", impl="fused"
+        )
+        np.testing.assert_array_equal(np.asarray(res.ids),
+                                      np.asarray(ref.ids))
+        np.testing.assert_array_equal(np.asarray(res.dists),
+                                      np.asarray(ref.dists))
+
+
+@pytest.mark.parametrize("probes", [1, 2])
+def test_fused_executor_bit_identical_codes(corpus, probes):
+    idx, q_np = corpus
+    ref = idx.search(q_np, k=5, probes=probes, layout="scan_codes",
+                     impl="xla")
+    got = idx.search(q_np, k=5, probes=probes, layout="scan_codes",
+                     impl="fused")
+    np.testing.assert_array_equal(np.asarray(got.ids), np.asarray(ref.ids))
+    np.testing.assert_array_equal(np.asarray(got.dists),
+                                  np.asarray(ref.dists))
+    res = ShardedIndex(idx, n_shards=2).search(
+        q_np, k=5, probes=probes, layout="scan_codes", impl="fused"
+    )
+    np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(ref.ids))
+    np.testing.assert_array_equal(np.asarray(res.dists),
+                                  np.asarray(ref.dists))
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    probes=st.sampled_from([1, 2]),
+    shards=st.sampled_from([1, 2, 3]),
+    k=st.sampled_from([3, 7]),
+)
+def test_fused_bit_identity_property(corpus, probes, shards, k):
+    """Hypothesis sweep over (probes, shards, k): fused == xla bit-for-bit.
+    Shapes repeat across examples, so the executor cache keeps this
+    cheap (zero recompiles after the first hit per shape)."""
+    idx, q_np = corpus
+    kw = dict(k=k, probes=probes, layout="point_major")
+    if shards == 1:
+        ref = idx.search(q_np, impl="xla", **kw)
+        got = idx.search(q_np, impl="fused", **kw)
+    else:
+        sharded = ShardedIndex(idx, n_shards=shards)
+        ref = sharded.search(q_np, impl="xla", **kw)
+        got = sharded.search(q_np, impl="fused", **kw)
+    np.testing.assert_array_equal(np.asarray(got.ids), np.asarray(ref.ids))
+    np.testing.assert_array_equal(np.asarray(got.dists),
+                                  np.asarray(ref.dists))
+
+
+def test_forced_kernel_executor_paths(corpus, monkeypatch):
+    """REPRO_FUSED_FORCE_KERNEL=1 builds the whole-shard Pallas kernel
+    into the fused executor even off-TPU (interpret mode): dense results
+    keep exact ids with allclose dists, ADC stays bitwise."""
+    from repro.core.search import _cached_executor
+
+    idx, q_np = corpus
+    q = q_np[:16]  # interpret-mode kernel: keep the scan small
+    ref_d = idx.search(q, k=4, layout="point_major", impl="xla")
+    ref_c = idx.search(q, k=4, layout="scan_codes", impl="xla")
+    monkeypatch.setenv("REPRO_FUSED_FORCE_KERNEL", "1")
+    _cached_executor.cache_clear()  # executors bake the env choice in
+    try:
+        got_d = idx.search(q, k=4, layout="point_major", impl="fused")
+        np.testing.assert_array_equal(np.asarray(got_d.ids),
+                                      np.asarray(ref_d.ids))
+        np.testing.assert_allclose(np.asarray(got_d.dists),
+                                   np.asarray(ref_d.dists),
+                                   rtol=2e-4, atol=2e-4)
+        assert int(got_d.q_cap_overflow) == 0  # whole-shard: no slab cap
+        got_c = idx.search(q, k=4, layout="scan_codes", impl="fused")
+        np.testing.assert_array_equal(np.asarray(got_c.ids),
+                                      np.asarray(ref_c.ids))
+        np.testing.assert_array_equal(np.asarray(got_c.dists),
+                                      np.asarray(ref_c.dists))
+    finally:
+        _cached_executor.cache_clear()  # don't leak kernel executors

@@ -96,7 +96,7 @@ def test_plan_observations_registry():
     assert observations() == {}
 
 
-def test_plan_use_observations_preference_flip():
+def test_plan_observed_preference_flip():
     """The cost-model consult loop, on by default: measured ms/image under
     both candidate signatures overrides the heuristic's layout pick; with
     fewer than two measured candidates the heuristic still decides."""
@@ -114,11 +114,10 @@ def test_plan_use_observations_preference_flip():
     record_observation(loser, 1.0)
     flipped = make_plan(layout="auto", **shapes)
     assert flipped.layout == loser.layout  # both measured: data wins
-    # the deprecated spelling still works (maps to model="observed")
-    with pytest.deprecated_call():
-        assert make_plan(
-            layout="auto", use_observations=True, **shapes
-        ).layout == loser.layout
+    # the explicit spelling agrees with the default consult loop
+    assert make_plan(
+        layout="auto", model="observed", **shapes
+    ).layout == loser.layout
     # model="heuristic" pins the shape rules regardless of observations
     assert make_plan(
         layout="auto", model="heuristic", **shapes
